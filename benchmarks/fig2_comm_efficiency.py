@@ -1,0 +1,49 @@
+"""Paper Fig. 2: test accuracy vs cumulative uplink communication (MB)
+for IFL (proposed), FSL, FL-1, FL-2.
+
+Claim under test: IFL reaches ~90% at ~8.5 MB uplink while FSL is far
+lower at the same budget and FL variants cost orders of magnitude more.
+Prints CSV: scheme,round,uplink_mb,accuracy.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.paper_repro import run_scheme
+
+
+def run(rounds: int = 60, force: bool = False, quiet: bool = False):
+    rows = []
+    for scheme in ["ifl", "fsl", "fl1", "fl2"]:
+        out = run_scheme(scheme, rounds, eval_every=max(1, rounds // 40), force=force)
+        for rec in out["records"]:
+            rows.append((scheme, rec["round"], rec["uplink_mb"],
+                         rec["acc_mean"]))
+    if not quiet:
+        print("scheme,round,uplink_mb,accuracy")
+        for r in rows:
+            print(f"{r[0]},{r[1]},{r[2]:.3f},{r[3]:.4f}")
+    return rows
+
+
+def headline(rows):
+    """Accuracy of each scheme at IFL's 90%-crossing uplink budget."""
+    ifl = [(mb, a) for s, _, mb, a in rows if s == "ifl"]
+    budget = next((mb for mb, a in ifl if a >= 0.90), ifl[-1][0])
+    out = {}
+    for scheme in ["ifl", "fsl", "fl1", "fl2"]:
+        pts = [(mb, a) for s, _, mb, a in rows if s == scheme]
+        under = [a for mb, a in pts if mb <= budget]
+        out[scheme] = max(under) if under else pts[0][1]
+    return budget, out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    rows = run(args.rounds, args.force)
+    budget, hl = headline(rows)
+    print(f"# at IFL-90%% uplink budget {budget:.2f} MB: {hl}")

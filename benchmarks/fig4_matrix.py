@@ -1,0 +1,41 @@
+"""Paper Fig. 4: test-accuracy matrix over all (base block k, modular
+block i) combinations after training.
+
+Claim under test: cross-client compositions are comparable to (sometimes
+better than) local compositions — e.g. A1-B2 >= A1-A2 in the paper.
+Prints CSV rows of the 4x4 matrix.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.paper_repro import run_scheme
+
+NAMES = ["A", "B", "C", "D"]
+
+
+def run(rounds: int = 60, force: bool = False, quiet: bool = False):
+    out = run_scheme("ifl", rounds, eval_every=max(1, rounds // 40), force=force)
+    mat = np.array(out["records"][-1]["matrix"])
+    if not quiet:
+        print("base\\modular," + ",".join(f"{n}2" for n in NAMES))
+        for k in range(4):
+            print(f"{NAMES[k]}1," + ",".join(f"{mat[k, i]:.4f}"
+                                             for i in range(4)))
+    return mat
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    mat = run(args.rounds, args.force)
+    local = np.diag(mat)
+    cross = mat[~np.eye(4, dtype=bool)]
+    n_better = int((mat - local[:, None] >= -0.005).sum() - 4)
+    print(f"# local mean {local.mean():.3f}, cross mean {cross.mean():.3f}, "
+          f"{n_better}/12 cross combos within 0.5pt of (or above) local")

@@ -1,0 +1,49 @@
+"""Framework-scale communication comparison (the paper's Fig. 2 claim
+restated for the production mesh): per-round cross-client/pod traffic of
+the IFL round step vs the FL-equivalent dense DP step, from the dry-run
+collective measurements. Prints CSV:
+arch,mesh,ifl_coll_ms,dp_coll_ms,ifl_z_bytes,dp_grad_bytes,ratio.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def _load(tag):
+    p = os.path.join(DRYRUN, tag + ".json")
+    return json.load(open(p)) if os.path.exists(p) else None
+
+
+def run(quiet: bool = False):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN, "*__train_4k__*__ifl.json"))):
+        r = json.load(open(f))
+        if r.get("variant") not in (None, "baseline"):
+            continue
+        dp = _load(f"{r['arch']}__train_4k__{r['mesh']}__dp")
+        if dp is None:
+            continue
+        rows.append({
+            "arch": r["arch"],
+            "mesh": r["mesh"],
+            "ifl_coll_ms": r["roofline"]["collective_s"] * 1e3,
+            "dp_coll_ms": dp["roofline"]["collective_s"] * 1e3,
+            "ifl_coll_bytes": r["collectives"]["total"],
+            "dp_coll_bytes": dp["collectives"]["total"],
+        })
+    if not quiet:
+        print("arch,mesh,ifl_coll_ms,dp_coll_ms,ifl_bytes,dp_bytes")
+        for r in rows:
+            print(f"{r['arch']},{r['mesh']},{r['ifl_coll_ms']:.2f},"
+                  f"{r['dp_coll_ms']:.2f},{r['ifl_coll_bytes']:.3e},"
+                  f"{r['dp_coll_bytes']:.3e}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Kernel micro-benchmarks: wall-time of the jnp reference path on CPU
+(this container's only runtime) plus the analytic TPU roofline estimate
+for the Pallas kernel at production tiles. Prints CSV:
+name,us_per_call,derived (derived = achieved CPU GFLOP/s | TPU-bound us).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.roofline.analysis import HW
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(quiet: bool = False):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # fusion_proj at the paper-scale and LLM-scale shapes.
+    for (m, k, n) in [(1024, 432, 432), (4096, 4096, 2048)]:
+        x = jax.random.normal(key, (m, k), jnp.float32)
+        w = jax.random.normal(key, (k, n), jnp.float32) * 0.02
+        b = jnp.zeros((n,))
+        f = jax.jit(lambda x, w, b: ref.fusion_proj_ref(x, w, b, "silu"))
+        us = _time(f, x, w, b)
+        flops = 2 * m * k * n
+        tpu_us = max(flops / HW.peak_flops,
+                     (x.nbytes + w.nbytes + m * n * 4) / HW.hbm_bw) * 1e6
+        rows.append((f"fusion_proj_{m}x{k}x{n}", us,
+                     f"cpu {flops/us/1e3:.1f}GF/s | tpu-bound {tpu_us:.1f}us"))
+
+    # flash attention (ref path) at a serving-ish shape.
+    b_, h, s, hd = 1, 8, 1024, 128
+    q = jax.random.normal(key, (b_, h, s, hd))
+    k_ = jax.random.normal(key, (b_, h, s, hd))
+    v = jax.random.normal(key, (b_, h, s, hd))
+    f = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    us = _time(f, q, k_, v)
+    flops = 4 * b_ * h * s * s * hd
+    tpu_us = flops / HW.peak_flops * 1e6
+    rows.append((f"flash_attn_b{b_}h{h}s{s}", us,
+                 f"cpu {flops/us/1e3:.1f}GF/s | tpu-bound {tpu_us:.1f}us"))
+
+    # rmsnorm (memory-bound).
+    x = jax.random.normal(key, (8192, 4096))
+    sc = jnp.ones((4096,))
+    f = jax.jit(lambda x, s: ref.rmsnorm_ref(x, s))
+    us = _time(f, x, sc)
+    byts = 2 * x.nbytes
+    rows.append((f"rmsnorm_8192x4096", us,
+                 f"cpu {byts/us/1e3:.1f}GB/s | tpu-bound {byts/HW.hbm_bw*1e6:.1f}us"))
+
+    if not quiet:
+        print("name,us_per_call,derived")
+        for n, us, d in rows:
+            print(f"{n},{us:.1f},{d}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

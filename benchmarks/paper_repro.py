@@ -1,0 +1,132 @@
+"""Shared harness for the paper's §IV experiments (Figs 2-4, Table I).
+
+Trains IFL / FSL / FL-1 / FL-2 on the synthetic-KMNIST setup (N=4
+heterogeneous Table II clients, Dirichlet α=0.5, τ=10, B=32, SGD 0.01)
+and caches round-by-round metrics in results/paper/*.json so the figure
+benchmarks are reproducible and re-runnable incrementally.
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.config import IFLConfig
+from repro.core import Client, FLTrainer, FSLTrainer, IFLTrainer
+from repro.data import dirichlet_partition, make_synth_kmnist
+from repro.models.small import (
+    client_base_apply,
+    client_modular_apply,
+    init_client_model,
+)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "paper")
+
+
+def _apply_fns(cid: int):
+    return (
+        functools.partial(
+            lambda p, x, c: client_base_apply({"base": p}, c, x), c=cid),
+        functools.partial(
+            lambda p, z, c: client_modular_apply({"modular": p}, c, z), c=cid),
+    )
+
+
+def make_clients(tx, ty, *, heterogeneous: bool = True, arch: int = 1,
+                 alpha: float = 0.5, seed: int = 0) -> List[Client]:
+    shards = dirichlet_partition(ty, 4, alpha=alpha, seed=seed)
+    clients = []
+    for k in range(4):
+        cid = (k + 1) if heterogeneous else arch
+        base_fn, mod_fn = _apply_fns(cid)
+        clients.append(Client(
+            cid=cid,
+            params=init_client_model(jax.random.PRNGKey(100 + k), cid),
+            base_apply=base_fn, modular_apply=mod_fn,
+            data_x=tx[shards[k]], data_y=ty[shards[k]],
+        ))
+    return clients
+
+
+def run_scheme(scheme: str, rounds: int, *, eval_every: int = 5,
+               n_train: int = 20000, n_test: int = 4000,
+               tau: int = 10, seed: int = 0, lr: float = 0.05,
+               force: bool = False) -> Dict:
+    """NOTE on lr: the paper uses η=0.01 on real KMNIST. On the offline
+    synthetic stand-in, 0.01 undertrains badly within 200 rounds (58%
+    after 2000 base steps), so the default here is the calibrated 0.05 —
+    applied identically to every scheme, preserving the paper's
+    *comparative* claims (see EXPERIMENTS.md §Paper calibration note)."""
+    os.makedirs(RESULTS, exist_ok=True)
+    tag = f"{scheme}_r{rounds}_n{n_train}_tau{tau}_s{seed}"
+    if lr != 0.01:
+        tag += f"_lr{lr}"
+    path = os.path.join(RESULTS, tag + ".json")
+    if os.path.exists(path) and not force:
+        return json.load(open(path))
+
+    tx, ty, ex, ey = make_synth_kmnist(n_train, n_test)
+    cfg = IFLConfig(tau=tau, rounds=rounds, lr_base=lr, lr_modular=lr)
+    recs: List[Dict] = []
+
+    if scheme == "ifl":
+        tr = IFLTrainer(make_clients(tx, ty, seed=seed), cfg, seed=seed)
+        for r in range(rounds):
+            m = tr.run_round()
+            if r % eval_every == 0 or r == rounds - 1:
+                accs = tr.evaluate(ex, ey)
+                mat = tr.accuracy_matrix(ex[:2000], ey[:2000])
+                recs.append({
+                    "round": r,
+                    "uplink_mb": tr.ledger.uplink_mb,
+                    "total_mb": tr.ledger.total_mb,
+                    "acc_mean": float(np.mean(accs)),
+                    "accs": accs,
+                    "matrix": mat.tolist(),
+                    # Fig 3: per-base-block SD across modular compositions.
+                    "sd_per_base": np.std(mat * 100, axis=1).tolist(),
+                })
+    elif scheme == "fsl":
+        clients = make_clients(tx, ty, seed=seed)
+        server = init_client_model(jax.random.PRNGKey(999), 1)["modular"]
+        _, server_apply = _apply_fns(1)
+        tr = FSLTrainer(clients, cfg, server, server_apply, seed=seed)
+        for r in range(rounds):
+            tr.run_round()
+            if r % eval_every == 0 or r == rounds - 1:
+                accs = tr.evaluate(ex, ey)
+                recs.append({
+                    "round": r,
+                    "uplink_mb": tr.ledger.uplink_mb,
+                    "total_mb": tr.ledger.total_mb,
+                    "acc_mean": float(np.mean(accs)),
+                    "accs": accs,
+                })
+    elif scheme in ("fl1", "fl2"):
+        arch = 1 if scheme == "fl1" else 2
+        tr = FLTrainer(
+            make_clients(tx, ty, heterogeneous=False, arch=arch, seed=seed),
+            cfg, seed=seed,
+        )
+        for r in range(rounds):
+            tr.run_round()
+            if r % eval_every == 0 or r == rounds - 1:
+                acc = tr.evaluate(ex, ey)
+                recs.append({
+                    "round": r,
+                    "uplink_mb": tr.ledger.uplink_mb,
+                    "total_mb": tr.ledger.total_mb,
+                    "acc_mean": acc,
+                })
+    else:
+        raise ValueError(scheme)
+
+    out = {"scheme": scheme, "rounds": rounds, "tau": tau, "records": recs}
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return out

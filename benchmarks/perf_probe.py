@@ -1,0 +1,84 @@
+"""§Perf probe: bisect a dry-run combo's memory/collective terms by
+lowering controlled config variants and diffing the accounting.
+
+  PYTHONPATH=src python -m benchmarks.perf_probe --arch jamba-1.5-large-398b \
+      --shape train_4k --probe remat_layer ce_chunk no_fsdp tau1
+
+Each probe is one hypothesis about the dominant term; results print as a
+compact before/after table (and are saved as --variant runs, so
+gen_experiments picks them up).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# Must set device count before jax init — reuse dryrun's entry guard by
+# importing it first.
+sys.argv0_hack = None
+import repro.launch.dryrun as dr  # noqa: E402  (sets XLA_FLAGS)
+
+PROBES = {
+    "remat_layer": {"overrides": {"remat": "layer"}},
+    "remat_none": {"overrides": {"remat": "none"}},
+    "ce_chunk": {"overrides": {"ce_chunk": 512}},
+    "no_fsdp": {"fsdp": False},
+    "tau1": {"tau": 1},
+    "qblock_256": {"overrides": {"q_block": 256}},
+    "qblock_1024": {"overrides": {"q_block": 1024}},
+    "mlstm_chunk_128": {"overrides": {"mlstm_chunk": 128}},
+    "embed_dshard": {"env": {"REPRO_EMBED_SHARD": "dmodel"}},
+    "ce_chunk_embed": {"overrides": {"ce_chunk": 512},
+                       "env": {"REPRO_EMBED_SHARD": "dmodel"}},
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--step", default="ifl")
+    ap.add_argument("--probe", nargs="+", required=True,
+                    choices=list(PROBES))
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    base_path = os.path.join(
+        args.out, f"{args.arch}__{args.shape}__16x16__{args.step}.json")
+    base = json.load(open(base_path)) if os.path.exists(base_path) else None
+
+    rows = []
+    if base:
+        rows.append(("baseline", base))
+    for name in args.probe:
+        spec = PROBES[name]
+        for k, v in spec.get("env", {}).items():
+            os.environ[k] = v
+        try:
+            r = dr.run_one(
+                args.arch, args.shape, multi_pod=False, step_kind=args.step,
+                n_clients=4, tau=spec.get("tau", 2), variant=name,
+                out_dir=args.out, force=True,
+                overrides=spec.get("overrides"),
+                fsdp_override=spec.get("fsdp"),
+            )
+            rows.append((name, r))
+        finally:
+            for k in spec.get("env", {}):
+                os.environ.pop(k, None)
+
+    print(f"\n{'variant':16s} {'compute_s':>10s} {'memory_s':>10s} "
+          f"{'coll_s':>10s} {'temp_GB':>8s} {'coll_MB':>8s}")
+    for name, r in rows:
+        t = r["roofline"]
+        print(f"{name:16s} {t['compute_s']:10.3f} {t['memory_s']:10.3f} "
+              f"{t['collective_s']:10.3f} "
+              f"{(r['memory']['temp_bytes'] or 0)/1e9:8.1f} "
+              f"{r['collectives']['total']/1e6:8.0f}")
+
+
+if __name__ == "__main__":
+    main()

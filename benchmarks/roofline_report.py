@@ -1,0 +1,64 @@
+"""§Roofline report: aggregate results/dryrun/*.json into the per-(arch,
+shape, mesh) three-term table. Prints CSV:
+arch,shape,mesh,step,variant,compute_ms,memory_ms,collective_ms,dominant,
+model_gflops,useful_ratio,mfu_bound,temp_gb_per_chip
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_all(dirpath: str = DRYRUN) -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        try:
+            out.append(json.load(open(f)))
+        except Exception:
+            pass
+    return out
+
+
+def rows(results=None):
+    results = results if results is not None else load_all()
+    out = []
+    for r in results:
+        t = r["roofline"]
+        temp = (r["memory"].get("temp_bytes") or 0) / 1e9
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "step": r["step"], "variant": r.get("variant", "baseline"),
+            "compute_ms": t["compute_s"] * 1e3,
+            "memory_ms": t["memory_s"] * 1e3,
+            "collective_ms": t["collective_s"] * 1e3,
+            "dominant": t["dominant"],
+            "model_gflops": t.get("model_flops_total", 0) / 1e9,
+            "useful_ratio": t.get("useful_flops_ratio", 0.0),
+            "mfu_bound": t.get("mfu_bound", 0.0),
+            "temp_gb": temp,
+        })
+    return out
+
+
+def run(quiet: bool = False):
+    rs = rows()
+    if not quiet:
+        cols = ["arch", "shape", "mesh", "step", "variant", "compute_ms",
+                "memory_ms", "collective_ms", "dominant", "model_gflops",
+                "useful_ratio", "mfu_bound", "temp_gb"]
+        print(",".join(cols))
+        for r in rs:
+            print(",".join(
+                f"{r[c]:.3f}" if isinstance(r[c], float) else str(r[c])
+                for c in cols
+            ))
+    return rs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""Benchmark suite entry point — one benchmark per paper table/figure,
+plus the framework-scale roofline/communication reports.
+
+  PYTHONPATH=src python -m benchmarks.run [--rounds N] [--skip-training]
+
+Paper-experiment results are cached under results/paper/ (delete to
+re-run); roofline sections read results/dryrun/ (produced by
+repro.launch.dryrun).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _section(title):
+    print(f"\n### {title}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=40,
+                    help="communication rounds for the paper experiments "
+                         "(paper uses 200; 40 keeps CPU runtime modest)")
+    ap.add_argument("--skip-training", action="store_true",
+                    help="only run cached/static benchmarks")
+    args = ap.parse_args()
+    t0 = time.time()
+
+    _section("table1_comm_costs (paper Table I)")
+    from benchmarks import table1_comm_costs
+
+    table1_comm_costs.run()
+
+    _section("kernel_bench (Pallas kernel shapes, CPU ref timing)")
+    from benchmarks import kernel_bench
+
+    kernel_bench.run()
+
+    if not args.skip_training:
+        _section(f"fig2_comm_efficiency (paper Fig. 2, rounds={args.rounds})")
+        from benchmarks import fig2_comm_efficiency
+
+        rows = fig2_comm_efficiency.run(args.rounds)
+        budget, hl = fig2_comm_efficiency.headline(rows)
+        print(f"# at IFL-90% uplink budget {budget:.2f} MB: "
+              + ", ".join(f"{k}={v:.3f}" for k, v in hl.items()))
+
+        _section("fig3_heterogeneity (paper Fig. 3)")
+        from benchmarks import fig3_heterogeneity
+
+        r3 = fig3_heterogeneity.run(args.rounds)
+        print(f"# final SDs: {[f'{x:.2f}' for x in r3[-1][1:]]}")
+
+        _section("fig4_matrix (paper Fig. 4)")
+        from benchmarks import fig4_matrix
+
+        fig4_matrix.run(args.rounds)
+
+    _section("roofline_report (dry-run artifacts)")
+    from benchmarks import roofline_report
+
+    rr = roofline_report.run()
+    print(f"# {len(rr)} dry-run records")
+
+    _section("ifl_vs_dp_collectives (cross-boundary traffic)")
+    from benchmarks import ifl_vs_dp_collectives
+
+    ifl_vs_dp_collectives.run()
+
+    print(f"\n# benchmarks done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

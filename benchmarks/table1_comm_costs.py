@@ -1,0 +1,48 @@
+"""Paper Table I, quantified: per-round communication cost of each
+scheme at the paper's configuration (N=4, B=32, d_fusion=432), plus the
+feature matrix. Prints CSV: scheme,up_bytes,down_bytes,notes.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.config import IFLConfig
+from repro.core import fl_round_bytes, fsl_round_bytes, ifl_round_bytes
+from repro.models.small import init_client_model, model_bytes
+
+FEATURES = [
+    ("client params private", {"fl": 0, "fsl": 1, "ifl": 1}),
+    ("local e2e inference", {"fl": 1, "fsl": 0, "ifl": 1}),
+    ("lightweight uplink", {"fl": 0, "fsl": 1, "ifl": 1}),
+    ("multiple updates/round", {"fl": 1, "fsl": 0, "ifl": 1}),
+    ("full arch privacy", {"fl": 0, "fsl": 0, "ifl": 1}),
+    ("heterogeneous models", {"fl": 0, "fsl": 0, "ifl": 1}),
+    ("cross-client composition", {"fl": 0, "fsl": 0, "ifl": 1}),
+]
+
+
+def run(quiet: bool = False):
+    cfg = IFLConfig()
+    m1 = model_bytes(init_client_model(jax.random.PRNGKey(0), 1))
+    m2 = model_bytes(init_client_model(jax.random.PRNGKey(0), 2))
+    rows = [
+        ("ifl", ifl_round_bytes(4, cfg.batch_size, cfg.d_fusion),
+         f"tau={cfg.tau} local steps amortized per upload"),
+        ("fsl", fsl_round_bytes(4, cfg.batch_size, cfg.d_fusion),
+         "1 update per round"),
+        ("fl1", fl_round_bytes(4, m1), f"model={m1/1e6:.2f}MB (client 1)"),
+        ("fl2", fl_round_bytes(4, m2), f"model={m2/1e6:.2f}MB (client 2)"),
+    ]
+    if not quiet:
+        print("scheme,up_bytes_per_round,down_bytes_per_round,notes")
+        for name, b, note in rows:
+            print(f"{name},{b['up']},{b['down']},{note}")
+        print("\nfeature," + ",".join(["fl", "fsl", "ifl"]))
+        for feat, v in FEATURES:
+            print(f"{feat},{v['fl']},{v['fsl']},{v['ifl']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""End-to-end driver (deliverable b): IFL-train a ~100M-param LM for a
+few hundred rounds on CPU.
+
+Four clients share one architecture (olmo-1b family at ~100M reduced
+scale: 8 layers, d_model 512) with private weights and private synthetic
+dialects; every round is the SAME jitted ifl_round_step the 256-chip
+dry-run lowers. Loss on both blocks falls; cumulative uplink is reported
+against what FedAvg would have cost.
+
+  PYTHONPATH=src python examples/llm_ifl_train.py [--rounds 200]
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import modules as nn
+from repro.train.loop import train_ifl_lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=40,
+                    help="one round = tau+1 base/fusion steps + 4 modular steps per client; 40 rounds ≈ 15-20 min on one CPU core; scale up freely on real hardware")
+    ap.add_argument("--tau", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    # ~100M-param member of the olmo family.
+    cfg = get_config("olmo-1b").replace(
+        name="olmo-100m",
+        num_layers=8, d_model=512, num_heads=8, num_kv_heads=8,
+        d_ff=2048, vocab_size=16384, d_fusion=512,
+        base_pattern=get_config("olmo-1b").base_pattern, base_groups=4,
+        mod_pattern=get_config("olmo-1b").mod_pattern, mod_groups=4,
+        compute_dtype="float32", remat="none", q_block=128,
+    ).validate()
+    from repro.models.transformer import init_lm
+
+    n_params = nn.param_count(init_lm(jax.random.PRNGKey(0), cfg))
+    print(f"== IFL LM training: {cfg.name}, {n_params/1e6:.1f}M params, "
+          f"{args.rounds} rounds x (tau={args.tau} base steps + fusion "
+          f"exchange + 4 modular steps) ==")
+
+    out = train_ifl_lm(
+        cfg, rounds=args.rounds, n_clients=4, tau=args.tau,
+        batch=args.batch, seq=args.seq, lr_base=0.05, lr_modular=0.05,
+        log_every=max(1, args.rounds // 20),
+    )
+    h = out["history"]
+    print(f"\nbase loss {h[0]['base_loss']:.3f} -> {h[-1]['base_loss']:.3f}; "
+          f"modular loss {h[0]['mod_loss']:.3f} -> {h[-1]['mod_loss']:.3f}")
+    fedavg_round_mb = 2 * 4 * n_params * 4 / 1e6  # up+down, fp32
+    print(f"uplink total {out['ledger'].uplink_mb:.1f} MB over "
+          f"{len(h)} rounds; FedAvg would ship "
+          f"{fedavg_round_mb * len(h):.0f} MB "
+          f"({fedavg_round_mb * len(h) / max(out['ledger'].uplink_mb, 1e-9):.0f}x more)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Quickstart: one IFL communication round, end to end, in ~a minute.
+
+Four vendors with the paper's Table II architectures collaboratively
+train on non-IID synthetic KMNIST while exchanging ONLY fusion-layer
+outputs, then compose each other's modular blocks at inference.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.config import IFLConfig
+from repro.core import Client, IFLTrainer, ifl_round_bytes
+from repro.data import dirichlet_partition, make_synth_kmnist
+from repro.models.small import (
+    client_base_apply,
+    client_modular_apply,
+    init_client_model,
+)
+
+
+def main():
+    print("== IFL quickstart: 4 heterogeneous vendors, synthetic KMNIST ==")
+    tx, ty, ex, ey = make_synth_kmnist(6000, 1500)
+    cfg = IFLConfig(tau=10, batch_size=32, lr_base=0.05, lr_modular=0.05)
+    shards = dirichlet_partition(ty, cfg.n_clients, alpha=0.5, seed=0)
+
+    clients = []
+    for k in range(cfg.n_clients):
+        cid = k + 1
+        clients.append(Client(
+            cid=cid,
+            params=init_client_model(jax.random.PRNGKey(cid), cid),
+            base_apply=functools.partial(
+                lambda p, x, c: client_base_apply({"base": p}, c, x), c=cid),
+            modular_apply=functools.partial(
+                lambda p, z, c: client_modular_apply({"modular": p}, c, z),
+                c=cid),
+            data_x=tx[shards[k]], data_y=ty[shards[k]],
+        ))
+        print(f"  vendor {cid}: {len(shards[k])} non-IID samples, "
+              f"private architecture #{cid}")
+
+    trainer = IFLTrainer(clients, cfg, seed=0)
+    for r in range(20):
+        m = trainer.run_round()
+        if r % 5 == 0 or r == 19:
+            accs = trainer.evaluate(ex, ey)
+            print(f"round {r:3d}: base_loss {m['base_loss']:.3f}, "
+                  f"uplink {m['uplink_mb']:.2f} MB, "
+                  f"accs {[f'{a:.2f}' for a in accs]}")
+
+    print("\ncross-vendor composition matrix (eq. 11):")
+    mat = trainer.accuracy_matrix(ex[:1000], ey[:1000])
+    print(np.round(mat, 3))
+    exp = ifl_round_bytes(cfg.n_clients, cfg.batch_size, cfg.d_fusion)
+    got = trainer.ledger.per_round[0]
+    print(f"\nper-round bytes measured {got} == analytic {exp}: "
+          f"{got['up'] == exp['up'] and got['down'] == exp['down']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Flattened-pytree .npz checkpointing with a JSON manifest.
+
+No orbax in this environment; keys are '/'-joined tree paths so the
+format is stable, diffable, and partially loadable (e.g. restore only
+the modular block for composition experiments).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            # npz has no bf16 codec; widen losslessly to fp32 (restore
+            # casts back via the template dtype).
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path: str, tree, *, step: Optional[int] = None,
+                    extra: Optional[Dict[str, Any]] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    manifest = {
+        "step": step,
+        "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                 for k, v in flat.items()},
+        "extra": extra or {},
+    }
+    mpath = (path[:-4] if path.endswith(".npz") else path) + ".json"
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_checkpoint(path: str, template) -> Any:
+    """Restore into the structure of ``template`` (shape/dtype-checked)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat = dict(npz)
+
+    def restore(p, leaf):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        arr = flat[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        return arr.astype(leaf.dtype)
+
+    return jax.tree_util.tree_map_with_path(restore, template)

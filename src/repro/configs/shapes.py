@@ -1,0 +1,118 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape × step kind).
+
+Nothing here allocates: decode caches and params come from
+``jax.eval_shape`` over the real constructors, so the dry-run lowers the
+exact structures the runtime would use.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.models.transformer import init_decode_cache, init_lm
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def enc_frames_for(cfg: ModelConfig, seq: int) -> int:
+    """Stub audio frontend: ~4 tokens of speech per text token budget,
+    capped so encoder self-attention stays lowerable."""
+    return min(max(cfg.enc_seq_len, 1), max(seq // 4, 64))
+
+
+def _modal_extras(cfg: ModelConfig, lead, seq, compute_dtype) -> Dict[str, Any]:
+    ex: Dict[str, Any] = {}
+    if cfg.num_image_tokens:
+        ex["image_embeds"] = _sds(
+            (*lead, cfg.num_image_tokens, cfg.d_model), compute_dtype
+        )
+    if cfg.is_encdec:
+        ex["frame_embeds"] = _sds(
+            (*lead, enc_frames_for(cfg, seq), cfg.d_model), compute_dtype
+        )
+    return ex
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                      n_clients: int = 0, tau: int = 2) -> Dict[str, Any]:
+    """IFL round batch (n_clients > 0): leaves (N, tau+1, B/N, ...).
+    Plain DP batch (n_clients == 0): leaves (B, ...)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, S = shape.global_batch, shape.seq_len
+    if n_clients:
+        assert B % n_clients == 0, (B, n_clients)
+        lead = (n_clients, tau + 1, B // n_clients)
+    else:
+        lead = (B,)
+    batch = {"tokens": _sds((*lead, S), jnp.int32)}
+    batch.update(_modal_extras(cfg, lead, S, cdt))
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    batch.update(_modal_extras(cfg, (B,), S, cdt))
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """serve_step inputs: one new token + a cache of length seq_len (plus
+    precomputed encoder cross-K/V for enc-dec archs)."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        functools.partial(init_decode_cache, cfg, B, S)
+    )
+    out = {
+        "cache": cache,
+        "token": _sds((B, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+        "cross_kvs": None,
+    }
+    if cfg.is_encdec:
+        from repro.models.transformer import build_cross_caches
+
+        def build():
+            params = init_lm(jax.random.PRNGKey(0), cfg)
+            enc_out = jnp.zeros(
+                (B, enc_frames_for(cfg, S), cfg.d_model),
+                jnp.dtype(cfg.compute_dtype),
+            )
+            return build_cross_caches(params, cfg, enc_out)
+
+        out["cross_kvs"] = jax.eval_shape(build)
+    return out
+
+
+def param_specs(cfg: ModelConfig, *, n_clients: int = 0):
+    """eval_shape of the real initializer (stacked over clients if IFL)."""
+
+    def build():
+        p = init_lm(jax.random.PRNGKey(0), cfg)
+        return jax.tree.map(
+            lambda a: a.astype(jnp.dtype(cfg.param_dtype)), p
+        )
+
+    if n_clients:
+        def build_stacked():
+            return jax.vmap(lambda k: init_lm(k, cfg))(
+                jax.random.split(jax.random.PRNGKey(0), n_clients)
+            )
+
+        p = jax.eval_shape(build_stacked)
+        return jax.tree.map(
+            lambda s: _sds(s.shape, jnp.dtype(cfg.param_dtype)), p
+        )
+    return jax.eval_shape(build)
+
+
+def shape_by_name(name: str) -> ShapeConfig:
+    return INPUT_SHAPES[name]

@@ -1,0 +1,20 @@
+"""The paper's contribution: Interoperable Federated Learning (IFL).
+
+Submodules:
+  comm        — communication ledgers + analytic per-round byte formulas
+  ifl         — the two-stage IFL algorithm (eager, heterogeneous clients)
+  ifl_spmd    — IFL as a single SPMD train_step on the production mesh
+  fl          — FedAvg baseline (paper's FL-1/FL-2)
+  fsl         — federated split learning baseline
+  composition — cross-client modular composition + accuracy matrix
+"""
+
+from repro.core.comm import (  # noqa: F401
+    CommLedger,
+    ifl_round_bytes,
+    fl_round_bytes,
+    fsl_round_bytes,
+)
+from repro.core.ifl import Client, IFLTrainer, composition_accuracy  # noqa: F401
+from repro.core.fl import FLTrainer  # noqa: F401
+from repro.core.fsl import FSLTrainer  # noqa: F401

@@ -1,0 +1,89 @@
+"""Communication accounting for FL / FSL / IFL.
+
+Analytic per-round byte formulas (paper §IV measures cumulative MB on the
+x-axis of Fig. 2) plus a ledger that trainers feed with the *actual* array
+sizes they transmit, so the benchmark never drifts from the
+implementation. Only bytes that cross the client boundary count —
+client-local compute is free, exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+
+def nbytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(tree))
+
+
+@dataclass
+class CommLedger:
+    """Cumulative uplink/downlink bytes, per client and total."""
+
+    uplink: int = 0
+    downlink: int = 0
+    per_round: List[Dict[str, int]] = field(default_factory=list)
+    _round_up: int = 0
+    _round_down: int = 0
+
+    def send_up(self, tree):
+        b = nbytes(tree)
+        self.uplink += b
+        self._round_up += b
+
+    def send_down(self, tree):
+        b = nbytes(tree)
+        self.downlink += b
+        self._round_down += b
+
+    def end_round(self):
+        self.per_round.append(
+            {"up": self._round_up, "down": self._round_down}
+        )
+        self._round_up = 0
+        self._round_down = 0
+
+    @property
+    def total(self) -> int:
+        return self.uplink + self.downlink
+
+    @property
+    def uplink_mb(self) -> float:
+        return self.uplink / 1e6
+
+    @property
+    def total_mb(self) -> float:
+        return self.total / 1e6
+
+
+# ------------------------------------------------------------ analytic
+
+
+def ifl_round_bytes(n_clients: int, batch: int, d_fusion: int,
+                    label_bytes: int = 4, act_bytes: int = 4) -> Dict[str, int]:
+    """One IFL round: each client uploads (z_k, y_k); server broadcasts
+    (Z, Y) to all clients. Eq.-level match to Algorithm 1 lines 13-21."""
+    z = batch * d_fusion * act_bytes
+    y = batch * label_bytes
+    up = n_clients * (z + y)
+    down = n_clients * n_clients * (z + y)  # each client receives all N
+    return {"up": up, "down": down}
+
+
+def fl_round_bytes(n_clients: int, model_bytes: int) -> Dict[str, int]:
+    """FedAvg: full model up per client, global model down per client."""
+    return {"up": n_clients * model_bytes, "down": n_clients * model_bytes}
+
+
+def fsl_round_bytes(n_clients: int, batch: int, cut_dim: int,
+                    label_bytes: int = 4, act_bytes: int = 4) -> Dict[str, int]:
+    """FSL: cut activations + labels up; activation gradients down.
+    One client-side update per round (the paper's FSL limitation)."""
+    h = batch * cut_dim * act_bytes
+    y = batch * label_bytes
+    return {"up": n_clients * (h + y), "down": n_clients * h}

@@ -1,0 +1,85 @@
+"""FedAvg baseline (paper's FL-1 / FL-2 variants).
+
+All clients must share one architecture (the FL limitation the paper
+highlights): FL-1 deploys client 1's smallest model everywhere, FL-2
+client 2's larger one. Per round: τ local SGD steps on the full model,
+full-model upload, weighted FedAvg (eq. 4), full-model download.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import IFLConfig
+from repro.core.comm import CommLedger
+from repro.core.ifl import Client, softmax_xent
+
+
+class FLTrainer:
+    """FedAvg over homogeneous clients (arch cloned from ``template_cid``)."""
+
+    def __init__(self, clients: Sequence[Client], cfg: IFLConfig,
+                 seed: int = 0):
+        self.clients = list(clients)
+        self.cfg = cfg
+        self.ledger = CommLedger()
+        self.rng = np.random.default_rng(seed)
+        c0 = self.clients[0]
+        self._step = jax.jit(
+            functools.partial(self._step_impl, c0.base_apply,
+                              c0.modular_apply, c0.loss_fn)
+        )
+        # Global model: start from client 0's params.
+        self.global_params = jax.tree.map(jnp.copy, c0.params)
+
+    @staticmethod
+    def _step_impl(base_apply, modular_apply, loss_fn, params, x, y, lr):
+        def loss_of(p):
+            return loss_fn(modular_apply(p["modular"], base_apply(p["base"], x)), y)
+
+        loss, g = jax.value_and_grad(loss_of)(params)
+        return jax.tree.map(lambda p, gg: p - lr * gg, params, g), loss
+
+    def run_round(self) -> Dict[str, float]:
+        cfg = self.cfg
+        d_total = sum(c.num_samples for c in self.clients)
+        locals_, losses = [], []
+        for c in self.clients:
+            # server -> client: global model download.
+            self.ledger.send_down(self.global_params)
+            p = self.global_params
+            for _ in range(cfg.tau):
+                idx = self.rng.integers(0, c.num_samples, cfg.batch_size)
+                x = jnp.asarray(c.data_x[idx])
+                y = jnp.asarray(c.data_y[idx])
+                p, loss = self._step(p, x, y, cfg.lr_base)
+            locals_.append((c.num_samples / d_total, p))
+            losses.append(float(loss))
+            # client -> server: full model upload.
+            self.ledger.send_up(p)
+        # FedAvg (eq. 4).
+        self.global_params = jax.tree.map(
+            lambda *xs: sum(w * x for (w, _), x in zip(locals_, xs)),
+            *[p for _, p in locals_],
+        )
+        self.ledger.end_round()
+        return {"loss": float(np.mean(losses)),
+                "uplink_mb": self.ledger.uplink_mb}
+
+    def evaluate(self, test_x, test_y, batch: int = 512) -> float:
+        c0 = self.clients[0]
+        correct, total = 0, 0
+        fwd = jax.jit(lambda p, x: c0.modular_apply(
+            p["modular"], c0.base_apply(p["base"], x)))
+        for s in range(0, len(test_y), batch):
+            logits = np.asarray(fwd(self.global_params,
+                                    jnp.asarray(test_x[s:s + batch])))
+            y = np.asarray(test_y[s:s + batch])
+            correct += int((logits.argmax(-1) == y).sum())
+            total += len(y)
+        return correct / max(total, 1)

@@ -1,0 +1,123 @@
+"""Federated Split Learning baseline (after [9] / SplitFed).
+
+Clients keep a personalized client-side block up to the cut layer (same
+432-dim cut as IFL for a like-for-like comparison); the *server* owns the
+single shared server-side model. Per communication round each client
+performs ONE update (the FSL limitation the paper contrasts with IFL's τ
+local steps):
+
+  client k: minibatch -> h_k = f_c(x_k)      (upload h_k + labels)
+  server  : ŷ = f_s(h_k), loss, backward     (keeps θ_s, averages grads)
+  server  : sends ∂loss/∂h_k back            (download)
+  client k: backprops into its client-side block.
+
+Server-side grads are averaged across clients each round (SplitFed-style).
+Inference REQUIRES the server (no local end-to-end path) — Table I row 2.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import IFLConfig
+from repro.core.comm import CommLedger
+from repro.core.ifl import Client
+
+
+class FSLTrainer:
+    def __init__(self, clients: Sequence[Client], cfg: IFLConfig,
+                 server_params: Any, server_apply, seed: int = 0):
+        self.clients = list(clients)
+        self.cfg = cfg
+        self.ledger = CommLedger()
+        self.rng = np.random.default_rng(seed)
+        self.server_params = server_params
+        self.server_apply = server_apply
+        self._client_fwd = {
+            c.cid: jax.jit(c.base_apply) for c in self.clients
+        }
+        self._client_bwd = {}
+        for c in self.clients:
+            self._client_bwd[c.cid] = jax.jit(
+                functools.partial(self._client_bwd_impl, c.base_apply)
+            )
+        self._server_step = jax.jit(self._server_step_impl)
+
+    # ---------------------------------------------------------- pieces
+
+    def _server_step_impl(self, server_params, h, y, lr):
+        """Returns (server grads applied later, dL/dh, loss)."""
+
+        def loss_of(sp, hh):
+            logits = self.server_apply(sp, hh)
+            lp = jax.nn.log_softmax(logits, axis=-1)
+            return -jnp.mean(jnp.take_along_axis(lp, y[:, None], axis=-1))
+
+        loss, (gs, gh) = jax.value_and_grad(loss_of, argnums=(0, 1))(
+            server_params, h
+        )
+        return gs, gh, loss
+
+    @staticmethod
+    def _client_bwd_impl(base_apply, base_params, x, gh, lr):
+        """VJP of the client-side block with the server-sent activation grad."""
+        _, vjp = jax.vjp(lambda bp: base_apply(bp, x), base_params)
+        (g,) = vjp(gh)
+        return jax.tree.map(lambda p, gg: p - lr * gg, base_params, g)
+
+    # ---------------------------------------------------------- round
+
+    def run_round(self) -> Dict[str, float]:
+        cfg = self.cfg
+        losses = []
+        server_grads = []
+        for c in self.clients:
+            idx = self.rng.integers(0, c.num_samples, cfg.batch_size)
+            x = jnp.asarray(c.data_x[idx])
+            y = jnp.asarray(c.data_y[idx])
+            h = self._client_fwd[c.cid](c.params["base"], x)
+            self.ledger.send_up((h, y))  # cut activations + labels up
+            gs, gh, loss = self._server_step(self.server_params, h, y,
+                                             cfg.lr_modular)
+            self.ledger.send_down(gh)  # activation gradients down
+            c.params = {
+                "base": self._client_bwd[c.cid](c.params["base"], x, gh,
+                                                cfg.lr_base),
+                "modular": c.params["modular"],
+            }
+            server_grads.append(gs)
+            losses.append(float(loss))
+        # Average server-side grads across clients, single server update.
+        n = len(self.clients)
+        avg = jax.tree.map(lambda *gs_: sum(gs_) / n, *server_grads)
+        self.server_params = jax.tree.map(
+            lambda p, g: p - cfg.lr_modular * g, self.server_params, avg
+        )
+        self.ledger.end_round()
+        return {"loss": float(np.mean(losses)),
+                "uplink_mb": self.ledger.uplink_mb}
+
+    # ---------------------------------------------------------- eval
+
+    def evaluate(self, test_x, test_y, batch: int = 512):
+        """Server-dependent inference (FSL has no local e2e path)."""
+        accs = []
+        for c in self.clients:
+            correct, total = 0, 0
+            f = jax.jit(lambda bp, sp, x, c=c: self.server_apply(
+                sp, c.base_apply(bp, x)))
+            for s in range(0, len(test_y), batch):
+                logits = np.asarray(
+                    f(c.params["base"], self.server_params,
+                      jnp.asarray(test_x[s:s + batch]))
+                )
+                y = np.asarray(test_y[s:s + batch])
+                correct += int((logits.argmax(-1) == y).sum())
+                total += len(y)
+            accs.append(correct / max(total, 1))
+        return accs

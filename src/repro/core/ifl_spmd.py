@@ -1,0 +1,229 @@
+"""IFL as a single SPMD program on the production mesh.
+
+One jitted ``ifl_round_step`` = one communication round of Algorithm 1,
+on a derived mesh ('client', 'data', 'model'):
+
+  - Every param leaf carries a stacked leading (N,) client dim sharded on
+    'client' — heterogeneous *weights* per client by construction (one
+    SPMD program implies one architecture; see DESIGN.md §2).
+  - Phase 1 (eq. 7): ``lax.scan`` over τ local minibatches; per-client
+    grads wrt base only (vmap over the client dim). Gradient all-reduces
+    stay INSIDE a client's ('data','model') subgroup.
+  - Phase 2 (alg. lines 13-21): fusion outputs z (N, Bc, S, d_fusion) are
+    re-constrained from P('client','data',...) to P(None,'data',...,'model')
+    — ONE all-gather along 'client'. That collective IS the paper's
+    upload+concat+broadcast, and the only traffic crossing the client
+    boundary (= the only inter-pod traffic when clients align with pods).
+  - Phase 3 (alg. lines 22-31): scan over the N gathered chunks (z_i, y_i),
+    each a sequential SGD step on the modular block — the pseudocode's
+    per-i update order, which also microbatches the N× modular compute.
+
+``dp_train_step`` is the FL-equivalent dense baseline (same model, plain
+data-parallel step; its grad all-reduce crosses all boundaries) used for
+the communication-efficiency comparison. ``prefill_step``/``serve_step``
+cover the inference shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.models import modules as nn
+from repro.models.transformer import (
+    base_forward,
+    init_decode_cache,
+    init_lm,
+    lm_apply,
+    lm_decode_step,
+    lm_loss,
+    modular_forward,
+)
+from repro.optim import make_optimizer
+
+
+# ------------------------------------------------------------------ losses
+
+
+def _modular_loss(mod, cfg: ModelConfig, z, tokens):
+    start = cfg.num_image_tokens
+    if cfg.ce_chunk:
+        from repro.models.transformer import chunked_ce, modular_trunk, mtp_hidden
+
+        h, aux, positions = modular_trunk(mod, cfg, z)
+        loss = chunked_ce(mod, cfg, h, tokens, offset=1, start=start)
+        if cfg.use_mtp:
+            h2 = mtp_hidden(mod, cfg, h, positions)
+            loss = loss + 0.3 * chunked_ce(mod, cfg, h2, tokens,
+                                           offset=2, start=start)
+        return loss + aux
+    out = modular_forward(mod, cfg, z)
+    if cfg.use_mtp:
+        logits, aux, mtp_logits = out
+    else:
+        logits, aux = out
+        mtp_logits = None
+    lp = jax.nn.log_softmax(logits[:, start:-1], axis=-1)
+    tgt = tokens[:, start + 1 :]
+    loss = -jnp.mean(jnp.take_along_axis(lp, tgt[..., None], axis=-1))
+    if mtp_logits is not None:
+        lp2 = jax.nn.log_softmax(mtp_logits[:, start:-2], axis=-1)
+        loss = loss + 0.3 * -jnp.mean(
+            jnp.take_along_axis(lp2, tokens[:, start + 2 :][..., None], axis=-1)
+        )
+    return loss + aux
+
+
+def _full_loss_wrt_base(base, mod, cfg: ModelConfig, batch):
+    z, aux_b = base_forward(base, cfg, batch)
+    return _modular_loss(mod, cfg, z, batch["tokens"]) + aux_b
+
+
+# ------------------------------------------------------------------ round
+
+
+def make_ifl_round_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    *,
+    n_clients: int,
+    tau: int,
+    lr_base: float = 1e-3,
+    lr_modular: float = 1e-3,
+    optimizer: str = "sgd",
+) -> Callable:
+    """Build the jittable one-round IFL step for stacked-client params.
+
+    batch leaves: (N, tau+1, Bc, ...) — τ base minibatches + 1 fusion
+    minibatch per client. params leaves: (N, ...).
+    """
+    opt = make_optimizer(optimizer)
+
+    def repl(spec_tail):
+        return NamedSharding(mesh, P(*spec_tail))
+
+    def round_step(params, opt_state, batch):
+        base_p, mod_p = params["base"], params["modular"]
+
+        # ---------------- Phase 1: τ local base-block updates (eq. 7).
+        def tau_batch(i_slice):
+            return jax.tree.map(lambda a: a[:, i_slice], batch)
+
+        base_batches = jax.tree.map(
+            lambda a: jnp.moveaxis(a[:, :tau], 1, 0), batch
+        )  # (tau, N, Bc, ...)
+
+        def base_step(carry, mb):
+            bp, ost = carry
+
+            def one_client(bp_k, mod_k, mb_k):
+                loss, g = jax.value_and_grad(_full_loss_wrt_base)(
+                    bp_k, mod_k, cfg, mb_k
+                )
+                return loss, g
+
+            losses, grads = jax.vmap(one_client)(bp, mod_p, mb)
+            new_bp, new_ost = jax.vmap(
+                lambda p, g, s: opt.update(p, g, s, lr_base)
+            )(bp, grads, ost)
+            return (new_bp, new_ost), jnp.mean(losses)
+
+        (base_p, ost_b), base_losses = jax.lax.scan(
+            base_step, (base_p, opt_state["base"]), base_batches
+        )
+
+        # ---------------- Phase 2: fusion exchange (lines 13-21).
+        fusion_mb = jax.tree.map(lambda a: a[:, tau], batch)  # (N, Bc, ...)
+        z, _ = jax.vmap(lambda bp_k, mb_k: base_forward(bp_k, cfg, mb_k))(
+            base_p, fusion_mb
+        )  # (N, Bc, S, d_fusion), sharded P('client','data',...)
+        # THE IFL collective: all-gather along 'client' = upload+concat+
+        # broadcast. d_fusion stays 'model'-sharded to keep the gathered
+        # copy small per device.
+        zg = jax.lax.with_sharding_constraint(
+            z, repl((None, "data", None, "model"))
+        )
+        yg = jax.lax.with_sharding_constraint(
+            fusion_mb["tokens"], repl((None, "data", None))
+        )
+
+        # ---------------- Phase 3: modular updates (lines 22-31).
+        def mod_step(carry, zi_yi):
+            mp, ost = carry
+            z_i, y_i = zi_yi  # (Bc, S, dF) replicated over 'client'
+
+            def one_client(mp_k):
+                return jax.value_and_grad(_modular_loss)(mp_k, cfg, z_i, y_i)
+
+            losses, grads = jax.vmap(one_client)(mp)
+            new_mp, new_ost = jax.vmap(
+                lambda p, g, s: opt.update(p, g, s, lr_modular)
+            )(mp, grads, ost)
+            return (new_mp, new_ost), jnp.mean(losses)
+
+        (mod_p, ost_m), mod_losses = jax.lax.scan(
+            mod_step, (params["modular"], opt_state["modular"]), (zg, yg)
+        )
+
+        new_params = {"base": base_p, "modular": mod_p}
+        new_opt = {"base": ost_b, "modular": ost_m}
+        metrics = {
+            "base_loss": jnp.mean(base_losses),
+            "mod_loss": jnp.mean(mod_losses),
+        }
+        return new_params, new_opt, metrics
+
+    return round_step
+
+
+def init_ifl_state(key, cfg: ModelConfig, *, n_clients: int,
+                   optimizer: str = "sgd"):
+    """Stacked-client params + per-block optimizer state."""
+    opt = make_optimizer(optimizer)
+    keys = jax.random.split(key, n_clients)
+    params = jax.vmap(lambda k: init_lm(k, cfg))(keys)
+    pdt = nn.dtype_of(cfg.param_dtype)
+    params = jax.tree.map(lambda a: a.astype(pdt), params)
+    opt_state = {
+        "base": opt.init(params["base"]),
+        "modular": opt.init(params["modular"]),
+    }
+    return params, opt_state
+
+
+# ------------------------------------------------------------------ dense
+
+
+def make_dp_train_step(cfg: ModelConfig, *, lr: float = 1e-3,
+                       optimizer: str = "sgd") -> Callable:
+    """FL-equivalent plain data-parallel step (grad sync ∝ |params|)."""
+    opt = make_optimizer(optimizer)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, batch)
+        )(params)
+        new_params, new_opt = opt.update(params, grads, opt_state, lr)
+        return new_params, new_opt, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        logits, aux, _ = lm_apply(params, cfg, batch)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, cache, token, pos, cross_kvs=None):
+        return lm_decode_step(params, cfg, cache, token, pos, cross_kvs)
+
+    return serve_step

@@ -1,0 +1,3 @@
+from repro.data.images import make_synth_kmnist  # noqa: F401
+from repro.data.dirichlet import dirichlet_partition  # noqa: F401
+from repro.data.synthetic import SyntheticLM, lm_batches  # noqa: F401

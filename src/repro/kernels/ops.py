@@ -1,0 +1,91 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Each op dispatches: Pallas kernel on TPU (or when ``interpret=True`` for
+CPU validation), pure-jnp oracle otherwise — so the same model code runs
+everywhere and tests can assert kernel == oracle. Wrappers also handle
+layout adaptation (padding to tile multiples, GQA head expansion,
+flattening leading dims).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fusion_proj import fusion_proj_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(x, max_block: int):
+    """Pad rows so they tile evenly; returns (padded, block, n_orig)."""
+    m = x.shape[0]
+    if m >= max_block:
+        block = max_block
+    else:
+        block = -(-m // 8) * 8  # round up to sublane multiple
+    r = m % block
+    if r:
+        x = jnp.pad(x, ((0, block - r), (0, 0)))
+    return x, block, m
+
+
+@functools.partial(jax.jit, static_argnames=("act", "use_kernel", "interpret"))
+def fusion_proj(x, w, b=None, act: str = "none", *, use_kernel: bool = True,
+                interpret: bool = False):
+    """y = act(x @ w + b); x: (..., K), w: (K, N)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if use_kernel and (interpret or _on_tpu()):
+        xp, bm, m = _pad_rows(x2, 256)
+        y = fusion_proj_pallas(xp, w, b, act, bm=bm, interpret=interpret)
+        y = y[:m]
+    else:
+        y = ref.fusion_proj_ref(x2, w, b, act)
+    return y.reshape(*lead, w.shape[-1])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "use_kernel", "interpret"),
+)
+def flash_attention(q, k, v, *, causal: bool = True, window: int = -1,
+                    use_kernel: bool = True, interpret: bool = False):
+    """q: (B, H, S, hd); k, v: (B, KVH, S, hd) with H % KVH == 0."""
+    B, H, S, hd = q.shape
+    kvh = k.shape[1]
+    if kvh != H:  # GQA: expand kv heads to match
+        g = H // kvh
+        k = jnp.repeat(k, g, axis=1)
+        v = jnp.repeat(v, g, axis=1)
+    if use_kernel and (interpret or _on_tpu()):
+        qf = q.reshape(B * H, S, hd)
+        out = flash_attention_pallas(
+            qf, k.reshape(B * H, S, hd), v.reshape(B * H, S, hd),
+            causal=causal, window=window,
+            bq=min(256, S), bk=min(256, S), interpret=interpret,
+        )
+        return out.reshape(B, H, S, hd)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def rmsnorm(x, scale, *, use_kernel: bool = True, interpret: bool = False):
+    """x: (..., D)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if use_kernel and (interpret or _on_tpu()):
+        xp, br, m = _pad_rows(x2, 256)
+        y = rmsnorm_pallas(xp, scale, block_rows=br, interpret=interpret)
+        y = y[:m]
+    else:
+        y = ref.rmsnorm_ref(x2, scale)
+    return y.reshape(*lead, x.shape[-1])

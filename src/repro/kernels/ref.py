@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def fusion_proj_ref(x: jnp.ndarray, w: jnp.ndarray,
+                    b: Optional[jnp.ndarray] = None,
+                    act: str = "none") -> jnp.ndarray:
+    """Fusion-layer projection: y = act(x @ w + b). x: (M, K), w: (K, N)."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    if act == "relu":
+        y = jax.nn.relu(y)
+    elif act == "silu":
+        y = jax.nn.silu(y)
+    elif act != "none":
+        raise ValueError(act)
+    return y.astype(x.dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True, window: int = -1,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """Plain softmax attention. q,k,v: (B, H, S, hd)."""
+    B, H, S, hd = q.shape
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= ki <= qi
+    if window > 0:
+        mask &= ki > qi - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray,
+                eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,340 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# backend init, and the production meshes below need 512 host stand-ins.
+# Only this entrypoint gets them — tests/benches see the real 1 device.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (arch × input-shape × mesh) combination:
+  jit(step).lower(*ShapeDtypeStructs).compile()
+on the single-pod (16, 16) and multi-pod (2, 16, 16) production meshes,
+recording memory_analysis / cost_analysis / per-collective link bytes
+into results/dryrun/*.json — the §Dry-run and §Roofline tables are
+generated from these files.
+
+Step kinds per shape:
+  train_4k     -> ifl_round_step (the paper's technique; --step dp for the
+                  FL-equivalent dense baseline comparison)
+  prefill_32k  -> prefill_step
+  decode_32k / long_500k -> serve_step (1 token vs seq_len cache)
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--step ifl|dp]
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import INPUT_SHAPES, ModelConfig
+from repro.configs import ARCH_IDS, get_config, supports_shape
+from repro.configs.shapes import (
+    decode_specs,
+    param_specs,
+    prefill_batch_specs,
+    train_batch_specs,
+)
+from repro.core.ifl_spmd import (
+    make_dp_train_step,
+    make_ifl_round_step,
+    make_prefill_step,
+    make_serve_step,
+)
+from repro.launch.mesh import data_axes_of, derive_ifl_mesh, make_production_mesh
+from repro.roofline.analysis import (
+    collective_bytes_from_hlo,
+    model_flops,
+    roofline_terms,
+)
+from repro.roofline.hlo_accounting import analyze_hlo
+from repro.sharding.rules import (
+    batch_pspec,
+    cache_pspecs,
+    param_pspecs,
+    tree_shardings,
+)
+
+FSDP_THRESHOLD = 20e9  # params above this get ZeRO-3-style 'data' sharding
+
+
+def _params_count(tree) -> float:
+    import numpy as np
+
+    return float(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+
+def _block_params(cfg: ModelConfig):
+    p = param_specs(cfg)
+    return _params_count(p["base"]), _params_count(p["modular"])
+
+
+def _active_params(cfg: ModelConfig, p_base: float, p_mod: float):
+    """MoE: count only top-k + shared experts as active."""
+    if not cfg.num_experts:
+        return p_base, p_mod
+    specs = cfg.layer_specs()
+    dff = cfg.moe_d_ff or cfg.d_ff
+    per_expert = 3 * cfg.d_model * dff
+    cut = cfg.fusion_cut_layer
+    dead_b = dead_m = 0.0
+    active_frac = (cfg.num_experts_per_tok / cfg.num_experts)
+    for i, s in enumerate(specs):
+        if s.ffn == "moe":
+            dead = cfg.num_experts * per_expert * (1 - active_frac)
+            if i < cut:
+                dead_b += dead
+            else:
+                dead_m += dead
+    return p_base - dead_b, p_mod - dead_m
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
+            n_clients: int, tau: int, variant: str, out_dir: str,
+            force: bool = False, cfg_override=None, overrides=None,
+            fsdp_override=None):
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}__{step_kind}"
+    if variant:
+        tag += f"__{variant}"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(out_path) and not force:
+        print(f"[skip existing] {tag}")
+        return json.load(open(out_path))
+
+    shape = INPUT_SHAPES[shape_name]
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides).validate()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    fsdp = _params_count(param_specs(cfg)) > FSDP_THRESHOLD
+    if fsdp_override is not None:
+        fsdp = fsdp_override
+
+    t0 = time.time()
+    if shape.kind == "train" and step_kind == "ifl":
+        ifl_mesh = derive_ifl_mesh(mesh, n_clients)
+        step = make_ifl_round_step(
+            cfg, ifl_mesh, n_clients=n_clients, tau=tau
+        )
+        params = param_specs(cfg, n_clients=n_clients)
+        opt_state = {"base": {}, "modular": {}}  # SGD: stateless
+        batch = train_batch_specs(cfg, shape, n_clients=n_clients, tau=tau)
+        pspecs = param_pspecs(params, fsdp=fsdp, client_axis=True)
+        in_sh = (
+            tree_shardings(ifl_mesh, pspecs, params),
+            {"base": {}, "modular": {}},
+            tree_shardings(ifl_mesh, batch_pspec(batch, client_axis=True),
+                           batch),
+        )
+        with ifl_mesh:
+            lowered = jax.jit(step, in_shardings=in_sh).lower(
+                params, opt_state, batch
+            )
+    elif shape.kind == "train":  # dp baseline
+        step = make_dp_train_step(cfg)
+        params = param_specs(cfg)
+        opt_state = {}
+        batch = train_batch_specs(cfg, shape, n_clients=0)
+        da = data_axes_of(mesh)
+        pspecs = param_pspecs(params, fsdp=fsdp)
+        in_sh = (
+            tree_shardings(mesh, pspecs, params),
+            {},
+            tree_shardings(mesh, batch_pspec(batch, data_axes=da), batch),
+        )
+        with mesh:
+            lowered = jax.jit(step, in_shardings=in_sh).lower(
+                params, opt_state, batch
+            )
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        params = param_specs(cfg)
+        batch = prefill_batch_specs(cfg, shape)
+        da = data_axes_of(mesh)
+        in_sh = (
+            tree_shardings(mesh, param_pspecs(params, fsdp=fsdp), params),
+            tree_shardings(mesh, batch_pspec(batch, data_axes=da), batch),
+        )
+        with mesh:
+            lowered = jax.jit(step, in_shardings=in_sh).lower(params, batch)
+    else:  # decode
+        step = make_serve_step(cfg)
+        params = param_specs(cfg)
+        dec = decode_specs(cfg, shape)
+        da = data_axes_of(mesh)
+        seq_shard = shape.global_batch < 8  # context-parallel for batch~1
+        cache_sh = tree_shardings(
+            mesh, cache_pspecs(dec["cache"], seq_shard=seq_shard),
+            dec["cache"],
+        )
+        tok_spec = P(da) if shape.global_batch >= 8 else P(None)
+        cross_sh = None
+        if dec.get("cross_kvs") is not None:
+            cross_sh = tree_shardings(
+                mesh, cache_pspecs(dec["cross_kvs"]), dec["cross_kvs"]
+            )
+        in_sh = (
+            tree_shardings(mesh, param_pspecs(params, fsdp=fsdp), params),
+            cache_sh,
+            NamedSharding(mesh, P(*tok_spec, None)),
+            NamedSharding(mesh, P()),
+            cross_sh,
+        )
+        with mesh:
+            lowered = jax.jit(step, in_shardings=in_sh).lower(
+                params, dec["cache"], dec["token"], dec["pos"],
+                dec["cross_kvs"],
+            )
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost_raw = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    # Trip-count-aware accounting: XLA cost_analysis counts while (scan)
+    # bodies once, which undercounts every layer stack here. See
+    # repro/roofline/hlo_accounting.py.
+    acc = analyze_hlo(hlo_text)
+    cost = {"flops": acc["flops"], "bytes accessed": acc["hbm_bytes"]}
+    coll = acc["collectives"]
+
+    # Useful-FLOPs accounting.
+    p_base, p_mod = _block_params(cfg)
+    a_base, a_mod = _active_params(cfg, p_base, p_mod)
+    tokens = shape.global_batch * (
+        shape.seq_len if shape.kind != "decode" else 1
+    )
+    mf_kind = {
+        "train": "ifl_round" if step_kind == "ifl" else "dp_train",
+        "prefill": "prefill",
+        "decode": "decode",
+    }[shape.kind]
+    mf = model_flops(
+        mf_kind, params_base=a_base, params_mod=a_mod, tokens=tokens,
+        tau=tau, n_clients=n_clients,
+    )
+    terms = roofline_terms(cost, coll["total"], n_chips,
+                           model_flops_total=mf)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "step": step_kind if shape.kind == "train" else shape.kind,
+        "variant": variant or "baseline",
+        "n_chips": n_chips,
+        "fsdp": fsdp,
+        "tau": tau if shape.kind == "train" and step_kind == "ifl" else None,
+        "n_clients": n_clients if step_kind == "ifl" else None,
+        "memory": {
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {k: float(v) for k, v in (cost or {}).items()
+                 if isinstance(v, (int, float))},
+        "cost_raw_xla": {k: float(v) for k, v in (cost_raw or {}).items()
+                         if isinstance(v, (int, float))},
+        "n_while": acc["n_while"],
+        "collectives": coll,
+        "roofline": terms,
+        "timing": {"lower_s": t_lower, "compile_s": t_compile},
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    dom = terms["dominant"]
+    print(
+        f"[ok] {tag}: compile {t_compile:.1f}s, "
+        f"compute {terms['compute_s']*1e3:.2f}ms / "
+        f"memory {terms['memory_s']*1e3:.2f}ms / "
+        f"collective {terms['collective_s']*1e3:.2f}ms -> {dom}-bound, "
+        f"peak {(result['memory']['peak_bytes'] or 0)/1e9:.2f}GB/chip"
+    )
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--step", choices=["ifl", "dp"], default="ifl")
+    ap.add_argument("--n-clients", type=int, default=4)
+    ap.add_argument("--tau", type=int, default=2,
+                    help="local base steps lowered per round (paper: 10; "
+                         "2 keeps dry-run HLO small, τ is a scan)")
+    ap.add_argument("--variant", default="",
+                    help="perf-iteration tag for §Perf experiments")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config overrides for perf variants, e.g. "
+                         "--set remat=layer --set ce_chunk=1024")
+    ap.add_argument("--fsdp", choices=["on", "off", "auto"], default="auto")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            pass
+        overrides[k] = v
+    fsdp_override = {"on": True, "off": False, "auto": None}[args.fsdp]
+
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                if supports_shape(a, s):
+                    combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = []
+    for arch, shape in combos:
+        for mp in meshes:
+            try:
+                run_one(arch, shape, multi_pod=mp, step_kind=args.step,
+                        n_clients=args.n_clients, tau=args.tau,
+                        variant=args.variant, out_dir=args.out,
+                        force=args.force, overrides=overrides,
+                        fsdp_override=fsdp_override)
+            except Exception as e:  # noqa: BLE001
+                failures.append((arch, shape, mp, repr(e)))
+                print(f"[FAIL] {arch} {shape} multi_pod={mp}: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall dry-runs OK")
+
+
+if __name__ == "__main__":
+    main()

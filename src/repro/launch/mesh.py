@@ -1,0 +1,42 @@
+"""Production meshes.
+
+Functions, not module-level constants: importing this module never
+touches jax device state (jax locks the device count on first backend
+init, and only dryrun.py is allowed to force 512 host devices).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def derive_ifl_mesh(mesh: Mesh, n_clients: int) -> Mesh:
+    """Reshape a production mesh into ('client', 'data', 'model').
+
+    Clients tile the (pod ×) data axes contiguously, so in the multi-pod
+    mesh a client never straddles a pod *unless* n_clients < n_pods; with
+    n_clients a multiple of n_pods (default 4 clients / 2 pods), the only
+    inter-pod collective left in an IFL round is the fusion all-gather —
+    the paper's communication-efficiency claim restated for ICI/DCN.
+    """
+    devs = mesh.devices
+    model = devs.shape[-1]
+    flat = devs.reshape(-1, model)  # (pod*data, model), pod-major
+    total_dp = flat.shape[0]
+    assert total_dp % n_clients == 0, (total_dp, n_clients)
+    grid = flat.reshape(n_clients, total_dp // n_clients, model)
+    return Mesh(grid, ("client", "data", "model"))
+
+
+def data_axes_of(mesh: Mesh):
+    """The axes a plain (non-IFL) step shards its batch over."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

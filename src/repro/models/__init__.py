@@ -1,0 +1,9 @@
+"""Pure-JAX model substrate: param-tree init fns + pure apply fns."""
+
+from repro.models.transformer import (  # noqa: F401
+    init_lm,
+    lm_apply,
+    lm_loss,
+    init_decode_cache,
+    lm_decode_step,
+)

@@ -1,0 +1,417 @@
+"""Attention: GQA (optionally windowed / NoPE / biased), MLA, cross-attn.
+
+Full-sequence attention is *blocked*: a ``lax.scan`` over query blocks with
+an fp32 online numerically-safe softmax per block. This keeps the largest
+live buffer at ``(B, KVH, G, q_block, kv_len)`` instead of materializing
+``(B, H, S, S)`` — mandatory for the 32k prefill shapes. Sliding-window
+layers additionally ``dynamic_slice`` the KV sequence to ``window +
+q_block`` per query block, so their HLO FLOPs are linear in sequence
+length, not quadratic (this is what makes gemma3/llama4 long-context
+shapes lowerable).
+
+Decode uses ring-buffer KV caches for windowed layers (O(window) memory)
+and flat caches for global layers; MLA decode uses the absorbed-latent
+form so the cache is the compressed ``(kv_lora + rope)`` stream.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LayerSpec, ModelConfig
+from repro.models import modules as nn
+from repro.models.rope import apply_mrope, apply_rope
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# =========================================================================
+# Parameter init
+# =========================================================================
+
+
+def init_attn(key, cfg: ModelConfig, spec: LayerSpec):
+    if cfg.use_mla:
+        return _init_mla(key, cfg)
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kvh = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": nn.init_linear(ks[0], d, h * hd, bias=cfg.qkv_bias),
+        "wk": nn.init_linear(ks[1], d, kvh * hd, bias=cfg.qkv_bias),
+        "wv": nn.init_linear(ks[2], d, kvh * hd, bias=cfg.qkv_bias),
+        "wo": nn.init_linear(ks[3], h * hd, d),
+    }
+    if getattr(cfg, "use_qk_norm", False):
+        p["q_norm"] = nn.init_norm(ks[4], hd, "rmsnorm")
+        p["k_norm"] = nn.init_norm(ks[5], hd, "rmsnorm")
+    return p
+
+
+def init_cross_attn(key, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h = cfg.num_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": nn.init_linear(ks[0], d, h * hd),
+        "wk": nn.init_linear(ks[1], d, h * hd),
+        "wv": nn.init_linear(ks[2], d, h * hd),
+        "wo": nn.init_linear(ks[3], h * hd, d),
+    }
+
+
+def _init_mla(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.num_heads
+    qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    p = {}
+    if cfg.q_lora_rank > 0:
+        p["wq_a"] = nn.init_linear(ks[0], d, cfg.q_lora_rank)
+        p["q_a_norm"] = nn.init_norm(ks[1], cfg.q_lora_rank, "rmsnorm")
+        p["wq_b"] = nn.init_linear(ks[2], cfg.q_lora_rank, h * qk)
+    else:
+        p["wq"] = nn.init_linear(ks[2], d, h * qk)
+    p["wkv_a"] = nn.init_linear(ks[3], d, cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+    p["kv_a_norm"] = nn.init_norm(ks[4], cfg.kv_lora_rank, "rmsnorm")
+    p["wkv_b"] = nn.init_linear(
+        ks[5], cfg.kv_lora_rank, h * (cfg.qk_nope_head_dim + cfg.v_head_dim)
+    )
+    p["wo"] = nn.init_linear(ks[6], h * cfg.v_head_dim, d)
+    return p
+
+
+# =========================================================================
+# Blocked causal attention core
+# =========================================================================
+
+
+def _gqa_block(q, k, v, q_idx, k_idx, *, window: int, scale: float):
+    """One query block vs a KV span, fp32 softmax.
+
+    q: (B, qb, KVH, G, hd)   k, v: (B, L, KVH, hd)
+    q_idx: (qb,) global token indices of the query rows
+    k_idx: (L,) global token indices of the KV rows
+    """
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32) * scale
+    mask = k_idx[None, :] <= q_idx[:, None]
+    if window > 0:
+        mask &= k_idx[None, :] > q_idx[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - jax.lax.stop_gradient(m))
+    p = p / (jnp.sum(p, axis=-1, keepdims=True) + 1e-30)
+    return jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+
+
+def _pallas_eligible(q, k, v, scale) -> bool:
+    """Dispatch to the Pallas flash kernel on TPU when tiles align
+    (256-divisible seq, MXU-friendly head dim, default scaling, matching
+    q/k/v head dims). CPU keeps the pure-jnp path the tests oracle."""
+    B, S, H, hd = q.shape
+    return (
+        jax.default_backend() == "tpu"
+        and scale is None
+        and S % 256 == 0
+        and hd in (64, 128, 256)
+        and v.shape[-1] == hd
+    )
+
+
+def blocked_attention(
+    q: jnp.ndarray,  # (B, S, H, hd)
+    k: jnp.ndarray,  # (B, S, KVH, hd)
+    v: jnp.ndarray,  # (B, S, KVH, hd)
+    *,
+    window: int = -1,
+    q_block: int = 512,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Causal (optionally sliding-window) attention over a full sequence."""
+    B, S, H, hd = q.shape
+    kvh = k.shape[2]
+    g = H // kvh
+    if _pallas_eligible(q, k, v, scale):
+        from repro.kernels import ops as kops
+
+        out = kops.flash_attention(
+            q.transpose(0, 2, 1, 3),
+            k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3),
+            causal=True,
+            window=window,
+        )
+        return out.transpose(0, 2, 1, 3)
+    scale = scale if scale is not None else 1.0 / math.sqrt(q.shape[-1])
+    qb = min(q_block, S)
+    n_blocks = S // qb
+    assert n_blocks * qb == S, f"seq {S} not divisible by q_block {qb}"
+    qr = q.reshape(B, n_blocks, qb, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    if window > 0:
+        L = min(S, window + qb)
+
+        def body(_, inp):
+            qi, blk = inp
+            q_start = qi * qb
+            start = jnp.clip(q_start + qb - L, 0, S - L)
+            ks_ = jax.lax.dynamic_slice_in_dim(k, start, L, axis=1)
+            vs_ = jax.lax.dynamic_slice_in_dim(v, start, L, axis=1)
+            q_idx = q_start + jnp.arange(qb)
+            k_idx = start + jnp.arange(L)
+            o = _gqa_block(blk, ks_, vs_, q_idx, k_idx, window=window, scale=scale)
+            return None, o
+
+        _, out = jax.lax.scan(body, None, (jnp.arange(n_blocks), qr))
+    else:
+
+        def body(_, inp):
+            qi, blk = inp
+            q_idx = qi * qb + jnp.arange(qb)
+            k_idx = jnp.arange(S)
+            o = _gqa_block(blk, k, v, q_idx, k_idx, window=-1, scale=scale)
+            return None, o
+
+        _, out = jax.lax.scan(body, None, (jnp.arange(n_blocks), qr))
+
+    # v may carry a different head dim than q/k (MLA), hence the -1.
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, -1)
+
+
+# =========================================================================
+# GQA self-attention (train / prefill)
+# =========================================================================
+
+
+def _project_qkv(p, cfg: ModelConfig, spec: LayerSpec, x, positions):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = nn.linear(p["wq"], x).reshape(B, S, cfg.num_heads, hd)
+    k = nn.linear(p["wk"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    v = nn.linear(p["wv"], x).reshape(B, S, cfg.num_kv_heads, hd)
+    if "q_norm" in p:
+        q = nn.apply_norm(p["q_norm"], q, "rmsnorm")
+        k = nn.apply_norm(p["k_norm"], k, "rmsnorm")
+    if spec.use_rope and cfg.rope_type != "none":
+        if cfg.rope_type == "mrope":
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(p, cfg: ModelConfig, spec: LayerSpec, x, positions):
+    """Full-sequence causal self-attention. x: (B, S, d)."""
+    if cfg.use_mla:
+        return _mla_forward(p, cfg, x, positions)
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, spec, x, positions)
+    out = blocked_attention(
+        q, k, v, window=spec.window, q_block=cfg.q_block
+    )
+    return nn.linear(p["wo"], out.reshape(B, S, -1))
+
+
+# =========================================================================
+# Decode (single token, KV cache)
+# =========================================================================
+
+
+def init_attn_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                    cache_len: int, dtype) -> dict:
+    """Zeroed cache. Windowed layers get a ring buffer of len window."""
+    if cfg.use_mla:
+        return {
+            "ckv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((batch, cache_len, cfg.qk_rope_head_dim), dtype),
+        }
+    L = min(cache_len, spec.window) if spec.window > 0 else cache_len
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, L, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, L, cfg.num_kv_heads, hd), dtype),
+        "slot_pos": jnp.full((L,), -1, jnp.int32),
+    }
+
+
+def attn_decode(p, cfg: ModelConfig, spec: LayerSpec, x, cache, pos,
+                positions=None):
+    """x: (B, 1, d); pos: scalar int32 current index. Returns (y, cache)."""
+    if cfg.use_mla:
+        return _mla_decode(p, cfg, x, cache, pos)
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    if positions is None:
+        positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    q, k, v = _project_qkv(p, cfg, spec, x, positions)
+    L = cache["k"].shape[1]
+    slot = jnp.where(spec.window > 0, pos % L, jnp.minimum(pos, L - 1))
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    spos = cache["slot_pos"].at[slot].set(pos)
+    scale = 1.0 / math.sqrt(hd)
+    g = cfg.num_heads // cfg.num_kv_heads
+    qh = q.reshape(B, 1, cfg.num_kv_heads, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qh, ck).astype(jnp.float32) * scale
+    valid = (spos >= 0) & (spos <= pos)
+    if spec.window > 0:
+        valid &= spos > pos - spec.window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", pattn.astype(cv.dtype), cv)
+    y = nn.linear(p["wo"], o.reshape(B, 1, -1))
+    return y, {"k": ck, "v": cv, "slot_pos": spos}
+
+
+# =========================================================================
+# MLA (DeepSeek-V3) [arXiv:2412.19437]
+# =========================================================================
+
+
+def _mla_q(p, cfg: ModelConfig, x):
+    B, S, _ = x.shape
+    qk = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    if "wq_a" in p:
+        ql = nn.apply_norm(p["q_a_norm"], nn.linear(p["wq_a"], x), "rmsnorm")
+        q = nn.linear(p["wq_b"], ql)
+    else:
+        q = nn.linear(p["wq"], x)
+    q = q.reshape(B, S, cfg.num_heads, qk)
+    return q[..., : cfg.qk_nope_head_dim], q[..., cfg.qk_nope_head_dim :]
+
+
+def _mla_latent(p, cfg: ModelConfig, x, positions):
+    kv = nn.linear(p["wkv_a"], x)
+    ckv = nn.apply_norm(p["kv_a_norm"], kv[..., : cfg.kv_lora_rank], "rmsnorm")
+    krope = kv[..., cfg.kv_lora_rank :][:, :, None, :]  # (B,S,1,rope_dim)
+    krope = apply_rope(krope, positions, cfg.rope_theta)[:, :, 0]
+    return ckv.astype(x.dtype), krope.astype(x.dtype)
+
+
+def _mla_forward(p, cfg: ModelConfig, x, positions):
+    """Expanded (non-absorbed) MLA for train/prefill."""
+    B, S, _ = x.shape
+    h = cfg.num_heads
+    qn, qr = _mla_q(p, cfg, x)
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    ckv, krope = _mla_latent(p, cfg, x, positions)
+    kvb = nn.linear(p["wkv_b"], ckv).reshape(
+        B, S, h, cfg.qk_nope_head_dim + cfg.v_head_dim
+    )
+    kn = kvb[..., : cfg.qk_nope_head_dim]
+    v = kvb[..., cfg.qk_nope_head_dim :]
+    q = jnp.concatenate([qn, qr], axis=-1)
+    k = jnp.concatenate(
+        [kn, jnp.broadcast_to(krope[:, :, None], (B, S, h, cfg.qk_rope_head_dim))],
+        axis=-1,
+    )
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    # Pad v to match q/k head_dim is unnecessary: blocked_attention only
+    # assumes hd consistency between q and k; v carries its own dim.
+    out = blocked_attention(q, k, v, q_block=cfg.q_block, scale=scale)
+    return nn.linear(p["wo"], out.reshape(B, S, -1))
+
+
+def _mla_decode(p, cfg: ModelConfig, x, cache, pos):
+    """Absorbed MLA decode: scores and values live in the latent space, so
+    per-token cost is O(S * (kv_lora + rope)) and the cache stays compressed.
+    """
+    B = x.shape[0]
+    h = cfg.num_heads
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    qn, qr = _mla_q(p, cfg, x)  # (B,1,h,nope), (B,1,h,rope)
+    qr = apply_rope(qr, positions, cfg.rope_theta)
+    ckv_t, krope_t = _mla_latent(p, cfg, x, positions)  # (B,1,lora),(B,1,rope)
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_t, pos, axis=1)
+    krope = jax.lax.dynamic_update_slice_in_dim(cache["krope"], krope_t, pos, axis=1)
+
+    wkv_b = p["wkv_b"]["w"].reshape(
+        cfg.kv_lora_rank, h, cfg.qk_nope_head_dim + cfg.v_head_dim
+    ).astype(x.dtype)
+    w_uk = wkv_b[..., : cfg.qk_nope_head_dim]  # (lora, h, nope)
+    w_uv = wkv_b[..., cfg.qk_nope_head_dim :]  # (lora, h, v)
+
+    q_lat = jnp.einsum("bqhn,lhn->bqhl", qn, w_uk)  # absorb k up-proj
+    s = jnp.einsum("bqhl,bsl->bhqs", q_lat, ckv)
+    s = s + jnp.einsum("bqhr,bsr->bhqs", qr, krope)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    s = s.astype(jnp.float32) * scale
+    S_cache = ckv.shape[1]
+    valid = jnp.arange(S_cache) <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1).astype(ckv.dtype)
+    o_lat = jnp.einsum("bhqs,bsl->bqhl", pr, ckv)
+    o = jnp.einsum("bqhl,lhv->bqhv", o_lat, w_uv)  # absorb v up-proj
+    y = nn.linear(p["wo"], o.reshape(B, 1, -1))
+    return y, {"ckv": ckv, "krope": krope}
+
+
+# =========================================================================
+# Cross-attention (enc-dec)
+# =========================================================================
+
+
+def bidir_blocked_attention(q, k, v, *, q_block: int = 512):
+    """Unmasked attention, q-block scanned so (S_q, S_kv) scores never
+    materialize for the full sequence (encoder self-attn / cross-attn at
+    prefill lengths; see EXPERIMENTS.md §Perf iteration 2)."""
+    B, S, H, hd = q.shape
+    kvh = k.shape[2]
+    g = H // kvh
+    scale = 1.0 / math.sqrt(hd)
+    qb = min(q_block, S)
+    n_blocks = max(S // qb, 1)
+    if n_blocks * qb != S:  # ragged: fall back to single block
+        qb, n_blocks = S, 1
+    qr = q.reshape(B, n_blocks, qb, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    def body(_, blk):
+        s = jnp.einsum("bqkgh,bskh->bkgqs", blk, k).astype(jnp.float32)
+        s = s * scale
+        m = jnp.max(s, axis=-1, keepdims=True)
+        pr = jnp.exp(s - jax.lax.stop_gradient(m))
+        pr = pr / (jnp.sum(pr, axis=-1, keepdims=True) + 1e-30)
+        return None, jnp.einsum("bkgqs,bskh->bqkgh", pr.astype(v.dtype), v)
+
+    _, out = jax.lax.scan(body, None, qr)
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H, -1)
+
+
+def cross_attn_forward(p, cfg: ModelConfig, x, enc_out):
+    """x: (B, S_dec, d); enc_out: (B, S_enc, d). Bidirectional over enc."""
+    B, S, _ = x.shape
+    Se = enc_out.shape[1]
+    hd = cfg.resolved_head_dim
+    h = cfg.num_heads
+    q = nn.linear(p["wq"], x).reshape(B, S, h, hd)
+    k = nn.linear(p["wk"], enc_out).reshape(B, Se, h, hd)
+    v = nn.linear(p["wv"], enc_out).reshape(B, Se, h, hd)
+    o = bidir_blocked_attention(q, k, v, q_block=cfg.q_block)
+    return nn.linear(p["wo"], o.reshape(B, S, -1))
+
+
+def cross_attn_cache(p, cfg: ModelConfig, enc_out):
+    """Precompute encoder K/V once for decoding."""
+    B, Se, _ = enc_out.shape
+    hd, h = cfg.resolved_head_dim, cfg.num_heads
+    return {
+        "k": nn.linear(p["wk"], enc_out).reshape(B, Se, h, hd),
+        "v": nn.linear(p["wv"], enc_out).reshape(B, Se, h, hd),
+    }
+
+
+def cross_attn_decode(p, cfg: ModelConfig, x, ccache):
+    B = x.shape[0]
+    hd, h = cfg.resolved_head_dim, cfg.num_heads
+    q = nn.linear(p["wq"], x).reshape(B, 1, h, hd)
+    s = jnp.einsum("bqhd,bshd->bhqs", q, ccache["k"]).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    pr = jax.nn.softmax(s, axis=-1).astype(ccache["v"].dtype)
+    o = jnp.einsum("bhqs,bshd->bqhd", pr, ccache["v"])
+    return nn.linear(p["wo"], o.reshape(B, 1, -1))

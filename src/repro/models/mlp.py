@@ -1,0 +1,23 @@
+"""Channel mixers: gated (SwiGLU/GeGLU) MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import modules as nn
+
+
+def init_mlp(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": nn.init_linear(ks[0], d_model, d_ff),
+        "w_up": nn.init_linear(ks[1], d_model, d_ff),
+        "w_down": nn.init_linear(ks[2], d_ff, d_model),
+    }
+
+
+def mlp_forward(p, x, act: str = "silu"):
+    a = nn.activation(act)
+    return nn.linear(p["w_down"], a(nn.linear(p["w_gate"], x)) * nn.linear(p["w_up"], x))

@@ -1,0 +1,124 @@
+"""Basic parameterized layers as (init, apply) pure-function pairs.
+
+Params are plain nested dicts of jnp arrays — trivially pytree-able,
+shardable leaf-by-leaf, and sliceable along stacked leading dims (which the
+IFL base/modular partition exploits).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return jnp.dtype(name)
+
+
+# ----------------------------------------------------------------- linear
+
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.float32, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x, *, compute_dtype=None):
+    """Weights are cast to the activation (or compute) dtype: params may
+    be fp32 masters while activations flow in bf16."""
+    dt = compute_dtype or x.dtype
+    y = x.astype(dt) @ p["w"].astype(dt)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ----------------------------------------------------------------- embedding
+
+
+def init_embedding(key, vocab: int, d_model: int, *, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d_model)) * 0.02).astype(dtype)}
+
+
+def embedding(p, ids, *, compute_dtype=None):
+    t = p["table"]
+    if compute_dtype is not None:
+        t = t.astype(compute_dtype)
+    return jnp.take(t, ids, axis=0)
+
+
+def embedding_logits(p, x):
+    """Tied-embedding readout."""
+    return x @ p["table"].astype(x.dtype).T
+
+
+# ----------------------------------------------------------------- norms
+
+
+def init_norm(key, d: int, kind: str, *, dtype=jnp.float32):
+    del key
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if kind == "nonparam_ln":  # OLMo: LN without learnable affine
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(p, x, kind: str, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        y = y * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if kind == "layernorm":
+            y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- acts
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ----------------------------------------------------------------- stacking
+
+
+def stack_init(init_fn, key, n: int):
+    """Initialize ``n`` copies of a module with a stacked leading dim."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def tree_slice(tree, start: int, stop: int):
+    """Static slice along the stacked leading dim of every leaf."""
+    return jax.tree.map(lambda a: a[start:stop], tree)
+
+
+def tree_concat(trees, axis: int = 0):
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=axis), *trees)
+
+
+def param_count(tree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda a: a.astype(dtype), tree)

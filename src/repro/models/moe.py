@@ -1,0 +1,121 @@
+"""Mixture-of-Experts channel mixer with sort-based dispatch.
+
+Expert-parallel friendly: expert weights carry a leading ``(E,)`` dim that
+the sharding rules place on the ``model`` mesh axis. Dispatch avoids the
+classic GShard ``(tokens, E, capacity)`` one-hot entirely — at the assigned
+scales (deepseek-v3 @ train_4k routes 1M tokens × 256 experts) that tensor
+is ~1e13 elements. Instead we rank tokens within their expert via a stable
+argsort over expert ids (O(T·K) memory) and move activations with
+gather/scatter; XLA SPMD lowers the cross-shard gathers to the
+all-to-all-style collectives the roofline then measures.
+
+Covers: llama4-maverick (128e top-1), jamba-1.5 (16e top-2),
+deepseek-v3 (1 shared + 256 routed top-8; the paper's sigmoid+bias router
+is approximated by softmax + Switch aux loss, noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import modules as nn
+from repro.models.mlp import init_mlp, mlp_forward
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    cap = int(tokens * cfg.num_experts_per_tok * cfg.capacity_factor
+              / cfg.num_experts)
+    return max(cap, 4)
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, dff = cfg.d_model, (cfg.moe_d_ff or cfg.d_ff)
+    ks = jax.random.split(key, 3)
+    p = {
+        "router": nn.init_linear(ks[0], d, cfg.num_experts),
+        "experts": nn.stack_init(
+            lambda k: init_mlp(k, d, dff), ks[1], cfg.num_experts
+        ),
+    }
+    if cfg.num_shared_experts > 0:
+        p["shared"] = init_mlp(ks[2], d, dff * cfg.num_shared_experts)
+    return p
+
+
+def _expert_ffn(experts, x, act: str):
+    """x: (E, C, d) -> (E, C, d), batched over the expert dim."""
+    a = nn.activation(act)
+    h = a(jnp.einsum("ecd,edf->ecf", x, experts["w_gate"]["w"].astype(x.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", x, experts["w_up"]["w"].astype(x.dtype))
+    return jnp.einsum("ecf,efd->ecd", h, experts["w_down"]["w"].astype(x.dtype))
+
+
+def _rank_in_expert(e_flat: jnp.ndarray, E: int) -> jnp.ndarray:
+    """Position of each (token, choice) within its expert's arrival order.
+
+    e_flat: (T*K,) int32 expert assignments. Returns (T*K,) int32 ranks.
+    Stable-sort ranking: rank = index-in-sorted-run. O(T·K log) and no
+    (T·K, E) one-hot.
+    """
+    n = e_flat.shape[0]
+    order = jnp.argsort(e_flat, stable=True)  # (n,)
+    e_sorted = e_flat[order]
+    hist = jnp.zeros((E,), jnp.int32).at[e_flat].add(1)
+    starts = jnp.cumsum(hist) - hist  # exclusive prefix sum
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - starts[e_sorted]
+    return jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+
+
+def moe_forward(p, cfg: ModelConfig, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d). Returns (y, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    C = _capacity(T, cfg)
+    xt = x.reshape(T, d)
+
+    logits = nn.linear(p["router"], xt).astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)  # (T, K)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+
+    e_flat = idx.reshape(T * K).astype(jnp.int32)
+    pos_flat = _rank_in_expert(e_flat, E)  # (T*K,)
+    keep = pos_flat < C
+
+    # Load-balance auxiliary loss (Switch-style): E * sum(f_e * p_e).
+    frac_tokens = (
+        jnp.zeros((E,), jnp.float32).at[e_flat].add(1.0) / (T * K)
+    )
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs) * cfg.router_aux_coef
+
+    # Dispatch: scatter token rows into (E*C) expert slots, then gather.
+    token_of = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)  # (T*K,)
+    slot = e_flat * C + pos_flat  # unique among kept entries
+    slot_safe = jnp.where(keep, slot, E * C)  # OOB -> dropped by scatter
+    slot_to_token = (
+        jnp.zeros((E * C,), jnp.int32)
+        .at[slot_safe]
+        .set(token_of, mode="drop")
+    )
+    slot_used = (
+        jnp.zeros((E * C,), jnp.bool_).at[slot_safe].set(True, mode="drop")
+    )
+    xe = jnp.take(xt, slot_to_token, axis=0)  # (E*C, d)
+    xe = jnp.where(slot_used[:, None], xe, 0).reshape(E, C, d)
+
+    ye = _expert_ffn(p["experts"], xe, cfg.act).reshape(E * C, d)
+
+    # Combine: gather each (token, choice)'s expert output, weight, sum.
+    gath = jnp.take(ye, jnp.minimum(slot, E * C - 1), axis=0)  # (T*K, d)
+    w = (gate_vals.reshape(T * K) * keep.astype(jnp.float32)).astype(x.dtype)
+    yt = jnp.sum((gath * w[:, None]).reshape(T, K, d), axis=1)
+
+    if "shared" in p:
+        yt = yt + mlp_forward(p["shared"], xt, cfg.act)
+    return yt.reshape(B, S, d), aux.astype(jnp.float32)

@@ -1,0 +1,87 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim // 2,)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _rotate(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs laid out as [x1 | x2] halves (HF 'neox' layout)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    inv = rope_freqs(x.shape[-1], theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    return _rotate(x, cos, sin)
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    theta: float,
+    sections: Tuple[int, ...],
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE [arXiv:2409.12191].
+
+    x: (B, S, H, hd); positions: (3, B, S) — (temporal, height, width)
+    position ids. ``sections`` splits the hd/2 frequency bands among the
+    three axes; text tokens carry identical ids on all three axes, making
+    M-RoPE coincide with 1-D RoPE for pure text.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    inv = rope_freqs(x.shape[-1], theta)  # (half,)
+    # (3, B, S, half) angles, then select the section owner per band.
+    ang_all = positions[..., None].astype(jnp.float32) * inv
+    owner = jnp.repeat(
+        jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=half
+    )  # (half,) static
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_all, 0, -1), owner[None, None, :, None], axis=-1
+    )[..., 0]  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    return _rotate(x, cos, sin)
+
+
+def default_mrope_positions(batch: int, seq: int, num_image_tokens: int,
+                            image_hw: Optional[Tuple[int, int]] = None) -> jnp.ndarray:
+    """(3, B, S) position ids: a 2-D grid over the leading image tokens,
+    then text ids continuing from the grid maximum (Qwen2-VL scheme)."""
+    if num_image_tokens == 0:
+        p = jnp.broadcast_to(jnp.arange(seq)[None], (batch, seq))
+        return jnp.stack([p, p, p]).astype(jnp.int32)
+    if image_hw is None:
+        h = max(1, int(num_image_tokens**0.5))
+        while num_image_tokens % h:
+            h -= 1
+        image_hw = (h, num_image_tokens // h)
+    h, w = image_hw
+    grid_h = jnp.repeat(jnp.arange(h), w)
+    grid_w = jnp.tile(jnp.arange(w), h)
+    t_img = jnp.zeros((num_image_tokens,), jnp.int32)
+    start = max(h, w)
+    n_text = seq - num_image_tokens
+    text = start + jnp.arange(n_text)
+    pos = jnp.stack(
+        [
+            jnp.concatenate([t_img, text]),
+            jnp.concatenate([grid_h, text]),
+            jnp.concatenate([grid_w, text]),
+        ]
+    ).astype(jnp.int32)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq))

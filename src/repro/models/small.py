@@ -1,0 +1,134 @@
+"""Paper Table II: the four heterogeneous client models (KMNIST-scale).
+
+Every model is partitioned at the fusion layer with the paper's common
+output dimension d_fusion = 432; base/modular blocks follow Table II
+exactly. Conv layers are 3x3 SAME + ReLU + 2x2 max-pool; FC layers are
+followed by ReLU except the output layer. Client 1's fusion layer is
+conv-based, the rest FC-based — heterogeneous fusion *types* with a
+standardized output dim, as the paper stresses.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+
+D_FUSION = 432
+NUM_CLASSES = 10
+
+# Layer descriptors: ('conv', cin, cout) | ('fc', din, dout).
+CLIENT_ARCHS: Dict[int, Dict[str, List[Tuple]]] = {
+    1: {
+        "base": [("conv", 1, 16), ("conv", 16, 32), ("conv", 32, 48)],
+        "modular": [("fc", 432, 256), ("fc", 256, 128), ("fc", 128, 64),
+                    ("fc", 64, 10)],
+    },
+    2: {
+        "base": [("conv", 1, 16), ("conv", 16, 32), ("fc", 1568, 432)],
+        "modular": [("fc", 432, 128), ("fc", 128, 10)],
+    },
+    3: {
+        "base": [("fc", 784, 432)],
+        "modular": [("fc", 432, 256), ("fc", 256, 128), ("fc", 128, 64),
+                    ("fc", 64, 10)],
+    },
+    4: {
+        "base": [("fc", 784, 1024), ("fc", 1024, 512), ("fc", 512, 432)],
+        "modular": [("fc", 432, 10)],
+    },
+}
+
+
+def _init_layers(key, descs) -> List[Dict[str, Any]]:
+    out = []
+    for i, d in enumerate(descs):
+        k = jax.random.fold_in(key, i)
+        if d[0] == "conv":
+            _, cin, cout = d
+            fan_in = 9 * cin
+            out.append({
+                "w": jax.random.normal(k, (3, 3, cin, cout)) / math.sqrt(fan_in),
+                "b": jnp.zeros((cout,)),
+            })
+        else:
+            _, din, dout = d
+            out.append(nn.init_linear(k, din, dout, bias=True))
+    return out
+
+
+def init_client_model(key, client_id: int) -> Dict[str, Any]:
+    arch = CLIENT_ARCHS[client_id]
+    kb, km = jax.random.split(key)
+    return {
+        "base": _init_layers(kb, arch["base"]),
+        "modular": _init_layers(km, arch["modular"]),
+    }
+
+
+def _conv_pool_relu(p, x):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + p["b"]
+    y = jax.nn.relu(y)
+    return jax.lax.reduce_window(
+        y, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _apply_layers(layers, descs, x, *, is_output_block: bool):
+    """x: (B, 28, 28, 1) images or (B, d) features."""
+    n = len(descs)
+    for i, (p, d) in enumerate(zip(layers, descs)):
+        if d[0] == "conv":
+            if x.ndim == 2:
+                raise ValueError("conv after flatten")
+            x = _conv_pool_relu(p, x)
+        else:
+            if x.ndim == 4:
+                x = x.reshape(x.shape[0], -1)
+            x = nn.linear(p, x)
+            last = is_output_block and i == n - 1
+            if not last:
+                x = jax.nn.relu(x)
+    if x.ndim == 4:  # conv-based fusion layer (client 1): flatten + ReLU
+        x = jax.nn.relu(x.reshape(x.shape[0], -1))
+    return x
+
+
+def client_base_apply(params, client_id: int, x) -> jnp.ndarray:
+    """x: (B, 28, 28, 1) -> z: (B, 432). The fusion-layer output z_k."""
+    z = _apply_layers(
+        params["base"], CLIENT_ARCHS[client_id]["base"], x, is_output_block=False
+    )
+    assert z.shape[-1] == D_FUSION, z.shape
+    return z
+
+
+def client_modular_apply(params, client_id: int, z) -> jnp.ndarray:
+    """z: (B, 432) -> logits: (B, 10)."""
+    return _apply_layers(
+        params["modular"], CLIENT_ARCHS[client_id]["modular"], z,
+        is_output_block=True,
+    )
+
+
+def client_apply(params, client_id: int, x) -> jnp.ndarray:
+    """Local end-to-end inference, eq. (10)."""
+    return client_modular_apply(params, client_id, client_base_apply(params, client_id, x))
+
+
+def compose_apply(base_params, base_id: int, mod_params, mod_id: int, x):
+    """Cross-vendor composition, eq. (11): base of k + modular of i."""
+    z = client_base_apply(base_params, base_id, x)
+    return client_modular_apply(mod_params, mod_id, z)
+
+
+def model_bytes(params, block: str = None) -> int:
+    tree = params if block is None else params[block]
+    return nn.param_bytes(tree)

@@ -1,0 +1,145 @@
+"""Mamba selective-SSM mixer (as used by Jamba [arXiv:2403.19887]).
+
+Prefill/train uses a *chunked* parallel scan: ``lax.scan`` over sequence
+chunks carrying the SSM state, ``associative_scan`` inside each chunk.
+A monolithic associative scan would materialize the full
+``(B, S, d_inner, d_state)`` element tensor (~17 GB/device at jamba
+prefill_32k); chunking caps it at the chunk length. Decode is the O(1)
+recurrent step (state + conv ring buffer), which is what makes
+``long_500k`` runnable for the hybrid archs.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import modules as nn
+
+CHUNK = 256
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.ssm_d_inner
+    ds, dtr = cfg.ssm_d_state, cfg.resolved_dt_rank
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A.
+    a_init = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {
+        "in_proj": nn.init_linear(ks[0], d, 2 * di),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_d_conv, di)) * 0.2,
+        "conv_b": jnp.zeros((di,)),
+        "x_proj": nn.init_linear(ks[2], di, dtr + 2 * ds),
+        "dt_proj": nn.init_linear(ks[3], dtr, di, bias=True),
+        "a_log": jnp.log(a_init),
+        "d_skip": jnp.ones((di,)),
+        "out_proj": nn.init_linear(ks[4], di, d),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, S, di); w: (K, di)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, k : k + x.shape[1], :] * w[k].astype(x.dtype) for k in range(K)
+    )
+    return out + b.astype(x.dtype)
+
+
+def _ssm_params(p, cfg: ModelConfig, xc):
+    """xc: (B, S, di) post-conv activations -> (dt, Bmat, Cmat)."""
+    ds, dtr = cfg.ssm_d_state, cfg.resolved_dt_rank
+    proj = nn.linear(p["x_proj"], xc)
+    dt = jax.nn.softplus(nn.linear(p["dt_proj"], proj[..., :dtr]))  # (B,S,di)
+    Bm = proj[..., dtr : dtr + ds]  # (B,S,ds)
+    Cm = proj[..., dtr + ds :]  # (B,S,ds)
+    return dt, Bm, Cm
+
+
+def _scan_chunk(h0, a, bx, Cm):
+    """Linear recurrence h_t = a_t * h_{t-1} + bx_t within one chunk,
+    contracted against C *inside* the chunk so the (L, B, di, ds) state
+    tensor never escapes (16x activation-memory reduction vs emitting
+    states — jamba's train_4k temp went from ~1.6 TB/chip to the working
+    set of one chunk; see EXPERIMENTS.md §Perf iteration 1).
+
+    a, bx: (L, B, di, ds); h0: (B, di, ds); Cm: (L, B, ds).
+    Returns (h_last, y) with y: (L, B, di).
+    """
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    a_all, b_all = jax.lax.associative_scan(combine, (a, bx), axis=0)
+    all_h = a_all * h0[None] + b_all
+    y = jnp.einsum("lbdn,lbn->lbd", all_h, Cm)
+    return all_h[-1], y
+
+
+def mamba_forward(p, cfg: ModelConfig, x):
+    """x: (B, S, d) -> (B, S, d). Full-sequence (train/prefill)."""
+    B, S, _ = x.shape
+    di, ds = cfg.ssm_d_inner, cfg.ssm_d_state
+    xz = nn.linear(p["in_proj"], x)
+    xm, z = xz[..., :di], xz[..., di:]
+    xc = jax.nn.silu(_causal_conv(xm, p["conv_w"], p["conv_b"]))
+    dt, Bm, Cm = _ssm_params(p, cfg, xc)
+
+    a = jnp.exp(-dt[..., None] * jnp.exp(p["a_log"]).astype(dt.dtype))  # (B,S,di,ds)
+    # bx: (B,S,di,ds) = (dt*x) (B,S,di,1) * B (B,S,1,ds)
+    bx = (dt * xc)[..., None] * Bm[:, :, None, :]
+
+    L = min(CHUNK, S)
+    n_chunks = S // L
+    assert n_chunks * L == S, f"seq {S} % chunk {L} != 0"
+    ar = a.reshape(B, n_chunks, L, di, ds).transpose(1, 2, 0, 3, 4)
+    br = bx.reshape(B, n_chunks, L, di, ds).transpose(1, 2, 0, 3, 4)
+    cr = Cm.reshape(B, n_chunks, L, ds).transpose(1, 2, 0, 3)
+
+    def body(h, inp):
+        ac, bc, cc = inp
+        return _scan_chunk(h, ac, bc, cc)
+
+    h0 = jnp.zeros((B, di, ds), x.dtype)
+    _, ys = jax.lax.scan(body, h0, (ar, br, cr))  # (n_chunks, L, B, di)
+    y = ys.transpose(2, 0, 1, 3).reshape(B, S, di)
+    y = y + xc * p["d_skip"].astype(y.dtype)
+    y = y * jax.nn.silu(z)
+    return nn.linear(p["out_proj"], y)
+
+
+# ----------------------------------------------------------------- decode
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    di = cfg.ssm_d_inner
+    return {
+        "ssm_h": jnp.zeros((batch, di, cfg.ssm_d_state), dtype),
+        "ssm_conv": jnp.zeros((batch, cfg.ssm_d_conv - 1, di), dtype),
+    }
+
+
+def mamba_decode(p, cfg: ModelConfig, x, cache):
+    """x: (B, 1, d). O(1) recurrent step."""
+    B = x.shape[0]
+    di = cfg.ssm_d_inner
+    xz = nn.linear(p["in_proj"], x)
+    xm, z = xz[..., :di], xz[..., di:]  # (B,1,di)
+    window = jnp.concatenate([cache["ssm_conv"], xm], axis=1)  # (B, K, di)
+    xc = jnp.sum(window * p["conv_w"].astype(x.dtype)[None], axis=1, keepdims=True)
+    xc = jax.nn.silu(xc + p["conv_b"].astype(x.dtype))
+    dt, Bm, Cm = _ssm_params(p, cfg, xc)
+
+    a = jnp.exp(-dt[:, 0, :, None] * jnp.exp(p["a_log"]).astype(dt.dtype))
+    bx = (dt[:, 0] * xc[:, 0])[..., None] * Bm[:, 0, None, :]
+    h = a * cache["ssm_h"] + bx  # (B, di, ds)
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None]
+    y = y + xc * p["d_skip"].astype(y.dtype)
+    y = y * jax.nn.silu(z)
+    return nn.linear(p["out_proj"], y), {"ssm_h": h, "ssm_conv": window[:, 1:]}

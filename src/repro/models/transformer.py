@@ -1,0 +1,564 @@
+"""LM assembly: layer program → {base, modular} param partition.
+
+The top-level param tree is ``{'base': ..., 'modular': ...}`` — the IFL
+partition is structural, not an afterthought:
+
+    base    = embed (+ modality projectors + encoder) + prefix layers
+              + base groups + fusion in-projection       -> z (B,S,d_fusion)
+    modular = fusion out-projection + modular groups
+              + final norm + LM head                     -> logits
+
+Repeated layer groups are scanned (``lax.scan`` over a stacked leading
+group dim) so HLO size is O(|pattern|); optional ``jax.checkpoint`` on the
+scan body gives layer-group remat for training. Decode threads a per-layer
+cache pytree through the same structure.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import LayerSpec, ModelConfig
+from repro.models import modules as nn
+from repro.models.attention import (
+    attn_decode,
+    attn_forward,
+    cross_attn_cache,
+    cross_attn_decode,
+    cross_attn_forward,
+    init_attn,
+    init_attn_cache,
+    init_cross_attn,
+)
+from repro.models.mlp import init_mlp, mlp_forward
+from repro.models.moe import init_moe, moe_forward
+from repro.models.rope import default_mrope_positions
+from repro.models.ssm import (
+    init_mamba,
+    init_mamba_cache,
+    mamba_decode,
+    mamba_forward,
+)
+from repro.models.xlstm import (
+    init_mlstm,
+    init_mlstm_cache,
+    init_slstm,
+    init_slstm_cache,
+    mlstm_decode,
+    mlstm_forward,
+    slstm_decode,
+    slstm_forward,
+)
+
+Params = Dict[str, Any]
+
+
+# =========================================================================
+# Single layer
+# =========================================================================
+
+
+def init_layer(key, cfg: ModelConfig, spec: LayerSpec) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {"norm1": nn.init_norm(ks[0], cfg.d_model, cfg.norm)}
+    if spec.mixer == "attn":
+        p["attn"] = init_attn(ks[1], cfg, spec)
+    elif spec.mixer == "mamba":
+        p["mamba"] = init_mamba(ks[1], cfg)
+    elif spec.mixer == "mlstm":
+        p["mlstm"] = init_mlstm(ks[1], cfg)
+    elif spec.mixer == "slstm":
+        p["slstm"] = init_slstm(ks[1], cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.cross_attn:
+        p["norm_x"] = nn.init_norm(ks[2], cfg.d_model, cfg.norm)
+        p["cross"] = init_cross_attn(ks[3], cfg)
+    if spec.ffn == "dense":
+        p["norm2"] = nn.init_norm(ks[4], cfg.d_model, cfg.norm)
+        p["ffn"] = init_mlp(ks[5], cfg.d_model, cfg.d_ff)
+    elif spec.ffn == "moe":
+        p["norm2"] = nn.init_norm(ks[4], cfg.d_model, cfg.norm)
+        p["moe"] = init_moe(ks[5], cfg)
+    return p
+
+
+def apply_layer(p, cfg: ModelConfig, spec: LayerSpec, x, positions, enc_out):
+    aux = jnp.zeros((), jnp.float32)
+    h = nn.apply_norm(p["norm1"], x, cfg.norm)
+    if spec.mixer == "attn":
+        y = attn_forward(p["attn"], cfg, spec, h, positions)
+    elif spec.mixer == "mamba":
+        y = mamba_forward(p["mamba"], cfg, h)
+    elif spec.mixer == "mlstm":
+        y = mlstm_forward(p["mlstm"], cfg, h)
+    else:  # slstm (block includes its own gated FFN)
+        y = slstm_forward(p["slstm"], cfg, h)
+    x = x + y
+    if spec.cross_attn:
+        h = nn.apply_norm(p["norm_x"], x, cfg.norm)
+        x = x + cross_attn_forward(p["cross"], cfg, h, enc_out)
+    if spec.ffn == "dense":
+        x = x + mlp_forward(p["ffn"], nn.apply_norm(p["norm2"], x, cfg.norm), cfg.act)
+    elif spec.ffn == "moe":
+        y, a = moe_forward(p["moe"], cfg, nn.apply_norm(p["norm2"], x, cfg.norm))
+        x = x + y
+        aux = aux + a
+    return x, aux
+
+
+def decode_layer(p, cfg: ModelConfig, spec: LayerSpec, x, lcache, pos,
+                 positions=None, cross_kv=None):
+    aux_cache = dict(lcache)
+    h = nn.apply_norm(p["norm1"], x, cfg.norm)
+    if spec.mixer == "attn":
+        y, aux_cache["mix"] = attn_decode(
+            p["attn"], cfg, spec, h, lcache["mix"], pos, positions
+        )
+    elif spec.mixer == "mamba":
+        y, aux_cache["mix"] = mamba_decode(p["mamba"], cfg, h, lcache["mix"])
+    elif spec.mixer == "mlstm":
+        y, aux_cache["mix"] = mlstm_decode(p["mlstm"], cfg, h, lcache["mix"])
+    else:
+        y, aux_cache["mix"] = slstm_decode(p["slstm"], cfg, h, lcache["mix"])
+    x = x + y
+    if spec.cross_attn:
+        h = nn.apply_norm(p["norm_x"], x, cfg.norm)
+        x = x + cross_attn_decode(p["cross"], cfg, h, cross_kv)
+    if spec.ffn == "dense":
+        x = x + mlp_forward(p["ffn"], nn.apply_norm(p["norm2"], x, cfg.norm), cfg.act)
+    elif spec.ffn == "moe":
+        y, _ = moe_forward(p["moe"], cfg, nn.apply_norm(p["norm2"], x, cfg.norm))
+        x = x + y
+    return x, aux_cache
+
+
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     cache_len: int, dtype) -> Params:
+    if spec.mixer == "attn":
+        mix = init_attn_cache(cfg, spec, batch, cache_len, dtype)
+    elif spec.mixer == "mamba":
+        mix = init_mamba_cache(cfg, batch, dtype)
+    elif spec.mixer == "mlstm":
+        mix = init_mlstm_cache(cfg, batch, dtype)
+    else:
+        mix = init_slstm_cache(cfg, batch, dtype)
+    return {"mix": mix}
+
+
+# =========================================================================
+# Layer groups (scanned)
+# =========================================================================
+
+
+def init_group(key, cfg: ModelConfig, pattern) -> Params:
+    ks = jax.random.split(key, len(pattern))
+    return {f"l{i}": init_layer(ks[i], cfg, s) for i, s in enumerate(pattern)}
+
+
+def apply_group(p, cfg: ModelConfig, pattern, x, positions, enc_out):
+    aux = jnp.zeros((), jnp.float32)
+    for i, spec in enumerate(pattern):
+        x, a = apply_layer(p[f"l{i}"], cfg, spec, x, positions, enc_out)
+        aux = aux + a
+    return x, aux
+
+
+def scan_groups(groups_p, cfg: ModelConfig, pattern, x, positions, enc_out):
+    """Scan a stacked group stack. groups_p leaves: (n_groups, ...).
+
+    remat='group' checkpoints the whole group body (one residual per
+    group live during backward); remat='layer' checkpoints each layer
+    individually — smaller recompute granularity, lower peak memory for
+    wide-pattern groups (jamba's 8-layer period), at ~equal FLOPs.
+    """
+
+    def body(carry, gp):
+        x, aux = carry
+        if cfg.remat == "layer":
+            for i, spec in enumerate(pattern):
+                layer_fn = jax.checkpoint(
+                    functools.partial(apply_layer, cfg=cfg, spec=spec),
+                    static_argnums=(),
+                )
+                x, a = layer_fn(gp[f"l{i}"], x=x, positions=positions,
+                                enc_out=enc_out)
+                aux = aux + a
+        else:
+            x, a = apply_group(gp, cfg, pattern, x, positions, enc_out)
+            aux = aux + a
+        return (x, aux), None
+
+    if cfg.remat == "group":
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), groups_p)
+    return x, aux
+
+
+def decode_scan_groups(groups_p, caches, cfg, pattern, x, pos, positions,
+                       cross_kvs=None):
+    def body(x, inp):
+        gp, gc, ckv = inp
+        new_gc = {}
+        for i, spec in enumerate(pattern):
+            x, new_gc[f"l{i}"] = decode_layer(
+                gp[f"l{i}"], cfg, spec, x, gc[f"l{i}"], pos, positions,
+                None if ckv is None else ckv.get(f"l{i}"),
+            )
+        return x, new_gc
+
+    xs = (groups_p, caches, cross_kvs)
+    x, new_caches = jax.lax.scan(body, x, xs)
+    return x, new_caches
+
+
+# =========================================================================
+# Encoder (enc-dec archs; consumes stub frontend embeddings)
+# =========================================================================
+
+
+def _init_enc_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    return {
+        "norm1": nn.init_norm(ks[0], cfg.d_model, cfg.norm),
+        "attn": init_cross_attn(ks[1], cfg),  # bidirectional self-attn
+        "norm2": nn.init_norm(ks[2], cfg.d_model, cfg.norm),
+        "ffn": init_mlp(ks[3], cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_encoder(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "groups": nn.stack_init(
+            lambda k: _init_enc_layer(k, cfg), ks[0], cfg.enc_layers
+        ),
+        "final_norm": nn.init_norm(ks[1], cfg.d_model, cfg.norm),
+    }
+
+
+def encoder_forward(p, cfg: ModelConfig, frames):
+    """frames: (B, S_enc, d_model) stub frontend output."""
+    x = frames.astype(nn.dtype_of(cfg.compute_dtype))
+
+    def body(x, lp):
+        h = nn.apply_norm(lp["norm1"], x, cfg.norm)
+        x = x + cross_attn_forward(lp["attn"], cfg, h, h)  # bidirectional
+        h = nn.apply_norm(lp["norm2"], x, cfg.norm)
+        return x + mlp_forward(lp["ffn"], h, cfg.act), None
+
+    x, _ = jax.lax.scan(body, x, p["groups"])
+    return nn.apply_norm(p["final_norm"], x, cfg.norm)
+
+
+# =========================================================================
+# Full LM
+# =========================================================================
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    cfg.validate()
+    pre, bp, bg, mp, mg = cfg._resolved_program()
+    ks = jax.random.split(key, 10)
+    base: Params = {"embed": nn.init_embedding(ks[0], cfg.vocab_size, cfg.d_model)}
+    if cfg.num_image_tokens:
+        base["img_proj"] = nn.init_linear(ks[1], cfg.d_model, cfg.d_model)
+    if cfg.is_encdec:
+        base["encoder"] = init_encoder(ks[2], cfg)
+    if pre:
+        base["prefix"] = {
+            f"l{i}": init_layer(jax.random.fold_in(ks[3], i), cfg, s)
+            for i, s in enumerate(pre)
+        }
+    if bg:
+        base["groups"] = nn.stack_init(
+            lambda k: init_group(k, cfg, bp), ks[4], bg
+        )
+    base["fusion_in"] = nn.init_linear(ks[5], cfg.d_model, cfg.d_fusion)
+
+    modular: Params = {
+        "fusion_out": nn.init_linear(ks[6], cfg.d_fusion, cfg.d_model)
+    }
+    if mg:
+        modular["groups"] = nn.stack_init(
+            lambda k: init_group(k, cfg, mp), ks[7], mg
+        )
+    modular["final_norm"] = nn.init_norm(ks[8], cfg.d_model, cfg.norm)
+    # NOTE: tie_embeddings is recorded in the configs but the IFL partition
+    # forces an untied head (embed lives in base, head in modular — tying
+    # would leak base parameters across the privacy boundary). See DESIGN.md.
+    modular["lm_head"] = nn.init_linear(ks[9], cfg.d_model, cfg.vocab_size)
+    if cfg.use_mtp:
+        mk = jax.random.fold_in(ks[9], 1)
+        modular["mtp"] = {
+            "layer": init_layer(mk, cfg, LayerSpec()),
+            "norm": nn.init_norm(jax.random.fold_in(mk, 1), cfg.d_model, cfg.norm),
+        }
+    return {"base": base, "modular": modular}
+
+
+def _positions(cfg: ModelConfig, batch_size: int, seq: int, batch=None):
+    if cfg.rope_type == "mrope":
+        if batch is not None and "mrope_positions" in batch:
+            return batch["mrope_positions"]
+        return default_mrope_positions(batch_size, seq, cfg.num_image_tokens)
+    return jnp.broadcast_to(
+        jnp.arange(seq, dtype=jnp.int32)[None], (batch_size, seq)
+    )
+
+
+def base_forward(base: Params, cfg: ModelConfig, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (z, aux). z: (B, S, d_fusion) — the fusion-layer output that IFL
+    shares; the ONLY activation crossing the client boundary."""
+    pre, bp, bg, mp, mg = cfg._resolved_program()
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cdt = nn.dtype_of(cfg.compute_dtype)
+    x = nn.embedding(base["embed"], tokens, compute_dtype=cdt)
+    if cfg.num_image_tokens:
+        img = nn.linear(base["img_proj"], batch["image_embeds"].astype(cdt))
+        x = jnp.concatenate([img, x[:, cfg.num_image_tokens :]], axis=1)
+    positions = _positions(cfg, B, S, batch)
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encoder_forward(base["encoder"], cfg, batch["frame_embeds"])
+    aux = jnp.zeros((), jnp.float32)
+    for i, spec in enumerate(pre):
+        x, a = apply_layer(base["prefix"][f"l{i}"], cfg, spec, x, positions, enc_out)
+        aux = aux + a
+    if bg:
+        x, a = scan_groups(base["groups"], cfg, bp, x, positions, enc_out)
+        aux = aux + a
+    z = nn.linear(base["fusion_in"], x)
+    return z.astype(cdt), aux
+
+
+def modular_trunk(mod: Params, cfg: ModelConfig, z):
+    """z -> (final normed hidden, aux, positions) — everything above the
+    fusion interface except the LM head."""
+    _, _, _, mp, mg = cfg._resolved_program()
+    B, S, _ = z.shape
+    x = nn.linear(mod["fusion_out"], z.astype(nn.dtype_of(cfg.compute_dtype)))
+    positions = _positions(cfg, B, S)
+    aux = jnp.zeros((), jnp.float32)
+    if mg:
+        x, aux = scan_groups(mod["groups"], cfg, mp, x, positions, None)
+    x = nn.apply_norm(mod["final_norm"], x, cfg.norm)
+    return x, aux, positions
+
+
+def _head_logits(mod: Params, cfg: ModelConfig, x):
+    logits = nn.linear(mod["lm_head"], x).astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+def mtp_hidden(mod: Params, cfg: ModelConfig, x, positions):
+    h2, _ = apply_layer(mod["mtp"]["layer"], cfg, LayerSpec(), x, positions,
+                        None)
+    return nn.apply_norm(mod["mtp"]["norm"], h2, cfg.norm)
+
+
+def modular_forward(mod: Params, cfg: ModelConfig, z) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """z: (B, S, d_fusion) -> (logits fp32, aux)."""
+    x, aux, positions = modular_trunk(mod, cfg, z)
+    logits = _head_logits(mod, cfg, x)
+    if cfg.use_mtp:
+        mtp_logits = _head_logits(mod, cfg, mtp_hidden(mod, cfg, x, positions))
+        return logits, aux, mtp_logits
+    return logits, aux
+
+
+def chunked_ce(mod: Params, cfg: ModelConfig, h, tokens, *, offset: int,
+               start: int) -> jnp.ndarray:
+    """Mean next-token CE without ever materializing (tokens, vocab)
+    logits: scan over position chunks, head matmul + softmax per chunk,
+    checkpointed so backward recomputes chunk logits instead of storing
+    them. At gemma3 train_4k (262k vocab) the full logits buffer is
+    ~4.3 GB/chip fp32 — this caps it at chunk/S of that (§Perf)."""
+    B, S, _ = h.shape
+    C = cfg.ce_chunk
+    T = S - offset - start  # scoreable positions
+    n = -(-T // C)
+    pad = n * C - T
+    hs = jax.lax.dynamic_slice_in_dim(h, start, T, axis=1)
+    hs = jnp.pad(hs, ((0, 0), (0, pad), (0, 0)))
+    tgt = jnp.pad(tokens[:, start + offset : start + offset + T],
+                  ((0, 0), (0, pad)))
+    mask = jnp.pad(jnp.ones((B, T), jnp.float32), ((0, 0), (0, pad)))
+    hs = hs.reshape(B, n, C, -1).swapaxes(0, 1)
+    tgt = tgt.reshape(B, n, C).swapaxes(0, 1)
+    mask = mask.reshape(B, n, C).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_nll(hc, tc, mc):
+        logits = _head_logits(mod, cfg, hc)
+        lp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(lp, tc[..., None], axis=-1)[..., 0]
+        return jnp.sum(nll * mc)
+
+    def body(tot, inp):
+        hc, tc, mc = inp
+        return tot + chunk_nll(hc, tc, mc), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            (hs, tgt, mask))
+    return total / (B * T)
+
+
+def lm_apply(params: Params, cfg: ModelConfig, batch):
+    z, aux_b = base_forward(params["base"], cfg, batch)
+    out = modular_forward(params["modular"], cfg, z)
+    if cfg.use_mtp:
+        logits, aux_m, mtp_logits = out
+        return logits, aux_b + aux_m, mtp_logits
+    logits, aux_m = out
+    return logits, aux_b + aux_m, None
+
+
+def _next_token_ce(logits, tokens, offset: int, start: int):
+    """Mean CE of predicting tokens[t + offset] from position t."""
+    lp = jax.nn.log_softmax(logits[:, start : logits.shape[1] - offset], axis=-1)
+    tgt = tokens[:, start + offset :]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def lm_loss(params: Params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    start = cfg.num_image_tokens  # no LM loss on stub image positions
+    if cfg.ce_chunk:
+        z, aux_b = base_forward(params["base"], cfg, batch)
+        h, aux_m, positions = modular_trunk(params["modular"], cfg, z)
+        loss = chunked_ce(params["modular"], cfg, h, batch["tokens"],
+                          offset=1, start=start)
+        if cfg.use_mtp:
+            h2 = mtp_hidden(params["modular"], cfg, h, positions)
+            loss = loss + 0.3 * chunked_ce(
+                params["modular"], cfg, h2, batch["tokens"],
+                offset=2, start=start,
+            )
+        return loss + aux_b + aux_m
+    logits, aux, mtp_logits = lm_apply(params, cfg, batch)
+    loss = _next_token_ce(logits, batch["tokens"], 1, start)
+    if mtp_logits is not None:
+        loss = loss + 0.3 * _next_token_ce(mtp_logits, batch["tokens"], 2, start)
+    return loss + aux
+
+
+# =========================================================================
+# Decode (serve_step): one token against a cache of length cache_len
+# =========================================================================
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      dtype=None) -> Params:
+    dtype = dtype or nn.dtype_of(cfg.compute_dtype)
+    pre, bp, bg, mp, mg = cfg._resolved_program()
+
+    def stack(tree, n):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy()
+            if hasattr(a, "shape") else a,
+            tree,
+        )
+
+    cache: Params = {}
+    if pre:
+        cache["prefix"] = {
+            f"l{i}": init_layer_cache(cfg, s, batch, cache_len, dtype)
+            for i, s in enumerate(pre)
+        }
+    if bg:
+        one = {
+            f"l{i}": init_layer_cache(cfg, s, batch, cache_len, dtype)
+            for i, s in enumerate(bp)
+        }
+        cache["base"] = stack(one, bg)
+    if mg:
+        one = {
+            f"l{i}": init_layer_cache(cfg, s, batch, cache_len, dtype)
+            for i, s in enumerate(mp)
+        }
+        cache["mod"] = stack(one, mg)
+    return cache
+
+
+def build_cross_caches(params: Params, cfg: ModelConfig, enc_out) -> Params:
+    """Precompute encoder K/V for every cross-attn layer."""
+    pre, bp, bg, mp, mg = cfg._resolved_program()
+    out: Params = {}
+    if pre:
+        out["prefix"] = {
+            f"l{i}": cross_attn_cache(
+                params["base"]["prefix"][f"l{i}"]["cross"], cfg, enc_out
+            )
+            for i, s in enumerate(pre)
+            if s.cross_attn
+        }
+    if bg and any(s.cross_attn for s in bp):
+        def per_group(gp):
+            return {
+                f"l{i}": cross_attn_cache(gp[f"l{i}"]["cross"], cfg, enc_out)
+                for i, s in enumerate(bp)
+                if s.cross_attn
+            }
+
+        out["base"] = jax.vmap(per_group, in_axes=0)(params["base"]["groups"])
+    return out
+
+
+def lm_decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                   token: jnp.ndarray, pos: jnp.ndarray,
+                   cross_kvs: Optional[Params] = None):
+    """token: (B, 1) int32; pos: scalar int32 index of this token.
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    pre, bp, bg, mp, mg = cfg._resolved_program()
+    B = token.shape[0]
+    cdt = nn.dtype_of(cfg.compute_dtype)
+    x = nn.embedding(params["base"]["embed"], token, compute_dtype=cdt)
+    if cfg.rope_type == "mrope":
+        # Text continuation: all three M-RoPE axes share the running id.
+        n_img = cfg.num_image_tokens
+        grid = max(1, int(n_img**0.5)) if n_img else 0
+        tid = jnp.maximum(pos - n_img, 0) + grid
+        positions = jnp.broadcast_to(tid[None, None], (B, 1)).astype(jnp.int32)
+        positions = jnp.stack([positions] * 3)
+    else:
+        positions = None
+
+    new_cache: Params = {}
+    if pre:
+        new_cache["prefix"] = {}
+        for i, spec in enumerate(pre):
+            ckv = None
+            if spec.cross_attn and cross_kvs is not None:
+                ckv = cross_kvs["prefix"][f"l{i}"]
+            x, new_cache["prefix"][f"l{i}"] = decode_layer(
+                params["base"]["prefix"][f"l{i}"], cfg, spec, x,
+                cache["prefix"][f"l{i}"], pos, positions, ckv,
+            )
+    if bg:
+        x, new_cache["base"] = decode_scan_groups(
+            params["base"]["groups"], cache["base"], cfg, bp, x, pos,
+            positions, None if cross_kvs is None else cross_kvs.get("base"),
+        )
+    z = nn.linear(params["base"]["fusion_in"], x).astype(cdt)
+    x = nn.linear(params["modular"]["fusion_out"], z)
+    if mg:
+        x, new_cache["mod"] = decode_scan_groups(
+            params["modular"]["groups"], cache["mod"], cfg, mp, x, pos,
+            positions, None,
+        )
+    x = nn.apply_norm(params["modular"]["final_norm"], x, cfg.norm)
+    logits = nn.linear(params["modular"]["lm_head"], x).astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits, new_cache

@@ -1,0 +1,304 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory)
+[arXiv:2405.04517].
+
+mLSTM train/prefill uses the chunkwise-parallel form — quadratic attention
+*within* a chunk, recurrent (C, n, m) state *across* chunks — with the
+log-space stabilizer from the paper, so neither the (S, S) decay matrix
+nor the per-step (dk, dv) states are ever materialized for the full
+sequence. Decode is the O(1) recurrent update (this is what makes
+xlstm-350m runnable at long_500k).
+
+sLSTM has no parallel form (recurrent weights break associativity); it is
+a ``lax.scan`` over time, exactly as the paper computes it.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import modules as nn
+
+
+def _logsig(x):
+    return -jax.nn.softplus(-x)
+
+
+# =========================================================================
+# mLSTM
+# =========================================================================
+
+
+def init_mlstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d  # projection factor 2 (paper block design)
+    dqk = di // 2
+    nh = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up": nn.init_linear(ks[0], d, 2 * di),
+        "conv_w": jax.random.normal(ks[1], (4, di)) * 0.2,
+        "conv_b": jnp.zeros((di,)),
+        "wq": nn.init_linear(ks[2], di, dqk),
+        "wk": nn.init_linear(ks[3], di, dqk),
+        "wv": nn.init_linear(ks[4], di, di),
+        "w_if": nn.init_linear(ks[5], di, 2 * nh, bias=True),
+        "skip": jnp.ones((di,)),
+        "out_norm": nn.init_norm(ks[6], di, "rmsnorm"),
+        "down": nn.init_linear(ks[7], di, d),
+    }
+
+
+def _conv_silu(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, k : k + x.shape[1], :] * w[k].astype(x.dtype) for k in range(K))
+    return jax.nn.silu(out + b.astype(x.dtype))
+
+
+def _mlstm_qkvif(p, cfg: ModelConfig, x):
+    """x: (B, S, d) -> per-head q,k,v and gate preacts."""
+    B, S, _ = x.shape
+    di = cfg.ssm_expand * cfg.d_model
+    nh = cfg.num_heads
+    u = nn.linear(p["up"], x)
+    xm, z = u[..., :di], u[..., di:]
+    xc = _conv_silu(xm, p["conv_w"], p["conv_b"])
+    dqk_h = (di // 2) // nh
+    dv_h = di // nh
+    q = nn.linear(p["wq"], xc).reshape(B, S, nh, dqk_h)
+    k = nn.linear(p["wk"], xc).reshape(B, S, nh, dqk_h) / jnp.sqrt(
+        jnp.array(dqk_h, x.dtype)
+    )
+    v = nn.linear(p["wv"], xm).reshape(B, S, nh, dv_h)
+    gates = nn.linear(p["w_if"], xm).astype(jnp.float32)  # (B,S,2nh)
+    li = gates[..., :nh]  # input gate preact (exp gating)
+    lf = _logsig(gates[..., nh:])  # log forget gate
+    return q, k, v, li, lf, z, xc
+
+
+def _mlstm_chunk(carry, inp):
+    """One chunk of the chunkwise-parallel mLSTM.
+
+    carry: C (B,H,dk,dv), n (B,H,dk), m (B,H)
+    inp: q,k,v (L,B,H,*), li,lf (L,B,H)
+    """
+    C, n_state, m = carry
+    q, k, v, li, lf = inp
+    L = q.shape[0]
+    b = jnp.cumsum(lf, axis=0)  # (L,B,H) inclusive log-decay within chunk
+    btot = b[-1]
+
+    # Intra-chunk decay matrix D[j,l] = b_j - b_l + li_l  (l <= j).
+    D = b[:, None] - b[None, :] + li[None, :]  # (L,L,B,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    D = jnp.where(tri[:, :, None, None], D, -jnp.inf)
+    m_intra = jnp.max(D, axis=1)  # (L,B,H)
+    m_inter = b + m[None]  # decayed previous stabilizer
+    m_j = jnp.maximum(m_inter, m_intra)  # (L,B,H)
+
+    S_w = jnp.exp(D - m_j[:, None])  # (L,L,B,H) stabilized decay weights
+    qk = jnp.einsum("jbhd,lbhd->jlbh", q.astype(jnp.float32), k.astype(jnp.float32))
+    A = qk * S_w  # masked by S_w's -inf -> 0
+    num = jnp.einsum("jlbh,lbhv->jbhv", A, v.astype(jnp.float32))
+    den = jnp.sum(A, axis=1)  # (L,B,H)
+
+    inter_scale = jnp.exp(m_inter - m_j)  # (L,B,H)
+    num = num + inter_scale[..., None] * jnp.einsum(
+        "jbhd,bhdv->jbhv", q.astype(jnp.float32), C
+    )
+    den = den + inter_scale * jnp.einsum("jbhd,bhd->jbh", q.astype(jnp.float32), n_state)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_j))[..., None]  # (L,B,H,dv)
+
+    # State update to chunk end.
+    w_l = btot[None] - b + li  # (L,B,H) log-weight of each token in new state
+    m_next = jnp.maximum(btot + m, jnp.max(w_l, axis=0))
+    kw = jnp.exp(w_l - m_next[None])[..., None] * k.astype(jnp.float32)
+    C_next = jnp.exp(btot + m - m_next)[..., None, None] * C + jnp.einsum(
+        "lbhd,lbhv->bhdv", kw, v.astype(jnp.float32)
+    )
+    n_next = jnp.exp(btot + m - m_next)[..., None] * n_state + jnp.sum(kw, axis=0)
+    return (C_next, n_next, m_next), h
+
+
+def mlstm_forward(p, cfg: ModelConfig, x):
+    """x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    nh = cfg.num_heads
+    di = cfg.ssm_expand * d
+    q, k, v, li, lf, z, xc = _mlstm_qkvif(p, cfg, x)
+    L = min(cfg.mlstm_chunk, S)
+    nck = S // L
+    assert nck * L == S, f"seq {S} % mlstm_chunk {L} != 0"
+
+    def to_chunks(a):  # (B,S,H,*) -> (nck, L, B, H, *)
+        a = a.reshape((B, nck, L) + a.shape[2:])
+        return jnp.moveaxis(a, 0, 2)
+
+    dqk_h = (di // 2) // nh
+    dv_h = di // nh
+    carry = (
+        jnp.zeros((B, nh, dqk_h, dv_h), jnp.float32),
+        jnp.zeros((B, nh, dqk_h), jnp.float32),
+        jnp.full((B, nh), -jnp.inf, jnp.float32),
+    )
+    _, hs = jax.lax.scan(
+        _mlstm_chunk,
+        carry,
+        (to_chunks(q), to_chunks(k), to_chunks(v),
+         jnp.moveaxis(li.reshape(B, nck, L, nh), 0, 2),
+         jnp.moveaxis(lf.reshape(B, nck, L, nh), 0, 2)),
+    )  # (nck, L, B, H, dv)
+    h = jnp.moveaxis(hs, 2, 0).reshape(B, S, di).astype(x.dtype)
+    h = nn.apply_norm(p["out_norm"], h, "rmsnorm")
+    h = h + xc * p["skip"].astype(x.dtype)  # learnable skip of conv path
+    h = h * jax.nn.silu(z)
+    return nn.linear(p["down"], h)
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype):
+    del dtype  # state kept in fp32 for gate stability
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    nh = cfg.num_heads
+    return {
+        "mlstm_C": jnp.zeros((batch, nh, (di // 2) // nh, di // nh), jnp.float32),
+        "mlstm_n": jnp.zeros((batch, nh, (di // 2) // nh), jnp.float32),
+        "mlstm_m": jnp.full((batch, nh), -jnp.inf, jnp.float32),
+        "mlstm_conv": jnp.zeros((batch, 3, di), jnp.float32),
+    }
+
+
+def mlstm_decode(p, cfg: ModelConfig, x, cache):
+    """x: (B, 1, d). O(1) recurrent step."""
+    B = x.shape[0]
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    nh = cfg.num_heads
+    u = nn.linear(p["up"], x)
+    xm, z = u[..., :di], u[..., di:]
+    window = jnp.concatenate([cache["mlstm_conv"].astype(x.dtype), xm], axis=1)
+    xc = jnp.sum(window * p["conv_w"].astype(x.dtype)[None], axis=1, keepdims=True)
+    xc = jax.nn.silu(xc + p["conv_b"].astype(x.dtype))
+    dqk_h = (di // 2) // nh
+    q = nn.linear(p["wq"], xc).reshape(B, nh, dqk_h).astype(jnp.float32)
+    k = nn.linear(p["wk"], xc).reshape(B, nh, dqk_h).astype(jnp.float32)
+    k = k / jnp.sqrt(jnp.array(dqk_h, jnp.float32))
+    v = nn.linear(p["wv"], xm).reshape(B, nh, di // nh).astype(jnp.float32)
+    gates = nn.linear(p["w_if"], xm)[:, 0].astype(jnp.float32)
+    li, lf = gates[..., :nh], _logsig(gates[..., nh:])
+
+    m_new = jnp.maximum(lf + cache["mlstm_m"], li)
+    dec = jnp.exp(lf + cache["mlstm_m"] - m_new)
+    inp = jnp.exp(li - m_new)
+    C = dec[..., None, None] * cache["mlstm_C"] + inp[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n_state = dec[..., None] * cache["mlstm_n"] + inp[..., None] * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, C)
+    den = jnp.einsum("bhd,bhd->bh", q, n_state)
+    h = (num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]).reshape(B, 1, di)
+    h = nn.apply_norm(p["out_norm"], h.astype(x.dtype), "rmsnorm")
+    h = h + xc * p["skip"].astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    y = nn.linear(p["down"], h)
+    return y, {"mlstm_C": C, "mlstm_n": n_state, "mlstm_m": m_new,
+               "mlstm_conv": window[:, 1:].astype(jnp.float32)}
+
+
+# =========================================================================
+# sLSTM
+# =========================================================================
+
+
+def init_slstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    nh = cfg.num_heads
+    hd = d // nh
+    ks = jax.random.split(key, 4)
+    wx = jax.random.normal(ks[0], (4, d, d)) / jnp.sqrt(jnp.array(d, jnp.float32))
+    wr = jax.random.normal(ks[1], (4, nh, hd, hd)) / jnp.sqrt(
+        jnp.array(hd, jnp.float32)
+    )
+    dff = (8 * d // 3 + 63) // 64 * 64  # gated FFN, pf ~4/3 * 2
+    return {
+        "wx": wx,  # (4:[z,i,f,o], d, d)
+        "wr": wr,  # block-diagonal recurrent weights per head
+        "b": jnp.zeros((4, d)),
+        "gn": nn.init_norm(ks[2], d, "rmsnorm"),
+        "ffn": {
+            "w_gate": nn.init_linear(ks[3], d, dff),
+            "w_up": nn.init_linear(jax.random.fold_in(ks[3], 1), d, dff),
+            "w_down": nn.init_linear(jax.random.fold_in(ks[3], 2), dff, d),
+        },
+    }
+
+
+def _slstm_step(p, cfg: ModelConfig, carry, xt):
+    """carry: (c, n, m, h) each (B, d); xt: (B, d)."""
+    nh = cfg.num_heads
+    B, d = xt.shape
+    hd = d // nh
+    c, n_s, m, h = carry
+    hx = h.reshape(B, nh, hd)
+    rec = jnp.einsum("bnh,gnhk->gbnk", hx, p["wr"].astype(xt.dtype)).reshape(4, B, d)
+    pre = (
+        jnp.einsum("bd,gdk->gbk", xt, p["wx"].astype(xt.dtype))
+        + rec
+        + p["b"].astype(xt.dtype)[:, None]
+    ).astype(jnp.float32)
+    zt = jnp.tanh(pre[0])
+    li = pre[1]
+    lf = _logsig(pre[2])
+    ot = jax.nn.sigmoid(pre[3])
+    m_new = jnp.maximum(lf + m, li)
+    c_new = jnp.exp(lf + m - m_new) * c + jnp.exp(li - m_new) * zt
+    n_new = jnp.exp(lf + m - m_new) * n_s + jnp.exp(li - m_new)
+    h_new = (ot * c_new / jnp.maximum(n_new, 1e-6)).astype(xt.dtype)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_forward(p, cfg: ModelConfig, x):
+    """x: (B, S, d). Strictly sequential scan over time."""
+    B, S, d = x.shape
+    carry = (
+        jnp.zeros((B, d), jnp.float32),
+        jnp.zeros((B, d), jnp.float32),
+        jnp.full((B, d), -jnp.inf, jnp.float32),
+        jnp.zeros((B, d), x.dtype),
+    )
+    (_, _, _, _), hs = jax.lax.scan(
+        lambda c, xt: _slstm_step(p, cfg, c, xt), carry, jnp.moveaxis(x, 1, 0)
+    )
+    h = jnp.moveaxis(hs, 0, 1)
+    h = nn.apply_norm(p["gn"], h, "rmsnorm")
+    f = p["ffn"]
+    y = nn.linear(
+        f["w_down"], jax.nn.gelu(nn.linear(f["w_gate"], h)) * nn.linear(f["w_up"], h)
+    )
+    return y
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    return {
+        "slstm_c": jnp.zeros((batch, d), jnp.float32),
+        "slstm_n": jnp.zeros((batch, d), jnp.float32),
+        "slstm_m": jnp.full((batch, d), -jnp.inf, jnp.float32),
+        "slstm_h": jnp.zeros((batch, d), dtype),
+    }
+
+
+def slstm_decode(p, cfg: ModelConfig, x, cache):
+    carry = (cache["slstm_c"], cache["slstm_n"], cache["slstm_m"], cache["slstm_h"])
+    carry, h = _slstm_step(p, cfg, carry, x[:, 0])
+    h = nn.apply_norm(p["gn"], h[:, None], "rmsnorm")
+    f = p["ffn"]
+    y = nn.linear(
+        f["w_down"], jax.nn.gelu(nn.linear(f["w_gate"], h)) * nn.linear(f["w_up"], h)
+    )
+    return y, {"slstm_c": carry[0], "slstm_n": carry[1],
+               "slstm_m": carry[2], "slstm_h": carry[3]}

@@ -1,0 +1,8 @@
+from repro.optim.optim import (  # noqa: F401
+    sgd_init,
+    sgd_update,
+    adamw_init,
+    adamw_update,
+    make_optimizer,
+    cosine_schedule,
+)

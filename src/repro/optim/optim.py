@@ -1,0 +1,113 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+SGD is the paper-faithful optimizer (eqs. 3/7/9 are plain SGD) and also
+the only one whose state fits the 400B+ archs without extra memory;
+AdamW is the framework-grade option for the smaller archs. Both operate
+on arbitrary param pytrees, so the IFL base/modular split is handled by
+simply passing the relevant subtree.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------- SGD
+
+
+def sgd_init(params, momentum: float = 0.0):
+    if momentum == 0.0:
+        return {}
+    return {"mu": jax.tree.map(jnp.zeros_like, params)}
+
+
+def sgd_update(params, grads, state, *, lr, momentum: float = 0.0,
+               weight_decay: float = 0.0):
+    if weight_decay:
+        grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+    if momentum == 0.0:
+        new_params = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                                  params, grads)
+        return new_params, state
+    mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+    new_params = jax.tree.map(lambda p, m: p - lr * m.astype(p.dtype), params, mu)
+    return new_params, {"mu": mu}
+
+
+# ----------------------------------------------------------------- AdamW
+
+
+def adamw_init(params):
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {"m": zeros(), "v": zeros(), "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.0):
+    step = state["step"] + 1
+    m = jax.tree.map(
+        lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+        state["m"], grads,
+    )
+    v = jax.tree.map(
+        lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state["v"], grads,
+    )
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "step": step}
+
+
+# ----------------------------------------------------------------- factory
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]  # (params, grads, state, lr=...)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "sgd":
+        mom = kw.get("momentum", 0.0)
+        return Optimizer(
+            init=lambda p: sgd_init(p, mom),
+            update=lambda p, g, s, lr: sgd_update(
+                p, g, s, lr=lr, momentum=mom,
+                weight_decay=kw.get("weight_decay", 0.0),
+            ),
+        )
+    if name == "adamw":
+        return Optimizer(
+            init=adamw_init,
+            update=lambda p, g, s, lr: adamw_update(
+                p, g, s, lr=lr,
+                b1=kw.get("b1", 0.9), b2=kw.get("b2", 0.95),
+                weight_decay=kw.get("weight_decay", 0.0),
+            ),
+        )
+    raise ValueError(name)
+
+
+# ----------------------------------------------------------------- schedule
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr_at(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(math.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr_at

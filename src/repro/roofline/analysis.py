@@ -1,0 +1,171 @@
+"""Three-term roofline from a compiled dry-run artifact (deliverable g).
+
+    compute    = HLO_FLOPs_total   / (chips * peak_FLOPs)
+    memory     = HLO_bytes_total   / (chips * HBM_bw)
+    collective = link_bytes_total  / (chips * link_bw)
+
+Sources: ``compiled.cost_analysis()`` for FLOPs / bytes (XLA reports
+per-partition numbers post-SPMD; we scale by chip count for the totals),
+and the post-SPMD HLO text for collective traffic — cost_analysis does
+not model collectives at all. Per-op link bytes use the ring model on
+per-partition shard shapes (the shapes printed in partitioned HLO):
+
+    all-gather       out_bytes * (g-1)/g        (recv volume per chip)
+    all-reduce       2 * bytes * (g-1)/g        (reduce-scatter + gather)
+    reduce-scatter   out_bytes * (g-1)          (input = out * g)
+    all-to-all       bytes * (g-1)/g
+    collective-permute  bytes                   (one hop)
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12  # bf16 / chip
+    hbm_bw: float = 819e9  # bytes/s / chip
+    link_bw: float = 50e9  # bytes/s / link (ICI)
+
+
+HW = Hardware()
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# result types like: bf16[4,64,512]{2,1,0} or tuple (f32[8], f32[8])
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [n_groups, group_size] <= [n]
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    return 2  # conservative default when groups are implicit
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Per-chip link bytes by collective kind, from partitioned HLO."""
+    out: Dict[str, float] = {
+        "all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+        "all-to-all": 0.0, "collective-permute": 0.0,
+    }
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(type_str)
+        g = _group_size(line)
+        if kind == "all-gather":
+            out[kind] += b * (g - 1) / g
+        elif kind == "all-reduce":
+            out[kind] += 2 * b * (g - 1) / g
+        elif kind == "reduce-scatter":
+            out[kind] += b * (g - 1)
+        elif kind == "all-to-all":
+            out[kind] += b * (g - 1) / g
+        else:  # collective-permute
+            out[kind] += b
+    out["total"] = sum(out.values())
+    return out
+
+
+def roofline_terms(cost: Dict[str, float], coll_bytes_per_chip: float,
+                   n_chips: int, hw: Hardware = HW,
+                   model_flops_total: Optional[float] = None) -> Dict:
+    """cost: compiled.cost_analysis() (per-partition numbers)."""
+    flops_pp = float(cost.get("flops", 0.0))
+    bytes_pp = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops_pp / hw.peak_flops
+    t_memory = bytes_pp / hw.hbm_bw
+    t_coll = coll_bytes_per_chip / hw.link_bw
+    terms = {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "hlo_flops_total": flops_pp * n_chips,
+        "hlo_bytes_total": bytes_pp * n_chips,
+        "collective_bytes_total": coll_bytes_per_chip * n_chips,
+        "n_chips": n_chips,
+    }
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    terms["dominant"] = dom.replace("_s", "")
+    step = max(t_compute, t_memory, t_coll)
+    terms["bound_step_s"] = step
+    if model_flops_total is not None:
+        terms["model_flops_total"] = model_flops_total
+        terms["useful_flops_ratio"] = (
+            model_flops_total / max(terms["hlo_flops_total"], 1.0)
+        )
+        # MFU if the step ran at the roofline-bound time.
+        terms["mfu_bound"] = model_flops_total / (
+            max(step, 1e-12) * n_chips * hw.peak_flops
+        )
+    return terms
+
+
+# ------------------------------------------------------------ model flops
+
+
+def model_flops(kind: str, *, params_base: float, params_mod: float,
+                params_embed: float = 0.0, tokens: float,
+                tau: int = 0, n_clients: int = 0) -> float:
+    """Analytic 'useful' FLOPs (the 6·N·D convention; N = active params).
+
+    kind:
+      'dp_train'  — 6·N·D.
+      'ifl_round' — base phase: τ steps of fwd(full) + bwd(base) =
+                    τ·(2(Nb+Nm) + 4Nb)·D_c summed over clients; fusion
+                    fwd pass 2·Nb·D_c; modular phase: each client trains
+                    on ALL N·D_c tokens: 6·Nm·N·D_c per client.
+      'prefill'   — 2·N·D.
+      'decode'    — 2·N·D (D = batch tokens for one step).
+    D/tokens = global tokens for the step; D_c = tokens per client.
+    """
+    N = params_base + params_mod
+    if kind == "dp_train":
+        return 6.0 * N * tokens
+    if kind == "prefill" or kind == "decode":
+        return 2.0 * N * tokens
+    if kind == "ifl_round":
+        dc = tokens / max(n_clients, 1)
+        base_phase = n_clients * tau * (2 * N + 4 * params_base) * dc
+        fusion = n_clients * 2 * params_base * dc
+        modular = n_clients * 6 * params_mod * (n_clients * dc)
+        return base_phase + fusion + modular
+    raise ValueError(kind)

@@ -1,0 +1,271 @@
+"""Trip-count-aware roofline accounting from post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, not
+×trip-count (verified empirically: a scanned 8-step matmul reports 1/8 of
+the unrolled FLOPs). Every layer stack in this framework is a scan — as
+are the τ-local-step loop, attention query blocks, Mamba/mLSTM chunks —
+so raw cost_analysis undercounts big models by 1-2 orders of magnitude,
+and the same text-level blindness hits collective bytes.
+
+This module re-derives the three roofline inputs from ``compiled.as_text()``:
+
+  1. Parse computations and the call graph (while body/condition,
+     fusion ``calls=``, ``to_apply=``, conditional branches).
+  2. Infer each while's trip count from the largest s32 constant in its
+     condition computation (jax scans lower to ``i < N``).
+  3. Propagate execution multipliers (products of enclosing trip counts).
+  4. FLOPs: every ``dot`` op contributes 2·prod(result)·prod(contracted)
+     × multiplier. (Matmul-dominated models; elementwise flops are noise
+     at roofline granularity.) ``convolution`` handled analogously.
+  5. HBM bytes: post-fusion top-level ops read operands and write results
+     once per execution — sum (operands + result) sizes × multiplier for
+     materializing ops, skipping free ops (bitcast/tuple/gte/parameter)
+     and the *insides* of fusion subcomputations (the fusion op already
+     accounts for them).
+  6. Collectives: per-kind ring-model link bytes × multiplier.
+
+Shard shapes in partitioned HLO are per-device, so all outputs are
+per-chip numbers.
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\-.]+)\s*\(.*\)\s*->.*\{\s*$")
+# result types may contain '=' inside /*index=N*/ comments, so match the
+# op kind as the first bare `word(` token after the type.
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\-.]+)\s*=\s*(.*?)\s([\w\-]+)\((.*)$"
+)
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_WHILE_ATTR = re.compile(r"condition=%([\w\-.]+),\s*body=%([\w\-.]+)")
+_CALLS_ATTR = re.compile(r"(?:calls|to_apply)=%([\w\-.]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_S32 = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_OPERAND = re.compile(r"%([\w\-.]+)")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+_GROUPS_BRACE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_DOT_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+class _Op:
+    __slots__ = ("name", "rtype", "kind", "rest")
+
+    def __init__(self, name, rtype, kind, rest):
+        self.name, self.rtype, self.kind, self.rest = name, rtype, kind, rest
+
+
+def _parse_computations(text: str) -> Dict[str, List[_Op]]:
+    comps: Dict[str, List[_Op]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    comps["__entry__"] = comps[cur]
+                    entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            comps[cur].append(_Op(m.group(1), m.group(2), m.group(3),
+                                  m.group(4)))
+    comps["__entry_name__"] = entry  # type: ignore
+    return comps
+
+
+def _trip_count(cond_ops: List[_Op]) -> int:
+    best = 1
+    for op in cond_ops:
+        if op.kind == "constant":
+            m = re.match(r"(\d+)\)", op.rest)
+            if m and "s32[]" in op.rtype:
+                best = max(best, int(m.group(1)))
+        # constants may also hide in tiny compare fusions' text
+    return best
+
+
+def _group_size(rest: str) -> int:
+    m = _GROUPS_IOTA.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE.search(rest)
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    return 2
+
+
+def analyze_hlo(text: str) -> Dict:
+    comps = _parse_computations(text)
+    entry = comps.pop("__entry_name__", None)  # type: ignore
+    comps.pop("__entry__", None)
+
+    # name -> result type, for resolving dot operand shapes.
+    def_type: Dict[str, str] = {}
+    for ops in comps.values():
+        for op in ops:
+            def_type[op.name] = op.rtype
+
+    # Which computations are fusion-called (their ops don't touch HBM and
+    # their dots are counted via multiplier of the *caller* computation).
+    fusion_called = set()
+    for ops in comps.values():
+        for op in ops:
+            if op.kind == "fusion":
+                m = _CALLS_ATTR.search(op.rest)
+                if m:
+                    fusion_called.add(m.group(1))
+
+    # Multiplier propagation over the call graph.
+    mult: Dict[str, float] = defaultdict(float)
+    if entry is None or entry not in comps:
+        entry = next(iter(comps))
+    mult[entry] = 1.0
+    # topological-ish fixed point (call graph is a DAG).
+    for _ in range(64):
+        changed = False
+        for cname, ops in comps.items():
+            m0 = mult.get(cname, 0.0)
+            if m0 == 0.0:
+                continue
+            for op in ops:
+                targets: List[Tuple[str, float]] = []
+                if op.kind == "while":
+                    wm = _WHILE_ATTR.search(op.rest)
+                    if wm:
+                        cond, body = wm.group(1), wm.group(2)
+                        trip = _trip_count(comps.get(cond, []))
+                        targets.append((body, m0 * trip))
+                        targets.append((cond, m0 * (trip + 1)))
+                elif op.kind == "conditional":
+                    bm = _BRANCHES.search(op.rest)
+                    if bm:
+                        for t in _OPERAND.findall(bm.group(1)):
+                            targets.append((t, m0))
+                else:
+                    cm = _CALLS_ATTR.search(op.rest)
+                    if cm:
+                        targets.append((cm.group(1), m0))
+                for tgt, val in targets:
+                    if tgt in comps and mult.get(tgt, 0.0) < val:
+                        mult[tgt] = val
+                        changed = True
+        if not changed:
+            break
+
+    flops = 0.0
+    hbm = 0.0
+    coll = {k: 0.0 for k in _COLL_KINDS}
+    n_while = 0
+
+    for cname, ops in comps.items():
+        m0 = mult.get(cname, 0.0)
+        if m0 == 0.0:
+            continue
+        in_fusion = cname in fusion_called
+        for op in ops:
+            kind = op.kind
+            if kind == "while":
+                n_while += 1
+            # ---- FLOPs: dots & convs anywhere (incl. inside fusions).
+            if kind == "dot":
+                rdims = _shape_dims(op.rtype)
+                cd = _DOT_CDIMS.search(op.rest)
+                lhs_name = _OPERAND.search(op.rest)
+                csize = 1
+                if cd and lhs_name and lhs_name.group(1) in def_type:
+                    ldims = _shape_dims(def_type[lhs_name.group(1)])
+                    for idx in (cd.group(1).split(",") if cd.group(1) else []):
+                        i = int(idx)
+                        if i < len(ldims):
+                            csize *= ldims[i]
+                flops += m0 * 2.0 * math.prod(rdims or [1]) * csize
+            elif kind == "convolution":
+                rdims = _shape_dims(op.rtype)
+                # conservative: 2 * out_elems * (kernel elems) — resolve rhs
+                names = _OPERAND.findall(op.rest)
+                kelems = 1
+                if len(names) >= 2 and names[1] in def_type:
+                    kd = _shape_dims(def_type[names[1]])
+                    kelems = math.prod(kd or [1]) // max(rdims[-1] if rdims else 1, 1)
+                flops += m0 * 2.0 * math.prod(rdims or [1]) * max(kelems, 1)
+            # ---- collectives (top-level or in loop bodies; fusions never
+            # contain collectives).
+            for ck in _COLL_KINDS:
+                if kind == ck or kind == ck + "-start":
+                    b = _shape_bytes(op.rtype)
+                    g = _group_size(op.rest)
+                    if ck == "all-gather":
+                        coll[ck] += m0 * b * (g - 1) / g
+                    elif ck == "all-reduce":
+                        coll[ck] += m0 * 2 * b * (g - 1) / g
+                    elif ck == "reduce-scatter":
+                        coll[ck] += m0 * b * (g - 1)
+                    elif ck == "all-to-all":
+                        coll[ck] += m0 * b * (g - 1) / g
+                    else:
+                        coll[ck] += m0 * b
+                    break
+            # ---- HBM traffic: materializing top-level ops only.
+            if in_fusion or kind in _FREE_OPS or kind == "while" \
+                    or kind == "conditional" or kind.endswith("-done"):
+                continue
+            out_b = _shape_bytes(op.rtype)
+            in_b = 0
+            for oname in _OPERAND.findall(op.rest.split(", calls=")[0]
+                                          .split(", condition=")[0]):
+                if oname in def_type:
+                    in_b += _shape_bytes(def_type[oname])
+            hbm += m0 * (out_b + in_b)
+
+    coll_total = sum(coll.values())
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm,
+        "collectives": {**coll, "total": coll_total},
+        "n_while": n_while,
+    }

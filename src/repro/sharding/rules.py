@@ -1,0 +1,234 @@
+"""Logical-axis sharding rules: param-tree path -> PartitionSpec.
+
+Conventions (mesh axes: optional 'client', optional 'pod', 'data', 'model'):
+  - Column-parallel weights (d_model -> parallel): last dim on 'model'.
+  - Row-parallel weights (parallel -> d_model): first matmul dim on 'model'.
+  - MoE expert stacks: expert dim on 'model' (expert parallelism).
+  - Embedding/vocab: vocab dim on 'model'.
+  - FSDP (ZeRO-3-style, enabled per-arch when params/chip would not fit):
+    the *other* matmul dim additionally on 'data'; GSPMD inserts the
+    all-gather at use / reduce-scatter on grads.
+  - Stacked leading dims (layer groups, IFL client stacking) are prepended:
+    groups -> None (scan slices it), clients -> 'client'.
+  - 1-D leaves (norm scales, biases) are replicated: tiny, and replication
+    avoids collective churn inside every layer.
+
+The rules match on leaf *path names*, not positions, so new modules get
+sane defaults (largest divisible dim on 'model') without editing a table.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# name-pattern -> spec template over the trailing (matmul) dims.
+# 'M' = model axis, 'F' = fsdp axis (data, only when fsdp enabled), '-' = None.
+_RULES = [
+    # embeddings / heads
+    (r"embed/table$", ("M", "F")),
+    (r"lm_head/w$", ("F", "M")),
+    # attention (GQA + cross + qwen bias)
+    (r"(attn|cross)/w[qkv]/w$", ("F", "M")),
+    (r"(attn|cross)/w[qkv]/b$", ("M",)),
+    (r"(attn|cross)/wo/w$", ("M", "F")),
+    # MLA
+    (r"wq_a/w$", ("F", "-")),
+    (r"wq_b/w$", ("-", "M")),
+    (r"wkv_a/w$", ("F", "-")),
+    (r"wkv_b/w$", ("-", "M")),
+    # dense MLP
+    (r"ffn/w_(gate|up)/w$", ("F", "M")),
+    (r"ffn/w_down/w$", ("M", "F")),
+    # MoE: expert-parallel stacks + router
+    (r"moe/experts/w_(gate|up)/w$", ("M", "F", "-")),
+    (r"moe/experts/w_down/w$", ("M", "-", "F")),
+    (r"moe/router/w$", ("F", "-")),
+    (r"moe/shared/w_(gate|up)/w$", ("F", "M")),
+    (r"moe/shared/w_down/w$", ("M", "F")),
+    # mamba
+    (r"mamba/in_proj/w$", ("F", "M")),
+    (r"mamba/conv_[wb]$", ("-", "M")),
+    (r"mamba/x_proj/w$", ("M", "-")),
+    (r"mamba/dt_proj/w$", ("-", "M")),
+    (r"mamba/dt_proj/b$", ("M",)),
+    (r"mamba/a_log$", ("M", "-")),
+    (r"mamba/d_skip$", ("M",)),
+    (r"mamba/out_proj/w$", ("M", "F")),
+    # mlstm
+    (r"mlstm/up/w$", ("F", "M")),
+    (r"mlstm/conv_[wb]$", ("-", "M")),
+    (r"mlstm/w[qkv]/w$", ("M", "-")),
+    (r"mlstm/w_if/w$", ("M", "-")),
+    (r"mlstm/skip$", ("M",)),
+    (r"mlstm/down/w$", ("M", "F")),
+    # slstm: small scalar-memory block, replicate
+    (r"slstm/", ()),
+    # fusion interface: keep z model-sharded on d_fusion
+    (r"fusion_in/w$", ("F", "M")),
+    (r"fusion_out/w$", ("M", "F")),
+    (r"img_proj/w$", ("F", "M")),
+]
+
+
+def _leaf_spec(path: str, ndim: int, fsdp: bool):
+    # §Perf probe lever: vocab-sharded embedding tables force an SPMD
+    # gather that replicates (B, S, d) per device ("involuntary full
+    # rematerialization" warnings); REPRO_EMBED_SHARD=dmodel shards the
+    # table on d_model instead so the lookup stays local.
+    if re.search(r"embed/table$", path) and \
+            os.environ.get("REPRO_EMBED_SHARD") == "dmodel":
+        axes = [None, "model"]
+        return [None] * (ndim - 2) + axes
+    for pat, tmpl in _RULES:
+        if re.search(pat, path):
+            axes = []
+            for t in tmpl:
+                if t == "M":
+                    axes.append("model")
+                elif t == "F":
+                    axes.append("data" if fsdp else None)
+                else:
+                    axes.append(None)
+            # left-pad with Nones for stacked leading dims (layer groups).
+            pad = ndim - len(axes)
+            if pad < 0:  # conv_b matched a 2-dim template with 1-dim leaf
+                axes = axes[-ndim:] if ndim else []
+                pad = ndim - len(axes)
+            return [None] * pad + axes
+    if ndim <= 1:
+        return [None] * ndim
+    return [None] * ndim  # default: replicate (norms, small misc)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_pspecs(params, *, fsdp: bool = False, client_axis: bool = False):
+    """PartitionSpec pytree matching ``params``.
+
+    client_axis: params leaves carry a leading stacked client dim that
+    goes on the 'client' mesh axis (IFL stacked-client layout).
+    """
+
+    def spec_for(path, leaf):
+        p = _path_str(path)
+        ndim = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+        if client_axis:
+            axes = _leaf_spec(p, ndim - 1, fsdp)
+            return P("client", *axes)
+        return P(*_leaf_spec(p, ndim, fsdp))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def batch_pspec(batch, *, client_axis: bool = False, data_axes=("data",)):
+    """Shard every batch leaf's batch dim. Layouts:
+    client_axis: leading dim = clients -> 'client', next dim -> data.
+    """
+
+    def spec_for(path, leaf):
+        ndim = len(leaf.shape)
+        if client_axis:
+            # (N, [tau,] B, ...): client dim -> 'client', per-client batch
+            # dim -> data axes, tau (scanned) and trailing dims unsharded.
+            if ndim == 2:
+                return P("client", data_axes)
+            if ndim == 3:
+                return P("client", data_axes, None)
+            if ndim >= 4:  # (N, tau, B, ...trailing feature dims)
+                return P("client", None, data_axes, *([None] * (ndim - 3)))
+            return P("client", *([None] * (ndim - 1)))
+        if ndim == 0:
+            return P()
+        return P(data_axes, *([None] * (ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch)
+
+
+# Decode-cache rules: (regex, semantic_rank, tail builder). Leading dims
+# beyond the semantic rank are layer-group stacks -> None. Cache key names
+# are mixer-prefixed (ssm_/mlstm_/slstm_) so rules are unambiguous.
+def _cache_rules(seq_shard: bool):
+    b_ax = "data"
+    s_ax = "data" if seq_shard else None
+    if seq_shard:
+        b_ax = None  # batch ~1: context-parallel over the cache seq dim
+    return [
+        (r"/slot_pos$", 1, (None,)),
+        (r"/(k|v)$", 4, (b_ax, s_ax, "model", None)),  # (B, S, KVH, hd)
+        (r"/(ckv|krope)$", 3, (b_ax, s_ax, None)),  # MLA latent stream
+        (r"/ssm_h$", 3, (b_ax, "model", None)),  # (B, d_inner, d_state)
+        (r"/ssm_conv$", 3, (b_ax, None, "model")),  # (B, K-1, d_inner)
+        (r"/mlstm_C$", 4, (b_ax, None, None, "model")),  # (B, nh, dk, dv)
+        (r"/mlstm_n$", 3, (b_ax, None, "model")),
+        (r"/mlstm_m$", 2, (b_ax, None)),
+        (r"/mlstm_conv$", 3, (b_ax, None, "model")),
+        (r"/slstm_[cnmh]$", 2, (b_ax, "model")),  # (B, d)
+    ]
+
+
+def cache_pspecs(cache, *, seq_shard: bool = False):
+    """Decode-cache shardings: batch on 'data'; KV heads / state channels
+    on 'model'; optionally the cache sequence dim on 'data' (context-
+    parallel decode for batch~1 long-context). Axes that do not divide a
+    dim are dropped by the sanitizer in ``tree_shardings``."""
+    rules = _cache_rules(seq_shard)
+
+    def spec_for(path, leaf):
+        name = _path_str(path)
+        ndim = len(leaf.shape)
+        for pat, rank, tail in rules:
+            if re.search(pat, name):
+                lead = [None] * (ndim - rank)
+                return P(*lead, *tail)
+        return P(*([None] * ndim))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def sanitize_pspec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes that do not divide the corresponding dim (e.g.
+    batch=1 long-context decode, 4-head smoke models on a 16-way axis)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is None or i >= len(shape):
+            out.append(None if i >= len(shape) else ax)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        out.append(ax if shape[i] % n == 0 else None)
+    return P(*out[: len(shape)], *([None] * max(0, len(shape) - len(out))))
+
+
+def tree_shardings(mesh: Mesh, pspecs, shapes=None):
+    """NamedShardings for a pspec tree; if ``shapes`` (a matching tree of
+    arrays/structs) is given, every spec is divisibility-sanitized."""
+    if shapes is None:
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            pspecs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    return jax.tree.map(
+        lambda s, l: NamedSharding(mesh, sanitize_pspec(s, l.shape, mesh)),
+        pspecs,
+        shapes,
+        is_leaf=lambda x: isinstance(x, P),
+    )

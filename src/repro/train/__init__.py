@@ -1,0 +1,1 @@
+from repro.train.loop import train_ifl_lm, train_dp_lm  # noqa: F401

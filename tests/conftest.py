@@ -1,0 +1,10 @@
+import os
+
+# Tests must see the real single CPU device (the 512-device override is
+# exclusively for launch/dryrun.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")

@@ -1,0 +1,146 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), incl. hypothesis
+shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _key(i=0):
+    return jax.random.PRNGKey(i)
+
+
+# ------------------------------------------------------------ fusion_proj
+
+
+@given(
+    m=st.integers(1, 96),
+    k=st.sampled_from([32, 64, 432]),
+    n=st.sampled_from([16, 64, 128]),
+    act=st.sampled_from(["none", "relu", "silu"]),
+    bias=st.booleans(),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+)
+def test_fusion_proj_matches_ref(m, k, n, act, bias, dtype):
+    dt = jnp.dtype(dtype)
+    x = (jax.random.normal(_key(0), (m, k)) * 0.5).astype(dt)
+    w = (jax.random.normal(_key(1), (k, n)) * 0.1).astype(dt)
+    b = (jax.random.normal(_key(2), (n,)) * 0.1).astype(dt) if bias else None
+    got = ops.fusion_proj(x, w, b, act, interpret=True)
+    want = ref.fusion_proj_ref(x, w, b, act)
+    tol = 1e-5 if dtype == "float32" else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+def test_fusion_proj_batched_leading_dims():
+    x = jax.random.normal(_key(0), (2, 3, 64))
+    w = jax.random.normal(_key(1), (64, 32)) * 0.1
+    got = ops.fusion_proj(x, w, None, "none", interpret=True)
+    assert got.shape == (2, 3, 32)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(x @ w), atol=1e-5, rtol=1e-5
+    )
+
+
+# ------------------------------------------------------------ flash attn
+
+
+@given(
+    b=st.integers(1, 2),
+    h=st.sampled_from([1, 2, 4]),
+    kv_div=st.sampled_from([1, 2]),
+    s=st.sampled_from([64, 128, 192]),
+    hd=st.sampled_from([32, 64]),
+    window=st.sampled_from([-1, 16, 48]),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+)
+@settings(max_examples=12)
+def test_flash_attention_matches_ref(b, h, kv_div, s, hd, window, dtype):
+    if h % kv_div:
+        kv_div = 1
+    kvh = h // kv_div
+    dt = jnp.dtype(dtype)
+    q = jax.random.normal(_key(0), (b, h, s, hd)).astype(dt)
+    k = jax.random.normal(_key(1), (b, kvh, s, hd)).astype(dt)
+    v = jax.random.normal(_key(2), (b, kvh, s, hd)).astype(dt)
+    got = ops.flash_attention(q, k, v, causal=True, window=window,
+                              interpret=True)
+    g = h // kvh
+    want = ref.flash_attention_ref(
+        q, jnp.repeat(k, g, 1), jnp.repeat(v, g, 1),
+        causal=True, window=window,
+    )
+    tol = 2e-5 if dtype == "float32" else 4e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+def test_flash_attention_causality():
+    """Perturbing future keys/values must not change earlier outputs."""
+    q = jax.random.normal(_key(0), (1, 2, 128, 32))
+    k = jax.random.normal(_key(1), (1, 2, 128, 32))
+    v = jax.random.normal(_key(2), (1, 2, 128, 32))
+    base = ops.flash_attention(q, k, v, interpret=True)
+    k2 = k.at[:, :, 100:].add(10.0)
+    v2 = v.at[:, :, 100:].add(-5.0)
+    pert = ops.flash_attention(q, k2, v2, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(base[:, :, :100]), np.asarray(pert[:, :, :100]),
+        atol=1e-6,
+    )
+    assert not np.allclose(np.asarray(base[:, :, 100:]),
+                           np.asarray(pert[:, :, 100:]))
+
+
+def test_flash_attention_window_blocks_far_context():
+    """With window w, keys more than w positions back are invisible."""
+    s, w = 128, 16
+    q = jax.random.normal(_key(0), (1, 1, s, 32))
+    k = jax.random.normal(_key(1), (1, 1, s, 32))
+    v = jax.random.normal(_key(2), (1, 1, s, 32))
+    base = ops.flash_attention(q, k, v, window=w, interpret=True)
+    k2 = k.at[:, :, :64].add(7.0)  # far past for rows >= 64+w
+    pert = ops.flash_attention(q, k2, v, window=w, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(base[:, :, 64 + w :]), np.asarray(pert[:, :, 64 + w :]),
+        atol=1e-6,
+    )
+
+
+# ------------------------------------------------------------ rmsnorm
+
+
+@given(
+    m=st.integers(1, 64),
+    d=st.sampled_from([32, 256, 432]),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+)
+def test_rmsnorm_matches_ref(m, d, dtype):
+    dt = jnp.dtype(dtype)
+    x = (jax.random.normal(_key(0), (m, d)) * 2.0).astype(dt)
+    s = jax.random.normal(_key(1), (d,)).astype(dt)
+    got = ops.rmsnorm(x, s, interpret=True)
+    want = ref.rmsnorm_ref(x, s)
+    tol = 2e-5 if dtype == "float32" else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+def test_rmsnorm_scale_invariance():
+    """RMSNorm(a*x) == RMSNorm(x) for a > 0 (scale invariance)."""
+    x = jax.random.normal(_key(0), (16, 64))
+    s = jnp.ones((64,))
+    y1 = ops.rmsnorm(x, s, interpret=True)
+    y2 = ops.rmsnorm(3.7 * x, s, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)

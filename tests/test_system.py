@@ -1,0 +1,73 @@
+"""End-to-end behaviour tests for the IFL system."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import IFLConfig
+from repro.core import Client, IFLTrainer
+from repro.data import dirichlet_partition, make_synth_kmnist
+from repro.models.small import (
+    client_base_apply,
+    client_modular_apply,
+    init_client_model,
+    model_bytes,
+)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    """30 IFL rounds at the calibrated lr on a small shard — enough for
+    the system-level claims (incl. the slower conv clients) to become
+    measurable in CI time."""
+    tx, ty, ex, ey = make_synth_kmnist(4000, 1000)
+    cfg = IFLConfig(tau=10, batch_size=32, lr_base=0.05, lr_modular=0.05)
+    shards = dirichlet_partition(ty, 4, alpha=0.5, seed=0)
+    clients = [
+        Client(
+            cid=c, params=init_client_model(jax.random.PRNGKey(c), c),
+            base_apply=functools.partial(
+                lambda p, x, cc: client_base_apply({"base": p}, cc, x), cc=c),
+            modular_apply=functools.partial(
+                lambda p, z, cc: client_modular_apply({"modular": p}, cc, z),
+                cc=c),
+            data_x=tx[shards[c - 1]], data_y=ty[shards[c - 1]],
+        )
+        for c in [1, 2, 3, 4]
+    ]
+    tr = IFLTrainer(clients, cfg, seed=0)
+    acc0 = np.mean(tr.evaluate(ex, ey))
+    for _ in range(30):
+        tr.run_round()
+    return tr, acc0, (ex, ey)
+
+
+def test_training_improves_all_clients(trained):
+    """30-round CI regime: mean improves markedly and at least one client
+    reaches the >50% band (the 200-round benchmark reproduces the full
+    accuracy claims; this guards the training loop end-to-end)."""
+    tr, acc0, (ex, ey) = trained
+    accs = tr.evaluate(ex, ey)
+    assert np.mean(accs) > acc0 + 0.25, (acc0, accs)
+    assert min(accs) > 0.12  # conv clients move slowest but must move
+    assert max(accs) > 0.5
+
+
+def test_uplink_is_activation_sized(trained):
+    """30 rounds of IFL cost ~6.7MB uplink — not model-sized."""
+    tr, _, _ = trained
+    assert tr.ledger.uplink_mb < 10.0
+    fl_equiv = 30 * sum(model_bytes(c.params) for c in tr.clients) / 1e6
+    assert tr.ledger.uplink_mb < fl_equiv / 5
+
+
+def test_composition_matrix_consistent(trained):
+    """Cross compositions in the same accuracy regime as local ones."""
+    tr, _, (ex, ey) = trained
+    mat = tr.accuracy_matrix(ex[:1000], ey[:1000])
+    local = np.diag(mat).mean()
+    cross = mat[~np.eye(4, dtype=bool)].mean()
+    assert cross > local - 0.25  # same regime (tightens with training)
