@@ -1,8 +1,12 @@
 """Paper Fig. 2: test accuracy vs cumulative uplink communication (MB)
-for IFL (proposed), FSL, FL-1, FL-2.
+for IFL (proposed), FSL, FL-1, FL-2 — plus the compressed-IFL curves.
 
 Claim under test: IFL reaches ~90% at ~8.5 MB uplink while FSL is far
 lower at the same budget and FL variants cost orders of magnitude more.
+``--codec`` adds a compressed-IFL run (fusion payloads encoded with the
+named wire codec from repro.core.codec — bf16 | fp16 | int8 |
+int8_channel | int8_row | topk | topk<r>) next to the fp32 baseline,
+e.g. ``--codec int8`` cuts cumulative uplink ~4x at matched accuracy.
 Prints CSV: scheme,round,uplink_mb,accuracy.
 """
 
@@ -13,10 +17,16 @@ import argparse
 from benchmarks.paper_repro import run_scheme
 
 
-def run(rounds: int = 60, force: bool = False, quiet: bool = False):
+def run(rounds: int = 60, force: bool = False, quiet: bool = False,
+        codec: str = "fp32"):
     rows = []
-    for scheme in ["ifl", "fsl", "fl1", "fl2"]:
-        out = run_scheme(scheme, rounds, eval_every=max(1, rounds // 40), force=force)
+    schemes = ["ifl", "fsl", "fl1", "fl2"]
+    if codec != "fp32":
+        schemes.insert(1, f"ifl+{codec}")
+    for scheme in schemes:
+        base, _, cdc = scheme.partition("+")
+        out = run_scheme(base, rounds, eval_every=max(1, rounds // 40),
+                         codec=cdc or "fp32", force=force)
         for rec in out["records"]:
             rows.append((scheme, rec["round"], rec["uplink_mb"],
                          rec["acc_mean"]))
@@ -32,18 +42,37 @@ def headline(rows):
     ifl = [(mb, a) for s, _, mb, a in rows if s == "ifl"]
     budget = next((mb for mb, a in ifl if a >= 0.90), ifl[-1][0])
     out = {}
-    for scheme in ["ifl", "fsl", "fl1", "fl2"]:
+    for scheme in sorted({s for s, *_ in rows}):
         pts = [(mb, a) for s, _, mb, a in rows if s == scheme]
         under = [a for mb, a in pts if mb <= budget]
         out[scheme] = max(under) if under else pts[0][1]
     return budget, out
 
 
+def codec_headline(rows, codec: str):
+    """Compressed-IFL vs fp32 IFL at equal rounds: uplink ratio + final
+    accuracy delta (the acceptance numbers for the codec axis)."""
+    fp32 = {r: (mb, a) for s, r, mb, a in rows if s == "ifl"}
+    comp = {r: (mb, a) for s, r, mb, a in rows if s == f"ifl+{codec}"}
+    last = max(set(fp32) & set(comp))
+    ratio = fp32[last][0] / max(comp[last][0], 1e-12)
+    dacc = comp[last][1] - fp32[last][1]
+    return last, ratio, dacc
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--codec", default="fp32",
+                    help="wire codec for the compressed-IFL curve "
+                         "(fp32 = baseline only)")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
-    rows = run(args.rounds, args.force)
+    rows = run(args.rounds, args.force, codec=args.codec)
     budget, hl = headline(rows)
-    print(f"# at IFL-90%% uplink budget {budget:.2f} MB: {hl}")
+    print(f"# at IFL-90% uplink budget {budget:.2f} MB: {hl}")
+    if args.codec != "fp32":
+        last, ratio, dacc = codec_headline(rows, args.codec)
+        print(f"# ifl+{args.codec} @ round {last}: {ratio:.2f}x lower "
+              f"cumulative uplink than fp32 IFL, "
+              f"final acc delta {dacc*100:+.2f} pts")

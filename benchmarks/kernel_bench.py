@@ -1,6 +1,8 @@
 """Kernel micro-benchmarks: wall-time of the jnp reference path on CPU
 (this container's only runtime) plus the analytic TPU roofline estimate
-for the Pallas kernel at production tiles. Prints CSV:
+for the Pallas kernel at production tiles — including the fused
+projection+int8 wire-encode kernel (codec 'int8_row') vs the unfused
+project-then-quantize two-pass. Prints CSV:
 name,us_per_call,derived (derived = achieved CPU GFLOP/s | TPU-bound us).
 """
 
@@ -40,6 +42,30 @@ def run(quiet: bool = False):
                      (x.nbytes + w.nbytes + m * n * 4) / HW.hbm_bw) * 1e6
         rows.append((f"fusion_proj_{m}x{k}x{n}", us,
                      f"cpu {flops/us/1e3:.1f}GF/s | tpu-bound {tpu_us:.1f}us"))
+
+    # fused projection+int8 wire encode (codec 'int8_row') vs the unfused
+    # two-pass (project, then quantize). The fused epilogue never writes
+    # the fp32 (M, N) activation to HBM: output traffic drops from
+    # M*N*4 B to M*N*1 + M*4 B, on top of the matmul's input traffic.
+    for (m, k, n) in [(1024, 432, 432), (4096, 4096, 2048)]:
+        x = jax.random.normal(key, (m, k), jnp.float32)
+        w = jax.random.normal(key, (k, n), jnp.float32) * 0.02
+        b = jnp.zeros((n,))
+        f = jax.jit(lambda x, w, b: ref.fusion_proj_quant_ref(x, w, b, "silu"))
+        us = _time(f, x, w, b)
+        flops = 2 * m * k * n
+        out_fused = m * n * 1 + m * 4
+        tpu_us = max(flops / HW.peak_flops,
+                     (x.nbytes + w.nbytes + out_fused) / HW.hbm_bw) * 1e6
+        tpu_us_unfused = max(
+            flops / HW.peak_flops,
+            (x.nbytes + w.nbytes + m * n * 4) / HW.hbm_bw
+        ) * 1e6 + (m * n * 5 + m * 4) / HW.hbm_bw * 1e6  # + quant pass
+        rows.append((
+            f"fusion_proj_quant_{m}x{k}x{n}", us,
+            f"cpu {flops/us/1e3:.1f}GF/s | tpu-bound fused {tpu_us:.1f}us "
+            f"vs unfused {tpu_us_unfused:.1f}us",
+        ))
 
     # flash attention (ref path) at a serving-ish shape.
     b_, h, s, hd = 1, 8, 1024, 128

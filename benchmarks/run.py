@@ -25,6 +25,9 @@ def main() -> None:
                          "(paper uses 200; 40 keeps CPU runtime modest)")
     ap.add_argument("--skip-training", action="store_true",
                     help="only run cached/static benchmarks")
+    ap.add_argument("--codec", default="fp32",
+                    help="wire codec for a compressed-IFL Fig.-2 curve "
+                         "(repro.core.codec; fp32 = baseline only)")
     args = ap.parse_args()
     t0 = time.time()
 
@@ -42,10 +45,15 @@ def main() -> None:
         _section(f"fig2_comm_efficiency (paper Fig. 2, rounds={args.rounds})")
         from benchmarks import fig2_comm_efficiency
 
-        rows = fig2_comm_efficiency.run(args.rounds)
+        rows = fig2_comm_efficiency.run(args.rounds, codec=args.codec)
         budget, hl = fig2_comm_efficiency.headline(rows)
         print(f"# at IFL-90% uplink budget {budget:.2f} MB: "
               + ", ".join(f"{k}={v:.3f}" for k, v in hl.items()))
+        if args.codec != "fp32":
+            last, ratio, dacc = fig2_comm_efficiency.codec_headline(
+                rows, args.codec)
+            print(f"# ifl+{args.codec} @ round {last}: {ratio:.2f}x lower "
+                  f"uplink, acc delta {dacc*100:+.2f} pts")
 
         _section("fig3_heterogeneity (paper Fig. 3)")
         from benchmarks import fig3_heterogeneity

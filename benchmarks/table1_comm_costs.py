@@ -1,6 +1,7 @@
 """Paper Table I, quantified: per-round communication cost of each
 scheme at the paper's configuration (N=4, B=32, d_fusion=432), plus the
-feature matrix. Prints CSV: scheme,up_bytes,down_bytes,notes.
+feature matrix and the compressed-IFL wire codecs (repro.core.codec).
+Prints CSV: scheme,up_bytes,down_bytes,notes.
 """
 
 from __future__ import annotations
@@ -26,9 +27,16 @@ def run(quiet: bool = False):
     cfg = IFLConfig()
     m1 = model_bytes(init_client_model(jax.random.PRNGKey(0), 1))
     m2 = model_bytes(init_client_model(jax.random.PRNGKey(0), 2))
+    fp32_up = ifl_round_bytes(4, cfg.batch_size, cfg.d_fusion)["up"]
     rows = [
         ("ifl", ifl_round_bytes(4, cfg.batch_size, cfg.d_fusion),
          f"tau={cfg.tau} local steps amortized per upload"),
+    ]
+    for codec in ["bf16", "int8", "topk"]:
+        b = ifl_round_bytes(4, cfg.batch_size, cfg.d_fusion, codec=codec)
+        rows.append((f"ifl+{codec}", b,
+                     f"wire codec; {fp32_up / b['up']:.1f}x less uplink"))
+    rows += [
         ("fsl", fsl_round_bytes(4, cfg.batch_size, cfg.d_fusion),
          "1 update per round"),
         ("fl1", fl_round_bytes(4, m1), f"model={m1/1e6:.2f}MB (client 1)"),

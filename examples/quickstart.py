@@ -5,8 +5,13 @@ train on non-IID synthetic KMNIST while exchanging ONLY fusion-layer
 outputs, then compose each other's modular blocks at inference.
 
   PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py --codec int8   # ~4x less wire
+
+``--codec`` picks the fusion-payload wire format (repro.core.codec):
+fp32 (baseline) | bf16 | fp16 | int8 | int8_channel | int8_row | topk.
 """
 
+import argparse
 import functools
 
 import jax
@@ -22,10 +27,12 @@ from repro.models.small import (
 )
 
 
-def main():
-    print("== IFL quickstart: 4 heterogeneous vendors, synthetic KMNIST ==")
+def main(codec: str = "fp32"):
+    print(f"== IFL quickstart: 4 heterogeneous vendors, synthetic KMNIST, "
+          f"wire codec {codec} ==")
     tx, ty, ex, ey = make_synth_kmnist(6000, 1500)
-    cfg = IFLConfig(tau=10, batch_size=32, lr_base=0.05, lr_modular=0.05)
+    cfg = IFLConfig(tau=10, batch_size=32, lr_base=0.05, lr_modular=0.05,
+                    codec=codec)
     shards = dirichlet_partition(ty, cfg.n_clients, alpha=0.5, seed=0)
 
     clients = []
@@ -56,11 +63,18 @@ def main():
     print("\ncross-vendor composition matrix (eq. 11):")
     mat = trainer.accuracy_matrix(ex[:1000], ey[:1000])
     print(np.round(mat, 3))
-    exp = ifl_round_bytes(cfg.n_clients, cfg.batch_size, cfg.d_fusion)
+    exp = ifl_round_bytes(cfg.n_clients, cfg.batch_size, cfg.d_fusion,
+                          codec=codec)
     got = trainer.ledger.per_round[0]
     print(f"\nper-round bytes measured {got} == analytic {exp}: "
           f"{got['up'] == exp['up'] and got['down'] == exp['down']}")
+    if codec != "fp32":
+        fp32 = ifl_round_bytes(cfg.n_clients, cfg.batch_size, cfg.d_fusion)
+        print(f"wire saving vs fp32: {fp32['up'] / exp['up']:.2f}x uplink")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--codec", default="fp32",
+                    help="fusion-payload wire codec (see repro.core.codec)")
+    main(ap.parse_args().codec)

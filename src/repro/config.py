@@ -285,3 +285,4 @@ class IFLConfig:
     d_fusion: int = 432  # paper's standardized fusion output dim
     dirichlet_alpha: float = 0.5  # paper's non-IID concentration
     optimizer: str = "sgd"  # paper uses plain SGD
+    codec: str = "fp32"  # wire codec for z (see repro.core.codec)

@@ -2,6 +2,7 @@
 
 Submodules:
   comm        — communication ledgers + analytic per-round byte formulas
+  codec       — fusion-payload wire codecs (fp32/bf16/fp16/int8/topk)
   ifl         — the two-stage IFL algorithm (eager, heterogeneous clients)
   ifl_spmd    — IFL as a single SPMD train_step on the production mesh
   fl          — FedAvg baseline (paper's FL-1/FL-2)
@@ -14,6 +15,11 @@ from repro.core.comm import (  # noqa: F401
     ifl_round_bytes,
     fl_round_bytes,
     fsl_round_bytes,
+)
+from repro.core.codec import (  # noqa: F401
+    Codec,
+    available_codecs,
+    get_codec,
 )
 from repro.core.ifl import Client, IFLTrainer, composition_accuracy  # noqa: F401
 from repro.core.fl import FLTrainer  # noqa: F401

@@ -1,0 +1,283 @@
+"""Fusion-payload wire codecs — the compression layer of the IFL boundary.
+
+The only bytes that ever cross the client boundary are fusion-layer
+outputs ``(z_k, y_k)`` (Algorithm 1 lines 13-21). This module owns how
+``z`` is represented *on the wire*: a registry of codecs, each exposing
+
+  encode(z)                 -> payload   (a pytree of arrays; exactly the
+                                          bytes that would be transmitted)
+  decode(payload, shape=, dtype=) -> z_hat  (what the receiver trains on)
+  wire_bytes(payload)       -> int       (measured payload bytes)
+  encoded_nbytes(shape)     -> int       (analytic bytes for a z of
+                                          ``shape`` — must equal
+                                          wire_bytes(encode(z)) exactly,
+                                          so ledger parity holds per codec)
+
+Codecs:
+
+  fp32          identity (the paper's baseline wire format)
+  bf16 / fp16   half-precision cast (2x)
+  int8          per-tensor affine quantization, fp32 scale+zero sidecar (~4x)
+  int8_channel  per-channel affine (scale/zero per fusion feature)
+  int8_row      symmetric per-row absmax — the scheme the fused Pallas
+                kernel (`kernels.fusion_proj.fusion_proj_quant_pallas`)
+                produces directly from the projection epilogue
+  topk / topk<r>  magnitude top-k sparsification along the fusion dim,
+                int32 index sidecar (r = kept fraction, default 0.25)
+
+Every encode/decode is a shape-static pure function, so trainers can
+``jax.jit`` them (the SPMD trainer runs encode -> all-gather -> decode
+inside one jitted round step; the eager trainer jits them per client).
+Labels ride alongside uncompressed — they are int32 and already tiny.
+
+Registry is the extension point for future sketching / error-feedback
+(EF21-style residual) codecs: subclass ``Codec``, call ``register``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.comm import nbytes
+
+__all__ = [
+    "Codec",
+    "CODECS",
+    "get_codec",
+    "register",
+    "available_codecs",
+]
+
+
+class Codec:
+    """Base wire codec. Subclasses define the representation of z."""
+
+    name: str = "abstract"
+
+    def encode(self, z: jnp.ndarray):
+        raise NotImplementedError
+
+    def decode(self, payload, *, shape: Optional[Tuple[int, ...]] = None,
+               dtype=None) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def wire_bytes(self, payload) -> int:
+        """Measured bytes of an encoded payload — the same ``nbytes``
+        the CommLedger counts, so parity is by construction."""
+        return nbytes(payload)
+
+    def encoded_nbytes(self, shape: Tuple[int, ...]) -> int:
+        """Analytic wire bytes for a z of ``shape`` — exact, not estimated."""
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.name!r})"
+
+
+@dataclass(frozen=True, repr=False)
+class IdentityCodec(Codec):
+    """fp32 baseline: ship z exactly as produced — a true identity, so
+    the SPMD path keeps bf16 activations at their native width instead
+    of upcasting before the collective. ``encoded_nbytes`` models the
+    paper's fp32 wire format (the eager trainer's z is fp32)."""
+
+    name: str = "fp32"
+
+    def encode(self, z):
+        return {"z": z}
+
+    def decode(self, payload, *, shape=None, dtype=None):
+        z = payload["z"]
+        return z if dtype is None else z.astype(dtype)
+
+    def encoded_nbytes(self, shape):
+        return int(np.prod(shape)) * 4
+
+
+@dataclass(frozen=True, repr=False)
+class CastCodec(Codec):
+    """Lossy dtype cast (bf16 / fp16): 2x fewer wire bytes, no sidecar."""
+
+    name: str = "bf16"
+    wire_dtype: str = "bfloat16"
+
+    def encode(self, z):
+        return {"z": z.astype(jnp.dtype(self.wire_dtype))}
+
+    def decode(self, payload, *, shape=None, dtype=None):
+        return payload["z"].astype(dtype or jnp.float32)
+
+    def encoded_nbytes(self, shape):
+        return int(np.prod(shape)) * jnp.dtype(self.wire_dtype).itemsize
+
+
+@dataclass(frozen=True, repr=False)
+class Int8AffineCodec(Codec):
+    """Affine uint-style int8: q = round((z - min) / scale) - 128.
+
+    ``per_channel=False``: one fp32 (scale, zero) pair per tensor.
+    ``per_channel=True``:  one pair per fusion feature (last axis).
+    Round-trip error is bounded by scale/2 = (max - min) / 510.
+    """
+
+    name: str = "int8"
+    per_channel: bool = False
+
+    def _axes(self, ndim: int):
+        return tuple(range(ndim - 1)) if self.per_channel else None
+
+    def encode(self, z):
+        zf = z.astype(jnp.float32)
+        axes = self._axes(zf.ndim)
+        zmin = jnp.min(zf, axis=axes)
+        zmax = jnp.max(zf, axis=axes)
+        scale = jnp.maximum((zmax - zmin) / 255.0, 1e-12)
+        q = jnp.round((zf - zmin) / scale) - 128.0
+        q = jnp.clip(q, -128, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale.astype(jnp.float32),
+                "zero": zmin.astype(jnp.float32)}
+
+    def decode(self, payload, *, shape=None, dtype=None):
+        q = payload["q"].astype(jnp.float32)
+        z = (q + 128.0) * payload["scale"] + payload["zero"]
+        return z.astype(dtype or jnp.float32)
+
+    def encoded_nbytes(self, shape):
+        sidecar = (shape[-1] if self.per_channel else 1) * 2 * 4
+        return int(np.prod(shape)) * 1 + sidecar
+
+
+def quantize_rows_sym(y: jnp.ndarray):
+    """Symmetric per-row absmax int8: q = round(y / (absmax/127)).
+
+    THE single definition of the int8_row wire scheme — shared by
+    ``Int8RowCodec``, the jnp kernel oracle (``kernels.ref``), and the
+    fused Pallas epilogue (``kernels.fusion_proj``), so the three paths
+    cannot drift. -> (q int8, scale fp32 (..., 1))."""
+    yf = y.astype(jnp.float32)
+    scale = jnp.maximum(
+        jnp.max(jnp.abs(yf), axis=-1, keepdims=True) / 127.0, 1e-12
+    )
+    q = jnp.clip(jnp.round(yf / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+@dataclass(frozen=True, repr=False)
+class Int8RowCodec(Codec):
+    """Symmetric per-row absmax int8 (see ``quantize_rows_sym``).
+
+    One fp32 scale per row of the flattened (rows, d_fusion) view — the
+    exact scheme ``fusion_proj_quant_pallas`` emits from the fused
+    projection epilogue, so the TPU path can produce wire payloads with
+    zero extra HBM round-trips.
+    """
+
+    name: str = "int8_row"
+
+    def encode(self, z):
+        q, scale = quantize_rows_sym(z)
+        return {"q": q, "scale": scale}
+
+    def decode(self, payload, *, shape=None, dtype=None):
+        z = payload["q"].astype(jnp.float32) * payload["scale"]
+        return z.astype(dtype or jnp.float32)
+
+    def encoded_nbytes(self, shape):
+        rows = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+        return int(np.prod(shape)) * 1 + rows * 4
+
+
+@dataclass(frozen=True, repr=False)
+class TopKCodec(Codec):
+    """Magnitude top-k along the fusion dim; values fp32 + int32 indices.
+
+    Keeps ``ratio`` of the d_fusion features per sample (at least 1);
+    everything else decodes to exactly zero. Decode needs the original
+    ``shape`` (the payload only carries the kept entries).
+    """
+
+    name: str = "topk"
+    ratio: float = 0.25
+
+    def k_of(self, d: int) -> int:
+        return max(1, min(d, int(round(self.ratio * d))))
+
+    def encode(self, z):
+        zf = z.astype(jnp.float32)
+        d = zf.shape[-1]
+        k = self.k_of(d)
+        flat = zf.reshape(-1, d)
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        vals = jnp.take_along_axis(flat, idx, axis=-1)
+        lead = z.shape[:-1]
+        return {"values": vals.reshape(*lead, k),
+                "indices": idx.astype(jnp.int32).reshape(*lead, k)}
+
+    def decode(self, payload, *, shape=None, dtype=None):
+        vals, idx = payload["values"], payload["indices"]
+        if shape is None:
+            raise ValueError("topk decode requires the original z shape")
+        d = shape[-1]
+        k = vals.shape[-1]
+        rows = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+        flat = jnp.zeros((rows, d), jnp.float32)
+        r = jnp.arange(rows)[:, None]
+        flat = flat.at[r, idx.reshape(rows, k)].set(vals.reshape(rows, k))
+        return flat.reshape(shape).astype(dtype or jnp.float32)
+
+    def encoded_nbytes(self, shape):
+        rows = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+        return rows * self.k_of(shape[-1]) * (4 + 4)
+
+
+# ------------------------------------------------------------------ registry
+
+
+CODECS: Dict[str, Codec] = {}
+
+
+def register(codec: Codec) -> Codec:
+    CODECS[codec.name] = codec
+    return codec
+
+
+register(IdentityCodec())
+register(CastCodec("bf16", "bfloat16"))
+register(CastCodec("fp16", "float16"))
+register(Int8AffineCodec("int8", per_channel=False))
+register(Int8AffineCodec("int8_channel", per_channel=True))
+register(Int8RowCodec())
+register(TopKCodec())
+
+
+def available_codecs() -> Tuple[str, ...]:
+    return tuple(sorted(CODECS))
+
+
+def get_codec(codec: Union[str, Codec, None]) -> Codec:
+    """Resolve a codec name (or pass a Codec through).
+
+    ``topk<r>`` parameterizes the kept fraction, e.g. ``topk0.1``.
+    """
+    if codec is None:
+        return CODECS["fp32"]
+    if isinstance(codec, Codec):
+        return codec
+    if codec in CODECS:
+        return CODECS[codec]
+    if codec.startswith("topk"):
+        try:
+            ratio = float(codec[len("topk"):])
+        except ValueError:
+            ratio = None
+        if ratio is not None and 0.0 < ratio <= 1.0:
+            return TopKCodec(name=codec, ratio=ratio)
+    raise ValueError(
+        f"unknown codec {codec!r}; available: {available_codecs()} "
+        "(or 'topk<ratio>' e.g. topk0.1)"
+    )

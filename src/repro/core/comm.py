@@ -65,10 +65,21 @@ class CommLedger:
 
 
 def ifl_round_bytes(n_clients: int, batch: int, d_fusion: int,
-                    label_bytes: int = 4, act_bytes: int = 4) -> Dict[str, int]:
+                    label_bytes: int = 4, act_bytes: int = 4,
+                    codec=None) -> Dict[str, int]:
     """One IFL round: each client uploads (z_k, y_k); server broadcasts
-    (Z, Y) to all clients. Eq.-level match to Algorithm 1 lines 13-21."""
-    z = batch * d_fusion * act_bytes
+    (Z, Y) to all clients. Eq.-level match to Algorithm 1 lines 13-21.
+
+    ``codec`` (name or ``repro.core.codec.Codec``) switches z to its
+    compressed wire format; the formula stays exact — it is the codec's
+    own analytic ``encoded_nbytes``, so ledger parity holds per codec.
+    Labels always ride uncompressed (int32)."""
+    if codec is not None:
+        from repro.core.codec import get_codec
+
+        z = get_codec(codec).encoded_nbytes((batch, d_fusion))
+    else:
+        z = batch * d_fusion * act_bytes
     y = batch * label_bytes
     up = n_clients * (z + y)
     down = n_clients * n_clients * (z + y)  # each client receives all N

@@ -7,10 +7,15 @@ communication round t:
   1. Base-block update  — τ local SGD steps on θ_b only (eq. 7), modular
      frozen, client-local minibatches.
   2. Fusion exchange    — fresh minibatch -> z_k = f_b,k(x_k); client
-     uploads (z_k, y_k); server concatenates Z, Y and broadcasts (lines
-     13-21). The ledger records exactly these arrays' bytes.
-  3. Modular update     — N sequential SGD steps on θ_m, one per (z_i,
-     y_i) pair, as pseudocode lines 24-28 (the sequential form of eq. 9).
+     *encodes* z_k with the configured wire codec (cfg.codec: fp32 |
+     bf16 | fp16 | int8 | topk | ... — see repro.core.codec), uploads
+     (payload_k, y_k); server concatenates the encoded payloads and
+     broadcasts (lines 13-21). The ledger records exactly the encoded
+     payload bytes — compressed bytes are what cross the boundary.
+  3. Modular update     — N sequential SGD steps on θ_m, one per
+     (decode(payload_i), y_i) pair, as pseudocode lines 24-28 (the
+     sequential form of eq. 9). The learning signal sees the same
+     lossy z_hat every receiver would reconstruct.
 
 Nothing else ever crosses the client boundary: parameters, gradients and
 architectures stay private (Table I's last three rows).
@@ -27,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import IFLConfig
+from repro.core.codec import get_codec
 from repro.core.comm import CommLedger
 
 
@@ -58,6 +64,15 @@ class IFLTrainer:
         self.clients = list(clients)
         self.cfg = cfg
         self.ledger = CommLedger()
+        self.codec = get_codec(cfg.codec)
+        self._encode = jax.jit(self.codec.encode)
+        self._decode = jax.jit(
+            functools.partial(
+                self.codec.decode,
+                shape=(cfg.batch_size, cfg.d_fusion),
+                dtype=jnp.float32,
+            )
+        )
         self.rng = np.random.default_rng(seed)
         self._base_step = {}
         self._mod_step = {}
@@ -113,21 +128,28 @@ class IFLTrainer:
                 )
             losses.append(float(loss))
 
-        # --- Steps 2-3: fusion-layer outputs on a fresh minibatch, upload.
-        Z, Y = [], []
+        # --- Steps 2-3: fusion-layer outputs on a fresh minibatch, encode
+        # with the wire codec, upload the *encoded* payload.
+        payloads, Z, Y = [], [], []
         for c in self.clients:
             x, y = self._sample(c)
             z = self._fwd_z[c.cid](c.params["base"], x)
             assert z.shape[-1] == cfg.d_fusion, (
                 f"client {c.cid} fusion dim {z.shape[-1]} != {cfg.d_fusion}"
             )
-            self.ledger.send_up((z, y))  # the ONLY uplink bytes in IFL
-            Z.append(z)
+            payload = self._encode(z)
+            self.ledger.send_up((payload, y))  # the ONLY uplink bytes in IFL
+            payloads.append(payload)
+            # Every receiver reconstructs the same z_hat; decode once and
+            # train the modular blocks on it so the learning signal sees
+            # exactly what crossed the wire.
+            Z.append(self._decode(payload))
             Y.append(y)
 
-        # --- Steps 4-5: server concatenates and broadcasts to all clients.
+        # --- Steps 4-5: server concatenates the encoded payloads and
+        # broadcasts them to all clients (downlink stays compressed too).
         for _ in self.clients:
-            self.ledger.send_down((Z, Y))
+            self.ledger.send_down((payloads, Y))
 
         # --- Step 6: modular updates on every (z_i, y_i), sequentially.
         mod_losses = []

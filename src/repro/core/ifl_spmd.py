@@ -10,10 +10,17 @@ on a derived mesh ('client', 'data', 'model'):
     grads wrt base only (vmap over the client dim). Gradient all-reduces
     stay INSIDE a client's ('data','model') subgroup.
   - Phase 2 (alg. lines 13-21): fusion outputs z (N, Bc, S, d_fusion) are
-    re-constrained from P('client','data',...) to P(None,'data',...,'model')
-    — ONE all-gather along 'client'. That collective IS the paper's
+    *encoded with the wire codec* (``codec=``: fp32 | bf16 | int8 |
+    int8_row | topk | ... — repro.core.codec), then every payload leaf is
+    re-constrained from P('client',...) to P(None,...) — ONE all-gather
+    along 'client', moving the *compressed* bytes (int8 + fp32 sidecars
+    instead of fp32 activations). That collective IS the paper's
     upload+concat+broadcast, and the only traffic crossing the client
     boundary (= the only inter-pod traffic when clients align with pods).
+    Receivers decode in-program, so modular updates train on the same
+    lossy z_hat that crossed the wire. The int8_row scheme is exactly
+    what the fused Pallas kernel (kernels.fusion_proj.
+    fusion_proj_quant_pallas) emits from the projection epilogue on TPU.
   - Phase 3 (alg. lines 22-31): scan over the N gathered chunks (z_i, y_i),
     each a sequential SGD step on the modular block — the pseudocode's
     per-i update order, which also microbatches the N× modular compute.
@@ -34,6 +41,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import ModelConfig
+from repro.core.codec import get_codec
 from repro.models import modules as nn
 from repro.models.transformer import (
     base_forward,
@@ -96,16 +104,40 @@ def make_ifl_round_step(
     lr_base: float = 1e-3,
     lr_modular: float = 1e-3,
     optimizer: str = "sgd",
+    codec: str = "fp32",
 ) -> Callable:
     """Build the jittable one-round IFL step for stacked-client params.
 
     batch leaves: (N, tau+1, Bc, ...) — τ base minibatches + 1 fusion
-    minibatch per client. params leaves: (N, ...).
+    minibatch per client. params leaves: (N, ...). ``codec`` selects the
+    wire format the 'client'-axis all-gather moves (see module docstring).
     """
     opt = make_optimizer(optimizer)
+    wire = get_codec(codec)
 
     def repl(spec_tail):
         return NamedSharding(mesh, P(*spec_tail))
+
+    def gather_payload(enc, z_ndim, d_fusion):
+        """Replicate every payload leaf along 'client' — the all-gather.
+
+        Full-rank leaves (quantized z, top-k values/indices) keep 'data'
+        on the per-client batch axis and 'model' on a full-d_fusion last
+        axis; sidecars (scales, zero points) are tiny and replicate.
+        """
+
+        def spec_of(leaf):
+            if leaf.ndim == z_ndim:
+                tail = [None] * (leaf.ndim - 1)
+                tail[0] = "data"
+                if leaf.shape[-1] == d_fusion:
+                    tail[-1] = "model"
+                return repl((None, *tail))
+            return repl((None,) * leaf.ndim)
+
+        return jax.tree.map(
+            lambda a: jax.lax.with_sharding_constraint(a, spec_of(a)), enc
+        )
 
     def round_step(params, opt_state, batch):
         base_p, mod_p = params["base"], params["modular"]
@@ -142,12 +174,17 @@ def make_ifl_round_step(
         z, _ = jax.vmap(lambda bp_k, mb_k: base_forward(bp_k, cfg, mb_k))(
             base_p, fusion_mb
         )  # (N, Bc, S, d_fusion), sharded P('client','data',...)
-        # THE IFL collective: all-gather along 'client' = upload+concat+
-        # broadcast. d_fusion stays 'model'-sharded to keep the gathered
-        # copy small per device.
-        zg = jax.lax.with_sharding_constraint(
-            z, repl((None, "data", None, "model"))
-        )
+        # Quantize-before-all-gather: encode per client, THEN run THE IFL
+        # collective (all-gather along 'client' = upload+concat+broadcast)
+        # on the encoded payload, so the cross-client hop moves the
+        # codec's wire bytes. d_fusion stays 'model'-sharded to keep the
+        # gathered copy small per device. Decode reconstructs z_hat for
+        # the modular updates — the learning signal sees the wire loss.
+        enc = jax.vmap(wire.encode)(z)
+        enc = gather_payload(enc, z.ndim, z.shape[-1])
+        zg = jax.vmap(
+            lambda p: wire.decode(p, shape=z.shape[1:], dtype=z.dtype)
+        )(enc)
         yg = jax.lax.with_sharding_constraint(
             fusion_mb["tokens"], repl((None, "data", None))
         )

@@ -1,9 +1,19 @@
-"""Pallas TPU kernel: fused fusion-layer projection y = act(x @ w + b).
+"""Pallas TPU kernels: fused fusion-layer projection y = act(x @ w + b),
+plus the fused-quantize variant that emits the int8 wire payload.
 
 The fusion projection (d_model -> d_fusion) sits on IFL's hot path: it
 runs on every token of every client every round, and its output is the
 bytes that cross the client boundary. Fusing bias + activation into the
 matmul epilogue removes two HBM round-trips of the (M, N) output.
+
+``fusion_proj_quant_pallas`` goes one step further for compressed IFL
+(codec 'int8_row'): the epilogue also computes the per-row absmax scale
+and casts to int8 *inside the kernel*, so the fp32 activation tile never
+touches HBM at all — the only output traffic is the int8 payload plus a
+(M, 1) fp32 scale sidecar, exactly the bytes the 'client' all-gather
+moves. It tiles M and K only and keeps the full N (= d_fusion, 432-2048)
+in-block, which is what makes the row reduction free in the epilogue;
+acc tile 256x2048x4B = 2 MB still fits VMEM comfortably.
 
 TPU mapping: grid (M/bm, N/bn, K/bk) with an fp32 VMEM accumulator
 scratch; K is the innermost (sequential) grid dim so the accumulator
@@ -23,6 +33,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.codec import quantize_rows_sym
 
 
 def _epilogue(y, b, act: str):
@@ -106,3 +118,95 @@ def fusion_proj_pallas(
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(*args)
+
+
+# ------------------------------------------------------------ fused quant
+
+
+def _kernel_quant(x_ref, w_ref, b_ref, q_ref, s_ref, acc_ref, *, act: str,
+                  nk: int, has_bias: bool):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(1) == nk - 1)
+    def _flush():
+        y = _epilogue(acc_ref[...], b_ref[...] if has_bias else None, act)
+        q, scale = quantize_rows_sym(y)  # the canonical int8_row scheme
+        q_ref[...] = q
+        s_ref[...] = scale
+
+
+def fusion_proj_quant_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    act: str = "none",
+    *,
+    bm: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (M, K), w: (K, N), b: (N,) -> (q int8 (M, N), scale fp32 (M, 1)).
+
+    Grid (M/bm, K/bk) with full N per block (the per-row absmax needs the
+    whole row, and d_fusion is small); K is the sequential innermost dim
+    so the fp32 accumulator lives across K steps and the quantizing
+    epilogue fires once. M must tile evenly (the ops.py wrapper pads
+    rows); any K works — it is zero-padded up to a bk multiple (padded
+    x columns / w rows are zero, contributing nothing to the dot), so
+    tiles stay full-size even for odd or prime K.
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (K, K2)
+    bm = min(bm, M)
+    bk = min(bk, K)
+    rem = K % bk
+    if rem:
+        x = jnp.pad(x, ((0, 0), (0, bk - rem)))
+        w = jnp.pad(w, ((0, bk - rem), (0, 0)))
+        K += bk - rem
+    assert M % bm == 0, (M, bm)
+    nk = K // bk
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+        pl.BlockSpec((bk, N), lambda i, k: (k, 0)),
+    ]
+    args = [x, w]
+    has_bias = b is not None
+    if has_bias:
+        in_specs.append(pl.BlockSpec((N,), lambda i, k: (0,)))
+        args.append(b)
+        kern = functools.partial(_kernel_quant, act=act, nk=nk, has_bias=True)
+    else:
+        kern = functools.partial(
+            _kernel_quant_nobias, act=act, nk=nk
+        )
+
+    return pl.pallas_call(
+        kern,
+        grid=(M // bm, nk),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((bm, N), lambda i, k: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), jnp.int8),
+            jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, N), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+
+
+def _kernel_quant_nobias(x_ref, w_ref, q_ref, s_ref, acc_ref, *, act: str,
+                         nk: int):
+    _kernel_quant(x_ref, w_ref, None, q_ref, s_ref, acc_ref, act=act,
+                  nk=nk, has_bias=False)

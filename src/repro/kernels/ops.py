@@ -17,7 +17,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.fusion_proj import fusion_proj_pallas
+from repro.kernels.fusion_proj import (
+    fusion_proj_pallas,
+    fusion_proj_quant_pallas,
+)
 from repro.kernels.rmsnorm import rmsnorm_pallas
 
 
@@ -51,6 +54,26 @@ def fusion_proj(x, w, b=None, act: str = "none", *, use_kernel: bool = True,
     else:
         y = ref.fusion_proj_ref(x2, w, b, act)
     return y.reshape(*lead, w.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("act", "use_kernel", "interpret"))
+def fusion_proj_quant(x, w, b=None, act: str = "none", *,
+                      use_kernel: bool = True, interpret: bool = False):
+    """Fused projection + int8_row wire encode: the TPU path for
+    producing compressed IFL payloads with no fp32 HBM round-trip.
+
+    x: (..., K), w: (K, N) -> (q int8 (..., N), scale fp32 (..., 1)).
+    """
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if use_kernel and (interpret or _on_tpu()):
+        xp, bm, m = _pad_rows(x2, 256)
+        q, s = fusion_proj_quant_pallas(xp, w, b, act, bm=bm,
+                                        interpret=interpret)
+        q, s = q[:m], s[:m]
+    else:
+        q, s = ref.fusion_proj_quant_ref(x2, w, b, act)
+    return q.reshape(*lead, w.shape[-1]), s.reshape(*lead, 1)
 
 
 @functools.partial(

@@ -25,6 +25,28 @@ def fusion_proj_ref(x: jnp.ndarray, w: jnp.ndarray,
     return y.astype(x.dtype)
 
 
+def fusion_proj_quant_ref(x: jnp.ndarray, w: jnp.ndarray,
+                          b: Optional[jnp.ndarray] = None,
+                          act: str = "none"):
+    """Projection + symmetric per-row absmax int8 quantization.
+
+    -> (q int8 (M, N), scale fp32 (M, 1)); q * scale ~= act(x @ w + b).
+    Composes fusion_proj_ref with the canonical int8_row wire scheme
+    (codec.quantize_rows_sym) so oracle, codec and kernel can't drift."""
+    from repro.core.codec import quantize_rows_sym
+
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    if act == "relu":
+        y = jax.nn.relu(y)
+    elif act == "silu":
+        y = jax.nn.silu(y)
+    elif act != "none":
+        raise ValueError(act)
+    return quantize_rows_sym(y)
+
+
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         *, causal: bool = True, window: int = -1,
                         scale: Optional[float] = None) -> jnp.ndarray:

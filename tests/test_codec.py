@@ -1,0 +1,200 @@
+"""Wire-codec invariants: round-trip error bounds, exact byte parity
+between the analytic formula and the measured ledger, and the codec path
+through both trainers."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import IFLConfig, ModelConfig
+from repro.core import Client, IFLTrainer, get_codec, ifl_round_bytes
+from repro.core.codec import available_codecs
+from repro.core.comm import nbytes
+from repro.data import dirichlet_partition, make_synth_kmnist
+from repro.models.small import (
+    client_base_apply,
+    client_modular_apply,
+    init_client_model,
+)
+
+PARITY_CODECS = ["fp32", "bf16", "fp16", "int8", "int8_channel",
+                 "int8_row", "topk"]
+
+
+def _z(shape=(8, 432), seed=0, scale=2.0):
+    return (jax.random.normal(jax.random.PRNGKey(seed), shape)
+            * scale).astype(jnp.float32)
+
+
+# ------------------------------------------------------------ round trips
+
+
+@pytest.mark.parametrize("name", PARITY_CODECS)
+@pytest.mark.parametrize("shape", [(8, 432), (2, 16, 64), (4, 3, 8, 128)])
+def test_shape_dtype_preserved(name, shape):
+    codec = get_codec(name)
+    z = _z(shape)
+    zh = codec.decode(codec.encode(z), shape=z.shape, dtype=z.dtype)
+    assert zh.shape == z.shape
+    assert zh.dtype == z.dtype
+
+
+def test_fp32_is_lossless():
+    z = _z()
+    codec = get_codec("fp32")
+    np.testing.assert_array_equal(
+        np.asarray(codec.decode(codec.encode(z), shape=z.shape)),
+        np.asarray(z),
+    )
+
+
+@pytest.mark.parametrize("name,rel", [("bf16", 2 ** -8), ("fp16", 2 ** -10)])
+def test_cast_codecs_relative_error(name, rel):
+    z = _z()
+    codec = get_codec(name)
+    zh = codec.decode(codec.encode(z), shape=z.shape)
+    err = np.abs(np.asarray(zh - z))
+    assert err.max() <= rel * np.abs(np.asarray(z)).max() + 1e-6
+
+
+@pytest.mark.parametrize("name", ["int8", "int8_channel"])
+def test_int8_affine_error_bound(name):
+    """Affine int8 error is bounded by scale/2 = (max-min)/510 (per
+    tensor or per channel)."""
+    z = _z()
+    codec = get_codec(name)
+    zh = codec.decode(codec.encode(z), shape=z.shape)
+    zn = np.asarray(z)
+    if name == "int8":
+        bound = (zn.max() - zn.min()) / 510.0
+    else:
+        bound = (zn.max(0) - zn.min(0)) / 510.0  # per-channel
+    assert np.all(np.abs(np.asarray(zh) - zn) <= bound + 1e-6)
+
+
+def test_int8_row_error_bound():
+    z = _z()
+    codec = get_codec("int8_row")
+    zh = codec.decode(codec.encode(z), shape=z.shape)
+    bound = np.abs(np.asarray(z)).max(-1, keepdims=True) / 254.0
+    assert np.all(np.abs(np.asarray(zh - z)) <= bound + 1e-6)
+
+
+def test_int8_constant_tensor_no_nan():
+    """Zero dynamic range must not divide by zero."""
+    z = jnp.full((4, 32), 3.5)
+    for name in ["int8", "int8_channel", "int8_row"]:
+        zh = get_codec(name).decode(get_codec(name).encode(z), shape=z.shape)
+        assert np.all(np.isfinite(np.asarray(zh)))
+
+
+def test_topk_keeps_largest_exactly_and_zeros_rest():
+    z = _z((6, 64))
+    codec = get_codec("topk0.25")
+    k = codec.k_of(64)
+    zh = np.asarray(codec.decode(codec.encode(z), shape=z.shape))
+    zn = np.asarray(z)
+    for r in range(zn.shape[0]):
+        top = np.argsort(-np.abs(zn[r]))[:k]
+        np.testing.assert_allclose(zh[r, top], zn[r, top], rtol=1e-6)
+        rest = np.setdiff1d(np.arange(64), top)
+        np.testing.assert_array_equal(zh[r, rest], 0.0)
+
+
+def test_topk_ratio_parsing_and_registry_errors():
+    assert get_codec("topk0.1").k_of(100) == 10
+    assert get_codec(None).name == "fp32"
+    c = get_codec("int8")
+    assert get_codec(c) is c
+    with pytest.raises(ValueError):
+        get_codec("gzip")
+    with pytest.raises(ValueError):
+        get_codec("topk7.5")
+    assert "int8" in available_codecs()
+
+
+# ------------------------------------------------------------ byte parity
+
+
+@pytest.mark.parametrize("name", PARITY_CODECS)
+def test_wire_bytes_measured_equals_analytic(name):
+    """wire_bytes(encode(z)) == encoded_nbytes(z.shape), exactly."""
+    codec = get_codec(name)
+    for shape in [(32, 432), (2, 8, 128), (1, 431)]:
+        z = _z(shape)
+        payload = codec.encode(z)
+        assert codec.wire_bytes(payload) == codec.encoded_nbytes(shape)
+        assert codec.wire_bytes(payload) == nbytes(payload)
+
+
+@pytest.mark.parametrize("name", ["fp32", "bf16", "int8", "topk"])
+def test_ledger_parity_two_client_round(name):
+    """CommLedger measured bytes == ifl_round_bytes(..., codec=) on a
+    real 2-client round — the acceptance-criteria parity check."""
+    tx, ty, _, _ = make_synth_kmnist(600, 100)
+    cfg = IFLConfig(tau=2, batch_size=16, codec=name)
+    shards = dirichlet_partition(ty, 2, alpha=0.5, seed=0)
+    clients = []
+    for k in range(2):
+        cid = k + 1
+        clients.append(Client(
+            cid=cid,
+            params=init_client_model(jax.random.PRNGKey(cid), cid),
+            base_apply=functools.partial(
+                lambda p, x, c: client_base_apply({"base": p}, c, x), c=cid),
+            modular_apply=functools.partial(
+                lambda p, z, c: client_modular_apply({"modular": p}, c, z),
+                c=cid),
+            data_x=tx[shards[k]], data_y=ty[shards[k]],
+        ))
+    tr = IFLTrainer(clients, cfg, seed=3)
+    m = tr.run_round()
+    assert np.isfinite(m["base_loss"]) and np.isfinite(m["mod_loss"])
+    exp = ifl_round_bytes(2, cfg.batch_size, cfg.d_fusion, codec=name)
+    got = tr.ledger.per_round[0]
+    assert got["up"] == exp["up"], (name, got, exp)
+    assert got["down"] == exp["down"], (name, got, exp)
+
+
+def test_compressed_uplink_ratios():
+    """The Fig.-2 acceptance ratios, analytically: int8 >= 3.5x, bf16 ~2x."""
+    fp32 = ifl_round_bytes(4, 32, 432, codec="fp32")["up"]
+    assert fp32 / ifl_round_bytes(4, 32, 432, codec="int8")["up"] >= 3.5
+    assert fp32 / ifl_round_bytes(4, 32, 432, codec="bf16")["up"] >= 1.9
+    assert fp32 / ifl_round_bytes(4, 32, 432, codec="topk0.1")["up"] >= 4.5
+    # codec=None keeps the legacy act_bytes formula (fp32-identical).
+    assert ifl_round_bytes(4, 32, 432)["up"] == fp32
+
+
+# ------------------------------------------------------------ SPMD path
+
+
+def test_spmd_round_step_with_codec():
+    """encode -> 'client' all-gather -> decode inside the jitted round."""
+    from jax.sharding import Mesh
+
+    from repro.core.ifl_spmd import init_ifl_state, make_ifl_round_step
+
+    cfg = ModelConfig(
+        num_layers=2, d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+        vocab_size=64, d_fusion=32, q_block=16, compute_dtype="float32",
+        remat="none",
+    ).validate()
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1, 1),
+                ("client", "data", "model"))
+    params, opt_state = init_ifl_state(jax.random.PRNGKey(0), cfg,
+                                       n_clients=2)
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (2, 2, 2, 16), 0, 64)}
+    for codec in ["int8", "topk"]:
+        step = jax.jit(make_ifl_round_step(
+            cfg, mesh, n_clients=2, tau=1, lr_base=1e-2, lr_modular=1e-2,
+            codec=codec,
+        ))
+        with mesh:
+            _, _, m = step(params, opt_state, batch)
+        assert np.isfinite(float(m["base_loss"])), codec
+        assert np.isfinite(float(m["mod_loss"])), codec

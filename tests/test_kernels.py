@@ -49,6 +49,61 @@ def test_fusion_proj_batched_leading_dims():
     )
 
 
+# ------------------------------------------------------- fused quantize
+
+
+@given(
+    m=st.integers(1, 64),
+    # 1000 exercises the multi-K-tile accumulator + zero-pad branch
+    # (nk > 1, K % bk != 0); the small Ks fit one 512-wide tile.
+    k=st.sampled_from([32, 64, 432, 1000]),
+    n=st.sampled_from([128, 432]),
+    act=st.sampled_from(["none", "relu", "silu"]),
+    bias=st.booleans(),
+)
+@settings(max_examples=10)
+def test_fusion_proj_quant_matches_ref(m, k, n, act, bias):
+    x = jax.random.normal(_key(0), (m, k)) * 0.5
+    w = jax.random.normal(_key(1), (k, n)) * 0.1
+    b = (jax.random.normal(_key(2), (n,)) * 0.1) if bias else None
+    qg, sg = ops.fusion_proj_quant(x, w, b, act, interpret=True)
+    qr, sr = ref.fusion_proj_quant_ref(x, w, b, act)
+    assert qg.dtype == jnp.int8 and qg.shape == (m, n)
+    assert sg.shape == (m, 1)
+    np.testing.assert_allclose(np.asarray(sg), np.asarray(sr),
+                               rtol=1e-5, atol=1e-12)
+    # fp32 accumulation order can differ at K-tile boundaries: allow one
+    # quantization step of disagreement.
+    assert np.abs(np.asarray(qg, np.int32) - np.asarray(qr, np.int32)).max() <= 1
+
+
+def test_fusion_proj_quant_is_the_wire_codec():
+    """Fused kernel == int8_row codec applied to the fp32 projection, so
+    the TPU path emits exactly the bytes the all-gather moves."""
+    from repro.core.codec import get_codec
+
+    x = jax.random.normal(_key(0), (48, 432)) * 0.5
+    w = jax.random.normal(_key(1), (432, 432)) * 0.1
+    qg, sg = ops.fusion_proj_quant(x, w, None, "silu", interpret=True)
+    payload = get_codec("int8_row").encode(
+        ref.fusion_proj_ref(x, w, None, "silu")
+    )
+    assert np.abs(np.asarray(qg, np.int32)
+                  - np.asarray(payload["q"], np.int32)).max() <= 1
+    np.testing.assert_allclose(np.asarray(sg), np.asarray(payload["scale"]),
+                               rtol=1e-5, atol=1e-12)
+
+
+def test_fusion_proj_quant_dequant_close():
+    """q * scale reconstructs the fp32 projection within one row-scale."""
+    x = jax.random.normal(_key(0), (32, 64))
+    w = jax.random.normal(_key(1), (64, 128)) * 0.2
+    q, s = ops.fusion_proj_quant(x, w, None, "none", interpret=True)
+    y = np.asarray(ref.fusion_proj_ref(x, w, None, "none"))
+    zh = np.asarray(q, np.float32) * np.asarray(s)
+    assert np.all(np.abs(zh - y) <= np.asarray(s) * 0.51 + 1e-6)
+
+
 # ------------------------------------------------------------ flash attn
 
 
