@@ -5,9 +5,11 @@ Claim under test: IFL reaches ~90% at ~8.5 MB uplink while FSL is far
 lower at the same budget and FL variants cost orders of magnitude more.
 ``--codec`` adds a compressed-IFL run (fusion payloads encoded with the
 named wire codec from repro.core.codec — bf16 | fp16 | int8 |
-int8_channel | int8_row | topk | topk<r>) next to the fp32 baseline,
-e.g. ``--codec int8`` cuts cumulative uplink ~4x at matched accuracy.
-Prints CSV: scheme,round,uplink_mb,accuracy.
+int8_channel | int8_row | int4 | topk | topk<r> | ef(<codec>)) next to
+the fp32 baseline, e.g. ``--codec int8`` cuts cumulative uplink ~4x at
+matched accuracy, and ``--codec "ef(int4)"`` adds EF21 error feedback
+on top of ~8x compression — same wire bytes as int4, accuracy pulled
+back toward fp32. Prints CSV: scheme,round,uplink_mb,accuracy.
 """
 
 from __future__ import annotations
@@ -65,7 +67,8 @@ if __name__ == "__main__":
     ap.add_argument("--rounds", type=int, default=60)
     ap.add_argument("--codec", default="fp32",
                     help="wire codec for the compressed-IFL curve "
-                         "(fp32 = baseline only)")
+                         "(fp32 = baseline only; ef(<codec>) enables "
+                         "error feedback, e.g. ef(topk0.1), ef(int4))")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
     rows = run(args.rounds, args.force, codec=args.codec)

@@ -27,7 +27,9 @@ def main() -> None:
                     help="only run cached/static benchmarks")
     ap.add_argument("--codec", default="fp32",
                     help="wire codec for a compressed-IFL Fig.-2 curve "
-                         "(repro.core.codec; fp32 = baseline only)")
+                         "(repro.core.codec; fp32 = baseline only; "
+                         "ef(<codec>) adds EF21 error feedback, e.g. "
+                         "ef(topk0.1), ef(int4))")
     args = ap.parse_args()
     t0 = time.time()
 

@@ -32,10 +32,15 @@ def run(quiet: bool = False):
         ("ifl", ifl_round_bytes(4, cfg.batch_size, cfg.d_fusion),
          f"tau={cfg.tau} local steps amortized per upload"),
     ]
-    for codec in ["bf16", "int8", "topk"]:
+    for codec in ["bf16", "int8", "topk", "int4"]:
         b = ifl_round_bytes(4, cfg.batch_size, cfg.d_fusion, codec=codec)
         rows.append((f"ifl+{codec}", b,
                      f"wire codec; {fp32_up / b['up']:.1f}x less uplink"))
+    for codec in ["ef(topk0.1)", "ef(int4)"]:
+        b = ifl_round_bytes(4, cfg.batch_size, cfg.d_fusion, codec=codec)
+        rows.append((f"ifl+{codec}", b,
+                     f"EF21 residual; {fp32_up / b['up']:.1f}x less uplink"
+                     " at near-fp32 accuracy"))
     rows += [
         ("fsl", fsl_round_bytes(4, cfg.batch_size, cfg.d_fusion),
          "1 update per round"),

@@ -5,10 +5,15 @@ train on non-IID synthetic KMNIST while exchanging ONLY fusion-layer
 outputs, then compose each other's modular blocks at inference.
 
   PYTHONPATH=src python examples/quickstart.py
-  PYTHONPATH=src python examples/quickstart.py --codec int8   # ~4x less wire
+  PYTHONPATH=src python examples/quickstart.py --codec int8        # ~4x less wire
+  PYTHONPATH=src python examples/quickstart.py --codec "ef(int4)"  # ~8x + EF21
 
 ``--codec`` picks the fusion-payload wire format (repro.core.codec):
-fp32 (baseline) | bf16 | fp16 | int8 | int8_channel | int8_row | topk.
+fp32 (baseline) | bf16 | fp16 | int8 | int8_channel | int8_row | int4 |
+topk | topk<r> — or ``ef(<codec>)`` to add EF21 error feedback: each
+vendor keeps a private residual of what compression dropped and folds
+it into the next round's payload, recovering fp32-level accuracy at the
+compressed wire size.
 """
 
 import argparse
@@ -71,6 +76,11 @@ def main(codec: str = "fp32"):
     if codec != "fp32":
         fp32 = ifl_round_bytes(cfg.n_clients, cfg.batch_size, cfg.d_fusion)
         print(f"wire saving vs fp32: {fp32['up'] / exp['up']:.2f}x uplink")
+    if trainer.codec.has_state:
+        norms = {cid: float(np.linalg.norm(np.asarray(e)))
+                 for cid, e in trainer.ef_state.items()}
+        print("EF residual norms (client-private, 0 wire bytes): "
+              + ", ".join(f"{c}: {n:.1f}" for c, n in norms.items()))
 
 
 if __name__ == "__main__":

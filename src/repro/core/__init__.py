@@ -2,7 +2,8 @@
 
 Submodules:
   comm        — communication ledgers + analytic per-round byte formulas
-  codec       — fusion-payload wire codecs (fp32/bf16/fp16/int8/topk)
+  codec       — fusion-payload wire codecs (fp32/bf16/fp16/int8/int4/
+                topk) + EF21 error-feedback wrapping (ef(<codec>))
   ifl         — the two-stage IFL algorithm (eager, heterogeneous clients)
   ifl_spmd    — IFL as a single SPMD train_step on the production mesh
   fl          — FedAvg baseline (paper's FL-1/FL-2)
@@ -18,6 +19,7 @@ from repro.core.comm import (  # noqa: F401
 )
 from repro.core.codec import (  # noqa: F401
     Codec,
+    EFCodec,
     available_codecs,
     get_codec,
 )

@@ -73,7 +73,10 @@ def ifl_round_bytes(n_clients: int, batch: int, d_fusion: int,
     ``codec`` (name or ``repro.core.codec.Codec``) switches z to its
     compressed wire format; the formula stays exact — it is the codec's
     own analytic ``encoded_nbytes``, so ledger parity holds per codec.
-    Labels always ride uncompressed (int32)."""
+    ``ef(<codec>)`` error-feedback wrappers change what is IN the
+    payload, not its size: identical bytes to the inner codec (the
+    residual is client-private and never transmitted). Labels always
+    ride uncompressed (int32)."""
     if codec is not None:
         from repro.core.codec import get_codec
 

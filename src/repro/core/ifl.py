@@ -8,10 +8,15 @@ communication round t:
      frozen, client-local minibatches.
   2. Fusion exchange    — fresh minibatch -> z_k = f_b,k(x_k); client
      *encodes* z_k with the configured wire codec (cfg.codec: fp32 |
-     bf16 | fp16 | int8 | topk | ... — see repro.core.codec), uploads
-     (payload_k, y_k); server concatenates the encoded payloads and
-     broadcasts (lines 13-21). The ledger records exactly the encoded
-     payload bytes — compressed bytes are what cross the boundary.
+     bf16 | fp16 | int8 | int4 | topk | ef(...) | ... — see
+     repro.core.codec), uploads (payload_k, y_k); server concatenates
+     the encoded payloads and broadcasts (lines 13-21). The ledger
+     records exactly the encoded payload bytes — compressed bytes are
+     what cross the boundary. Stateful ``ef(...)`` codecs keep an EF21
+     residual per client (``self.ef_state[cid]``) that flows through the
+     jitted encode: the client transmits encode(z + e) and carries
+     e' = (z + e) - decode(...) to the next round, recovering fp32-level
+     accuracy under aggressive compression at identical wire bytes.
   3. Modular update     — N sequential SGD steps on θ_m, one per
      (decode(payload_i), y_i) pair, as pseudocode lines 24-28 (the
      sequential form of eq. 9). The learning signal sees the same
@@ -65,7 +70,9 @@ class IFLTrainer:
         self.cfg = cfg
         self.ledger = CommLedger()
         self.codec = get_codec(cfg.codec)
-        self._encode = jax.jit(self.codec.encode)
+        # encode_with_state is a stateless passthrough for plain codecs,
+        # so ONE jitted encode path serves the whole registry.
+        self._encode_state = jax.jit(self.codec.encode_with_state)
         self._decode = jax.jit(
             functools.partial(
                 self.codec.decode,
@@ -73,6 +80,12 @@ class IFLTrainer:
                 dtype=jnp.float32,
             )
         )
+        # Per-client EF residual (empty pytree for stateless codecs).
+        # Client-private, never transmitted, never counted by the ledger.
+        self.ef_state = {
+            c.cid: self.codec.init_state((cfg.batch_size, cfg.d_fusion))
+            for c in clients
+        }
         self.rng = np.random.default_rng(seed)
         self._base_step = {}
         self._mod_step = {}
@@ -119,17 +132,25 @@ class IFLTrainer:
     def run_round(self) -> Dict[str, float]:
         cfg = self.cfg
         losses = []
-        # --- Step 1: τ local base-block updates per client (eq. 7).
+        # --- Step 1: τ local base-block updates per client (eq. 7),
+        # reporting the mean loss over the τ steps (τ=0 is a legal
+        # fusion-only round: no base steps, loss is NaN by convention).
         for c in self.clients:
+            step_losses = []
             for _ in range(cfg.tau):
                 x, y = self._sample(c)
                 c.params, loss = self._base_step[c.cid](
                     c.params, x, y, cfg.lr_base
                 )
-            losses.append(float(loss))
+                step_losses.append(loss)
+            losses.append(
+                float(jnp.mean(jnp.stack(step_losses)))
+                if step_losses else float("nan")
+            )
 
         # --- Steps 2-3: fusion-layer outputs on a fresh minibatch, encode
-        # with the wire codec, upload the *encoded* payload.
+        # with the wire codec (threading the client's EF residual, if the
+        # codec carries one), upload the *encoded* payload.
         payloads, Z, Y = [], [], []
         for c in self.clients:
             x, y = self._sample(c)
@@ -137,7 +158,9 @@ class IFLTrainer:
             assert z.shape[-1] == cfg.d_fusion, (
                 f"client {c.cid} fusion dim {z.shape[-1]} != {cfg.d_fusion}"
             )
-            payload = self._encode(z)
+            payload, self.ef_state[c.cid] = self._encode_state(
+                z, self.ef_state[c.cid]
+            )
             self.ledger.send_up((payload, y))  # the ONLY uplink bytes in IFL
             payloads.append(payload)
             # Every receiver reconstructs the same z_hat; decode once and

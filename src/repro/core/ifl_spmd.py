@@ -11,16 +11,26 @@ on a derived mesh ('client', 'data', 'model'):
     stay INSIDE a client's ('data','model') subgroup.
   - Phase 2 (alg. lines 13-21): fusion outputs z (N, Bc, S, d_fusion) are
     *encoded with the wire codec* (``codec=``: fp32 | bf16 | int8 |
-    int8_row | topk | ... — repro.core.codec), then every payload leaf is
-    re-constrained from P('client',...) to P(None,...) — ONE all-gather
-    along 'client', moving the *compressed* bytes (int8 + fp32 sidecars
-    instead of fp32 activations). That collective IS the paper's
-    upload+concat+broadcast, and the only traffic crossing the client
-    boundary (= the only inter-pod traffic when clients align with pods).
-    Receivers decode in-program, so modular updates train on the same
-    lossy z_hat that crossed the wire. The int8_row scheme is exactly
-    what the fused Pallas kernel (kernels.fusion_proj.
-    fusion_proj_quant_pallas) emits from the projection epilogue on TPU.
+    int8_row | int4 | topk | ef(...) | ... — repro.core.codec), then
+    every payload leaf is re-constrained from P('client',...) to
+    P(None,...) — ONE all-gather along 'client', moving the *compressed*
+    bytes (int8 + fp32 sidecars instead of fp32 activations). That
+    collective IS the paper's upload+concat+broadcast, and the only
+    traffic crossing the client boundary (= the only inter-pod traffic
+    when clients align with pods). Receivers decode in-program, so
+    modular updates train on the same lossy z_hat that crossed the wire.
+    The int8_row scheme is exactly what the fused Pallas kernel
+    (kernels.fusion_proj.fusion_proj_quant_pallas) emits from the
+    projection epilogue on TPU.
+
+    Stateful ``ef(...)`` codecs (EF21 error feedback) make the residual
+    part of the *carried round state*: the round step takes and returns
+    an ``ef_state`` pytree of shape (N, Bc, S, d_fusion) sharded
+    P('client', ...), updated INSIDE the jitted program by the same
+    encode that produces the payload — encode -> all-gather -> decode
+    stays one program with zero extra collectives (the residual is
+    client-local and never crosses the 'client' axis). Build the initial
+    state with ``init_ef_state``.
   - Phase 3 (alg. lines 22-31): scan over the N gathered chunks (z_i, y_i),
     each a sequential SGD step on the modular block — the pseudocode's
     per-i update order, which also microbatches the N× modular compute.
@@ -105,12 +115,22 @@ def make_ifl_round_step(
     lr_modular: float = 1e-3,
     optimizer: str = "sgd",
     codec: str = "fp32",
+    debug_return_zhat: bool = False,
 ) -> Callable:
     """Build the jittable one-round IFL step for stacked-client params.
 
     batch leaves: (N, tau+1, Bc, ...) — τ base minibatches + 1 fusion
     minibatch per client. params leaves: (N, ...). ``codec`` selects the
     wire format the 'client'-axis all-gather moves (see module docstring).
+
+    Stateless codecs:  step(params, opt_state, batch)
+                         -> (params', opt_state', metrics)
+    Stateful  codecs:  step(params, opt_state, batch, ef_state)
+                         -> (params', opt_state', metrics, ef_state')
+    where ``ef_state`` comes from ``init_ef_state`` and is sharded
+    P('client', ...) — the per-client EF21 residual carried round to
+    round. ``debug_return_zhat`` adds the pre-encode ``z`` and decoded
+    ``z_hat`` to metrics (tests/parity only; never at production shapes).
     """
     opt = make_optimizer(optimizer)
     wire = get_codec(codec)
@@ -139,7 +159,18 @@ def make_ifl_round_step(
             lambda a: jax.lax.with_sharding_constraint(a, spec_of(a)), enc
         )
 
-    def round_step(params, opt_state, batch):
+    def ef_constrain(e):
+        """Keep the EF residual sharded exactly like z: client-private
+        (P leads with 'client'), batch on 'data', features on 'model' —
+        no collective ever touches it."""
+        tail = [None] * (e.ndim - 1)
+        if tail:
+            tail[0] = "data"
+        if len(tail) >= 2:
+            tail[-1] = "model"
+        return jax.lax.with_sharding_constraint(e, repl(("client", *tail)))
+
+    def _round_impl(params, opt_state, batch, ef_state):
         base_p, mod_p = params["base"], params["modular"]
 
         # ---------------- Phase 1: τ local base-block updates (eq. 7).
@@ -180,7 +211,14 @@ def make_ifl_round_step(
         # codec's wire bytes. d_fusion stays 'model'-sharded to keep the
         # gathered copy small per device. Decode reconstructs z_hat for
         # the modular updates — the learning signal sees the wire loss.
-        enc = jax.vmap(wire.encode)(z)
+        # EF codecs fold the carried residual into the encode and emit
+        # the next-round residual here, before the gather, so it stays
+        # client-local.
+        if wire.has_state:
+            enc, ef_state = jax.vmap(wire.encode_with_state)(z, ef_state)
+            ef_state = jax.tree.map(ef_constrain, ef_state)
+        else:
+            enc = jax.vmap(wire.encode)(z)
         enc = gather_payload(enc, z.ndim, z.shape[-1])
         zg = jax.vmap(
             lambda p: wire.decode(p, shape=z.shape[1:], dtype=z.dtype)
@@ -213,9 +251,29 @@ def make_ifl_round_step(
             "base_loss": jnp.mean(base_losses),
             "mod_loss": jnp.mean(mod_losses),
         }
-        return new_params, new_opt, metrics
+        if debug_return_zhat:
+            metrics["z"] = z
+            metrics["z_hat"] = zg
+        return new_params, new_opt, metrics, ef_state
+
+    if wire.has_state:
+        def round_step(params, opt_state, batch, ef_state):
+            return _round_impl(params, opt_state, batch, ef_state)
+    else:
+        def round_step(params, opt_state, batch):
+            p, o, m, _ = _round_impl(params, opt_state, batch, ())
+            return p, o, m
 
     return round_step
+
+
+def init_ef_state(codec, z_shape: Tuple[int, ...]):
+    """Initial carried EF residual for ``make_ifl_round_step``.
+
+    ``z_shape`` is the full stacked fusion-output shape
+    (n_clients, Bc, S, d_fusion). Stateless codecs yield an empty
+    pytree; their round step does not take the argument at all."""
+    return get_codec(codec).init_state(z_shape)
 
 
 def init_ifl_state(key, cfg: ModelConfig, *, n_clients: int,

@@ -12,6 +12,7 @@ exercised. With real hypothesis installed this file is never imported.
 
 from __future__ import annotations
 
+import inspect
 import itertools
 import random
 import types
@@ -65,10 +66,19 @@ def given(*arg_strats: _Strategy, **kw_strats: _Strategy):
     """
 
     def deco(fn):
+        # Like real hypothesis: positional strategies bind to the
+        # function's RIGHTMOST parameters (in order), keyword strategies
+        # by name; everything else (parametrize args, fixtures) comes
+        # from pytest.
+        sig = inspect.signature(fn)
+        all_names = [p.name for p in sig.parameters.values()]
+        pos_names = all_names[len(all_names) - len(arg_strats):] \
+            if arg_strats else []
+        strat_names = pos_names + list(kw_strats)
+
         def wrapper(*args, **kwargs):
-            names = list(kw_strats)
             pools = [s.examples for s in arg_strats] + [
-                kw_strats[n].examples for n in names
+                kw_strats[n].examples for n in kw_strats
             ]
             if not pools:
                 fn(*args, **kwargs)
@@ -88,15 +98,19 @@ def given(*arg_strats: _Strategy, **kw_strats: _Strategy):
                         base = list(picked[0])
                         base[j] = v
                         picked.append(tuple(base))
-            npos = len(arg_strats)
             for combo in picked:
-                kw_vals = dict(zip(names, combo[npos:]))
-                fn(*args, *combo[:npos], **kwargs, **kw_vals)
+                fn(*args, **kwargs, **dict(zip(strat_names, combo)))
 
         wrapper.__name__ = fn.__name__
         wrapper.__doc__ = fn.__doc__
         wrapper.__module__ = fn.__module__
         wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # Expose the non-strategy parameters to pytest's collection,
+        # exactly as real hypothesis does: strategy-supplied names
+        # vanish from the reported signature, everything else stays.
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for p in sig.parameters.values() if p.name not in strat_names
+        ])
         return wrapper
 
     return deco

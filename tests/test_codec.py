@@ -21,7 +21,8 @@ from repro.models.small import (
 )
 
 PARITY_CODECS = ["fp32", "bf16", "fp16", "int8", "int8_channel",
-                 "int8_row", "topk"]
+                 "int8_row", "topk", "int4", "ef(int8_row)", "ef(int4)",
+                 "ef(topk0.1)"]
 
 
 def _z(shape=(8, 432), seed=0, scale=2.0):
@@ -130,7 +131,37 @@ def test_wire_bytes_measured_equals_analytic(name):
         assert codec.wire_bytes(payload) == nbytes(payload)
 
 
-@pytest.mark.parametrize("name", ["fp32", "bf16", "int8", "topk"])
+def test_int4_error_bound_and_packing():
+    """Packed int4: |err| <= row-absmax/14, odd dims pad exactly one
+    nibble, and the packed payload is byte-sized."""
+    for shape in [(8, 432), (3, 431)]:
+        z = _z(shape)
+        codec = get_codec("int4")
+        payload = codec.encode(z)
+        assert payload["q4"].dtype == jnp.uint8
+        assert payload["q4"].shape[-1] == (shape[-1] + 1) // 2
+        zh = codec.decode(payload, shape=z.shape)
+        bound = np.abs(np.asarray(z)).max(-1, keepdims=True) / 14.0
+        assert np.all(np.abs(np.asarray(zh - z)) <= bound + 1e-6)
+
+
+def test_ef_wrapping_preserves_wire_format():
+    """ef(<codec>) is invisible on the wire: same payload structure and
+    bytes, stateless encode identical to the inner codec's."""
+    z = _z()
+    for inner in ["int8_row", "int4", "topk0.1"]:
+        ef = get_codec(f"ef({inner})")
+        base = get_codec(inner)
+        assert ef.has_state and not base.has_state
+        assert ef.encoded_nbytes(z.shape) == base.encoded_nbytes(z.shape)
+        pe, pb = ef.encode(z), base.encode(z)
+        assert jax.tree.structure(pe) == jax.tree.structure(pb)
+        for a, b in zip(jax.tree.leaves(pe), jax.tree.leaves(pb)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("name", ["fp32", "bf16", "int8", "topk",
+                                  "int4", "ef(int8_row)", "ef(topk0.1)"])
 def test_ledger_parity_two_client_round(name):
     """CommLedger measured bytes == ifl_round_bytes(..., codec=) on a
     real 2-client round — the acceptance-criteria parity check."""
@@ -157,6 +188,13 @@ def test_ledger_parity_two_client_round(name):
     got = tr.ledger.per_round[0]
     assert got["up"] == exp["up"], (name, got, exp)
     assert got["down"] == exp["down"], (name, got, exp)
+    if tr.codec.has_state:
+        # EF residual: per client, z-shaped, fp32, updated by the round
+        # — and invisible to the ledger (asserted by the parity above).
+        for e in tr.ef_state.values():
+            assert e.shape == (cfg.batch_size, cfg.d_fusion)
+            assert e.dtype == jnp.float32
+            assert np.any(np.asarray(e))
 
 
 def test_compressed_uplink_ratios():
@@ -165,6 +203,10 @@ def test_compressed_uplink_ratios():
     assert fp32 / ifl_round_bytes(4, 32, 432, codec="int8")["up"] >= 3.5
     assert fp32 / ifl_round_bytes(4, 32, 432, codec="bf16")["up"] >= 1.9
     assert fp32 / ifl_round_bytes(4, 32, 432, codec="topk0.1")["up"] >= 4.5
+    assert fp32 / ifl_round_bytes(4, 32, 432, codec="int4")["up"] >= 7.0
+    # EF changes the payload's content, never its size.
+    assert (ifl_round_bytes(4, 32, 432, codec="ef(int4)")
+            == ifl_round_bytes(4, 32, 432, codec="int4"))
     # codec=None keeps the legacy act_bytes formula (fp32-identical).
     assert ifl_round_bytes(4, 32, 432)["up"] == fp32
 

@@ -1,0 +1,196 @@
+"""Registry-wide wire-codec contract, property-tested.
+
+Parametrized over ``available_codecs()`` — plus the ``ef(...)`` wrapping
+of every registered codec — so any codec added to the registry later is
+covered automatically, with zero per-codec test code. Properties:
+
+  1. decode(encode(z)) keeps shape/dtype and stays finite,
+  2. round-trip error obeys the codec family's analytic bound,
+  3. encoded_nbytes(shape) == wire_bytes(encode(z)) — EXACT byte parity
+     (what keeps the analytic formulas and the CommLedger in lockstep),
+  4. the EF21 contraction invariant for stateful codecs:
+     ||e'|| <= ||z + e||, and z_hat + e' reconstructs z + e,
+  5. the stateless state API is a true passthrough.
+
+Runs identically under real hypothesis and the in-repo deterministic
+stub (tests/_hypothesis_stub.py) — only `integers` / `floats` /
+`sampled_from` strategies, no shrinking-dependent logic. Set
+``CODEC_MATRIX=1`` (the CI codec-matrix leg) to widen the shape sweep.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.codec import EFCodec, available_codecs, get_codec
+from repro.core.comm import nbytes
+
+BASE_CODECS = list(available_codecs())
+EF_CODECS = [f"ef({n})" for n in BASE_CODECS] + ["ef(topk0.1)"]
+ALL_CODECS = BASE_CODECS + EF_CODECS
+
+# d choices cover: tiny, odd (exercises int4 nibble padding + topk
+# rounding), and the paper's fusion dim. CODEC_MATRIX widens the sweep.
+_D = [8, 431, 432] if os.environ.get("CODEC_MATRIX") else [8, 431]
+_LEADS = [(4,), (2, 3)] if os.environ.get("CODEC_MATRIX") else [(4,)]
+
+
+def _z(lead, d, seed, scale):
+    z = jax.random.normal(jax.random.PRNGKey(seed), (*lead, d))
+    return (z * scale).astype(jnp.float32)
+
+
+def _max_err_bound(name, zn):
+    """Analytic worst-case |z_hat - z| per element, by codec family.
+
+    Global (not per-row/channel) form of each scheme's bound — valid
+    because every per-row/channel scale is <= the global one. topk has
+    no per-element bound (dropped entries err by their own magnitude);
+    it is covered by the energy bound instead."""
+    absmax = np.abs(zn).max()
+    if name == "fp32":
+        return 0.0
+    if name == "bf16":
+        return 2.0 ** -8 * absmax
+    if name == "fp16":
+        return 2.0 ** -10 * absmax
+    if name in ("int8", "int8_channel"):
+        return (zn.max() - zn.min()) / 510.0
+    if name == "int8_row":
+        return absmax / 254.0
+    if name == "int4":
+        return absmax / 14.0
+    return None
+
+
+@pytest.mark.parametrize("name", ALL_CODECS)
+@given(seed=st.integers(0, 3), di=st.integers(0, len(_D) - 1),
+       li=st.integers(0, len(_LEADS) - 1), scale=st.floats(0.01, 8.0))
+@settings(max_examples=10, deadline=None)
+def test_round_trip_contract(name, seed, di, li, scale):
+    codec = get_codec(name)
+    z = _z(_LEADS[li], _D[di], seed, scale)
+    zh = codec.decode(codec.encode(z), shape=z.shape, dtype=z.dtype)
+    assert zh.shape == z.shape
+    assert zh.dtype == z.dtype
+    zn, zhn = np.asarray(z), np.asarray(zh)
+    assert np.all(np.isfinite(zhn))
+    # Universal energy bound: a wire codec never amplifies the signal's
+    # error past the signal itself (exact for fp32, loose for the rest,
+    # the only bound that holds for topk's dropped coordinates).
+    assert np.linalg.norm(zhn - zn) <= np.linalg.norm(zn) + 1e-5
+    inner = codec.inner.name if isinstance(codec, EFCodec) else name
+    bound = _max_err_bound(inner, zn)
+    if bound is not None:
+        assert np.abs(zhn - zn).max() <= bound + 1e-6, (name, bound)
+
+
+@pytest.mark.parametrize("name", ALL_CODECS)
+@given(seed=st.integers(0, 3), di=st.integers(0, len(_D) - 1),
+       li=st.integers(0, len(_LEADS) - 1))
+@settings(max_examples=10, deadline=None)
+def test_exact_byte_parity(name, seed, di, li):
+    """encoded_nbytes == wire_bytes(encode(z)) == ledger nbytes, exactly
+    — for every codec, every shape, including odd d (int4 padding)."""
+    codec = get_codec(name)
+    z = _z(_LEADS[li], _D[di], seed, 1.0)
+    payload = codec.encode(z)
+    analytic = codec.encoded_nbytes(z.shape)
+    assert codec.wire_bytes(payload) == analytic, name
+    assert nbytes(payload) == analytic, name
+
+
+@pytest.mark.parametrize("name", ALL_CODECS)
+def test_state_api_contract(name):
+    """Stateless codecs: () state, passthrough. EF codecs: zeros init,
+    contraction ||e'|| <= ||z + e||, and (z + e) == z_hat + e' — the
+    EF21 bookkeeping identity that makes the cumulative signal unbiased."""
+    codec = get_codec(name)
+    z = _z((4,), 64, 7, 2.0)
+    if not codec.has_state:
+        state = codec.init_state(z.shape)
+        assert state == ()
+        payload, state2 = codec.encode_with_state(z, state)
+        assert state2 == ()
+        np.testing.assert_array_equal(
+            np.asarray(codec.decode(payload, shape=z.shape)),
+            np.asarray(codec.decode(codec.encode(z), shape=z.shape)),
+        )
+        return
+    e = codec.init_state(z.shape)
+    assert e.shape == z.shape and e.dtype == jnp.float32
+    assert not np.any(np.asarray(e))
+    for rnd in range(3):  # the invariants must hold with a warm residual
+        zr = _z((4,), 64, 10 + rnd, 2.0)
+        c = np.asarray(zr.astype(jnp.float32) + e)
+        payload, e = codec.encode_with_state(zr, e)
+        z_hat = np.asarray(
+            codec.decode(payload, shape=zr.shape, dtype=jnp.float32))
+        en = np.asarray(e)
+        assert e.shape == zr.shape
+        # Contraction: the carried residual never exceeds what went in.
+        assert np.linalg.norm(en) <= np.linalg.norm(c) + 1e-5
+        # EF21 recurrence: e' = clip(c - decode(encode(c))) with the
+        # per-row trust region ||e'|| <= max_ratio * ||z||.
+        raw = c - z_hat
+        factor = 1.0
+        if codec.max_ratio is not None and np.isfinite(codec.max_ratio):
+            zn = np.linalg.norm(np.asarray(zr), axis=-1, keepdims=True)
+            rn = np.linalg.norm(raw, axis=-1, keepdims=True)
+            factor = np.minimum(1.0, codec.max_ratio * zn
+                                / np.maximum(rn, 1e-12))
+            assert np.all(
+                np.linalg.norm(en, axis=-1)
+                <= codec.max_ratio * zn[..., 0] + 1e-4
+            )
+        np.testing.assert_allclose(en, raw * factor, atol=1e-4)
+
+
+@given(di=st.integers(0, len(_D) - 1), seed=st.integers(0, 3))
+@settings(max_examples=6, deadline=None)
+def test_ef_reduces_cumulative_bias(di, seed):
+    """The reason EF exists: over R rounds, mean(decode) under ef(topk)
+    tracks the true mean signal strictly better than plain topk."""
+    d = _D[di]
+    plain = get_codec("topk0.1")
+    # max_ratio=None: the textbook recurrence, whose cumulative decode
+    # error telescopes to exactly the final residual.
+    ef = EFCodec(inner=plain, max_ratio=None)
+    e = ef.init_state((4, d))
+    acc_p = jnp.zeros((4, d))
+    acc_e = jnp.zeros((4, d))
+    acc_z = jnp.zeros((4, d))
+    base = _z((4,), d, seed, 2.0)
+    for r in range(12):
+        zr = base + _z((4,), d, 100 + 13 * seed + r, 0.5)
+        acc_z = acc_z + zr
+        acc_p = acc_p + plain.decode(plain.encode(zr), shape=zr.shape)
+        payload, e = ef.encode_with_state(zr, e)
+        acc_e = acc_e + ef.decode(payload, shape=zr.shape)
+    # EF's cumulative decode differs from the true cumulative signal by
+    # exactly the final residual; plain topk's bias grows with rounds.
+    err_p = float(jnp.linalg.norm(acc_p - acc_z))
+    err_e = float(jnp.linalg.norm(acc_e - acc_z))
+    assert err_e < err_p
+    np.testing.assert_allclose(
+        np.asarray(acc_z - acc_e), np.asarray(e), atol=1e-3,
+    )
+
+
+def test_ef_registry_spelling():
+    ef = get_codec("ef(int8_row)")
+    assert ef.name == "ef(int8_row)" and ef.has_state
+    assert ef.encoded_nbytes((32, 432)) == \
+        get_codec("int8_row").encoded_nbytes((32, 432))
+    assert get_codec("ef(topk0.1)").inner.ratio == 0.1
+    nested = get_codec("ef(ef(int4))")  # harmless, still int4-sized wire
+    assert nested.encoded_nbytes((8, 432)) == \
+        get_codec("int4").encoded_nbytes((8, 432))
+    with pytest.raises(ValueError):
+        get_codec("ef(gzip)")
+    with pytest.raises(ValueError):
+        get_codec("ef()")

@@ -113,6 +113,51 @@ def test_parameters_never_leave_client(trained_round):
     assert per_client_up < smallest / 4  # z-exchange ≪ any model upload
 
 
+def test_tau_zero_round_is_fusion_only(small_data):
+    """Regression: cfg.tau=0 used to raise NameError (`loss` unbound) in
+    run_round. A τ=0 round is legal — fusion exchange + modular updates
+    only: base params untouched, base_loss NaN by convention."""
+    tx, ty, _, _ = small_data
+    cfg = IFLConfig(tau=0, batch_size=8)
+    tr = IFLTrainer(_mk_clients(tx, ty), cfg, seed=2)
+    before = jax.tree.map(jnp.copy, {c.cid: c.params for c in tr.clients})
+    m = tr.run_round()  # must not raise
+    assert np.isnan(m["base_loss"])
+    assert np.isfinite(m["mod_loss"])
+    for c in tr.clients:
+        assert _tree_equal(c.params["base"], before[c.cid]["base"])
+        assert not _tree_equal(c.params["modular"], before[c.cid]["modular"])
+
+
+def test_base_loss_averages_all_tau_steps(small_data):
+    """Regression: base_loss used to record only the LAST of the τ local
+    losses. Replay the trainer's exact sampling stream and check the
+    reported value equals the mean over every (client, step) loss."""
+    tx, ty, _, _ = small_data
+    cfg = IFLConfig(tau=3, batch_size=16)
+    seed = 5
+    clients = _mk_clients(tx, ty)
+    params0 = jax.tree.map(jnp.copy, {c.cid: c.params for c in clients})
+    tr = IFLTrainer(clients, cfg, seed=seed)
+    m = tr.run_round()
+
+    rng = np.random.default_rng(seed)  # same stream as the trainer's
+    expected = []
+    for c in _mk_clients(tx, ty):
+        params = params0[c.cid]
+        step = jax.jit(functools.partial(
+            IFLTrainer._base_step_impl, c.base_apply, c.modular_apply,
+            c.loss_fn))
+        client_losses = []
+        for _ in range(cfg.tau):
+            idx = rng.integers(0, c.num_samples, size=cfg.batch_size)
+            x, y = jnp.asarray(c.data_x[idx]), jnp.asarray(c.data_y[idx])
+            params, loss = step(params, x, y, cfg.lr_base)
+            client_losses.append(float(loss))
+        expected.append(np.mean(client_losses))
+    np.testing.assert_allclose(m["base_loss"], np.mean(expected), rtol=1e-5)
+
+
 # ------------------------------------------------------------ baselines
 
 

@@ -103,6 +103,80 @@ def test_rounds_reduce_loss(setup):
     assert losses[-1] < losses[0]
 
 
+def test_ef_round_state_eager_spmd_parity(setup):
+    """One ef(int8_row) round: the SPMD program's carried residual and
+    decoded z_hat are BITWISE identical to what the eager IFLTrainer's
+    jitted encode/decode machinery produces on the same z.
+
+    int8_row quantizes each (…, d_fusion) row independently, so the
+    SPMD (N, B, S, dF) z and the eager (B*S, dF) z are the same rows —
+    any drift between the two trainers' EF arithmetic shows up here.
+    """
+    import functools
+
+    from repro.config import IFLConfig
+    from repro.core import Client, IFLTrainer
+    from repro.core.ifl_spmd import init_ef_state
+
+    cfg, mesh, params, opt_state, _, batch = setup
+    codec = "ef(int8_row)"
+    step = jax.jit(make_ifl_round_step(
+        cfg, mesh, n_clients=N, tau=TAU, lr_base=1e-2, lr_modular=1e-2,
+        codec=codec, debug_return_zhat=True,
+    ))
+    e0 = init_ef_state(codec, (N, B, S, cfg.d_fusion))
+    with mesh:
+        _, _, m, e1 = step(params, opt_state, batch, e0)
+    z = np.asarray(m["z"])          # (N, B, S, dF) pre-encode
+    z_hat = np.asarray(m["z_hat"])  # decoded from the gathered payload
+    e1 = np.asarray(e1)
+
+    # The eager trainer, configured for the same codec and row count;
+    # its _encode_state/_decode are the exact jitted callables run_round
+    # uses, and its ef_state holds the same zeros-init residual.
+    eager_cfg = IFLConfig(n_clients=N, batch_size=B * S,
+                          d_fusion=cfg.d_fusion, codec=codec)
+    dummy = np.zeros((4, 28, 28, 1), np.float32)
+    clients = [Client(cid=k, params={},
+                      base_apply=lambda p, x: x,
+                      modular_apply=lambda p, z: z,
+                      data_x=dummy, data_y=np.zeros((4,), np.int32))
+               for k in range(N)]
+    tr = IFLTrainer(clients, eager_cfg, seed=0)
+    for k in range(N):
+        zk = jnp.asarray(z[k].reshape(B * S, cfg.d_fusion))
+        payload, ek = tr._encode_state(zk, tr.ef_state[k])
+        zhk = tr._decode(payload)
+        np.testing.assert_array_equal(
+            np.asarray(ek), e1[k].reshape(B * S, cfg.d_fusion))
+        np.testing.assert_array_equal(
+            np.asarray(zhk), z_hat[k].reshape(B * S, cfg.d_fusion))
+
+
+def test_ef_spmd_residual_decays_topk(setup):
+    """Carried EF state round over round: the residual stays finite and
+    the round remains one jitted program (no signature drift)."""
+    from repro.core.ifl_spmd import init_ef_state
+
+    cfg, mesh, params, opt_state, _, _ = setup
+    codec = "ef(topk0.1)"
+    step = jax.jit(make_ifl_round_step(
+        cfg, mesh, n_clients=N, tau=TAU, lr_base=1e-2, lr_modular=1e-2,
+        codec=codec,
+    ))
+    ef = init_ef_state(codec, (N, B, S, cfg.d_fusion))
+    key = jax.random.PRNGKey(11)
+    with mesh:
+        for _ in range(3):
+            key, sub = jax.random.split(key)
+            batch = {"tokens": jax.random.randint(
+                sub, (N, TAU + 1, B, S), 0, 128)}
+            params, opt_state, m, ef = step(params, opt_state, batch, ef)
+            assert np.isfinite(float(m["mod_loss"]))
+            assert np.all(np.isfinite(np.asarray(ef)))
+    assert float(jnp.linalg.norm(ef)) > 0.0  # topk really drops mass
+
+
 def test_dp_step_matches_manual_sgd():
     cfg = ModelConfig(num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
                       d_ff=64, vocab_size=64, compute_dtype="float32",
