@@ -5,11 +5,19 @@ Claim under test: IFL reaches ~90% at ~8.5 MB uplink while FSL is far
 lower at the same budget and FL variants cost orders of magnitude more.
 ``--codec`` adds a compressed-IFL run (fusion payloads encoded with the
 named wire codec from repro.core.codec — bf16 | fp16 | int8 |
-int8_channel | int8_row | int4 | topk | topk<r> | ef(<codec>)) next to
-the fp32 baseline, e.g. ``--codec int8`` cuts cumulative uplink ~4x at
-matched accuracy, and ``--codec "ef(int4)"`` adds EF21 error feedback
-on top of ~8x compression — same wire bytes as int4, accuracy pulled
-back toward fp32. Prints CSV: scheme,round,uplink_mb,accuracy.
+int8_channel | int8_row | int4 | topk | topk<r> | sketch<r> |
+ef(<codec>)) next to the fp32 baseline, e.g. ``--codec int8`` cuts
+cumulative uplink ~4x at matched accuracy, and ``--codec "ef(int4)"``
+adds EF21 error feedback on top of ~8x compression — same wire bytes as
+int4, accuracy pulled back toward fp32.
+
+``--participation`` runs EVERY scheme under a partial-participation
+schedule (repro.core.rounds: k2 | bern0.5 | straggle(0.2,3) | ...) —
+the HeteroFL regime where only K of N clients show up per round. IFL's
+staleness-bounded fusion cache keeps modular updates training on up to
+N pairs while the ledger only pays for the K fresh uploads.
+``--smoke`` shrinks data/rounds to a seconds-long CI check of the full
+axis grid. Prints CSV: scheme,round,uplink_mb,accuracy.
 """
 
 from __future__ import annotations
@@ -20,15 +28,19 @@ from benchmarks.paper_repro import run_scheme
 
 
 def run(rounds: int = 60, force: bool = False, quiet: bool = False,
-        codec: str = "fp32"):
+        codec: str = "fp32", participation: str = "full",
+        smoke: bool = False):
     rows = []
     schemes = ["ifl", "fsl", "fl1", "fl2"]
     if codec != "fp32":
         schemes.insert(1, f"ifl+{codec}")
+    kw = dict(participation=participation, force=force)
+    if smoke:
+        kw.update(n_train=800, n_test=200, tau=2)
     for scheme in schemes:
         base, _, cdc = scheme.partition("+")
         out = run_scheme(base, rounds, eval_every=max(1, rounds // 40),
-                         codec=cdc or "fp32", force=force)
+                         codec=cdc or "fp32", **kw)
         for rec in out["records"]:
             rows.append((scheme, rec["round"], rec["uplink_mb"],
                          rec["acc_mean"]))
@@ -69,9 +81,19 @@ if __name__ == "__main__":
                     help="wire codec for the compressed-IFL curve "
                          "(fp32 = baseline only; ef(<codec>) enables "
                          "error feedback, e.g. ef(topk0.1), ef(int4))")
+    ap.add_argument("--participation", default="full",
+                    help="client schedule for every scheme "
+                         "(repro.core.rounds: full | k<K> | bern<p> | "
+                         "straggle(<frac>,<period>), e.g. k2)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-long CI mode: tiny data, few rounds")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
-    rows = run(args.rounds, args.force, codec=args.codec)
+    if args.smoke:
+        args.rounds = min(args.rounds, 4)
+        args.force = True  # never serve a smoke run from the full cache
+    rows = run(args.rounds, args.force, codec=args.codec,
+               participation=args.participation, smoke=args.smoke)
     budget, hl = headline(rows)
     print(f"# at IFL-90% uplink budget {budget:.2f} MB: {hl}")
     if args.codec != "fp32":

@@ -16,8 +16,10 @@ from benchmarks.paper_repro import run_scheme
 LABELS = ["A1-X2", "B1-X2", "C1-X2", "D1-X2"]
 
 
-def run(rounds: int = 60, force: bool = False, quiet: bool = False):
-    out = run_scheme("ifl", rounds, eval_every=max(1, rounds // 40), force=force)
+def run(rounds: int = 60, force: bool = False, quiet: bool = False,
+        participation: str = "full"):
+    out = run_scheme("ifl", rounds, eval_every=max(1, rounds // 40),
+                     participation=participation, force=force)
     rows = []
     for rec in out["records"]:
         if "sd_per_base" in rec:
@@ -32,9 +34,11 @@ def run(rounds: int = 60, force: bool = False, quiet: bool = False):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--participation", default="full",
+                    help="client schedule (repro.core.rounds), e.g. k2")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
-    rows = run(args.rounds, args.force)
+    rows = run(args.rounds, args.force, participation=args.participation)
     final = rows[-1][1:]
     print(f"# final SDs (acc points): {[f'{x:.2f}' for x in final]} "
           f"(paper: all < 0.6 by end of training)")

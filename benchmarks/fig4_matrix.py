@@ -17,8 +17,10 @@ from benchmarks.paper_repro import run_scheme
 NAMES = ["A", "B", "C", "D"]
 
 
-def run(rounds: int = 60, force: bool = False, quiet: bool = False):
-    out = run_scheme("ifl", rounds, eval_every=max(1, rounds // 40), force=force)
+def run(rounds: int = 60, force: bool = False, quiet: bool = False,
+        participation: str = "full"):
+    out = run_scheme("ifl", rounds, eval_every=max(1, rounds // 40),
+                     participation=participation, force=force)
     mat = np.array(out["records"][-1]["matrix"])
     if not quiet:
         print("base\\modular," + ",".join(f"{n}2" for n in NAMES))
@@ -31,9 +33,11 @@ def run(rounds: int = 60, force: bool = False, quiet: bool = False):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--participation", default="full",
+                    help="client schedule (repro.core.rounds), e.g. k2")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
-    mat = run(args.rounds, args.force)
+    mat = run(args.rounds, args.force, participation=args.participation)
     local = np.diag(mat)
     cross = mat[~np.eye(4, dtype=bool)]
     n_better = int((mat - local[:, None] >= -0.005).sum() - 4)

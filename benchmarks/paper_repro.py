@@ -56,7 +56,8 @@ def make_clients(tx, ty, *, heterogeneous: bool = True, arch: int = 1,
 def run_scheme(scheme: str, rounds: int, *, eval_every: int = 5,
                n_train: int = 20000, n_test: int = 4000,
                tau: int = 10, seed: int = 0, lr: float = 0.05,
-               codec: str = "fp32", force: bool = False) -> Dict:
+               codec: str = "fp32", participation: str = "full",
+               max_staleness=None, force: bool = False) -> Dict:
     """NOTE on lr: the paper uses η=0.01 on real KMNIST. On the offline
     synthetic stand-in, 0.01 undertrains badly within 200 rounds (58%
     after 2000 base steps), so the default here is the calibrated 0.05 —
@@ -65,20 +66,31 @@ def run_scheme(scheme: str, rounds: int, *, eval_every: int = 5,
 
     ``codec`` selects the fusion-payload wire format (repro.core.codec);
     it only affects the IFL scheme — FL ships parameters and FSL ships
-    cut activations+grads, both at their native fp32."""
+    cut activations+grads, both at their native fp32.
+
+    ``participation`` selects the round engine's client schedule
+    (repro.core.rounds: 'full' | 'k<K>' | 'bern<p>' |
+    'straggle(<frac>,<period>)') and applies to EVERY scheme — partial
+    rounds are a property of the deployment, not of the algorithm. For
+    IFL, ``max_staleness`` bounds the server fusion cache."""
     os.makedirs(RESULTS, exist_ok=True)
     tag = f"{scheme}_r{rounds}_n{n_train}_tau{tau}_s{seed}"
     if lr != 0.01:
         tag += f"_lr{lr}"
     if codec != "fp32":
         tag += f"_c{codec}"
+    if participation != "full":
+        tag += f"_p{participation}"
+        if max_staleness is not None:
+            tag += f"_st{max_staleness}"
     path = os.path.join(RESULTS, tag + ".json")
     if os.path.exists(path) and not force:
         return json.load(open(path))
 
     tx, ty, ex, ey = make_synth_kmnist(n_train, n_test)
     cfg = IFLConfig(tau=tau, rounds=rounds, lr_base=lr, lr_modular=lr,
-                    codec=codec)
+                    codec=codec, participation=participation,
+                    max_staleness=max_staleness)
     recs: List[Dict] = []
 
     if scheme == "ifl":
@@ -134,7 +146,7 @@ def run_scheme(scheme: str, rounds: int, *, eval_every: int = 5,
         raise ValueError(scheme)
 
     out = {"scheme": scheme, "rounds": rounds, "tau": tau, "codec": codec,
-           "records": recs}
+           "participation": participation, "records": recs}
     with open(path, "w") as f:
         json.dump(out, f, indent=1)
     return out

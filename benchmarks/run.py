@@ -30,6 +30,10 @@ def main() -> None:
                          "(repro.core.codec; fp32 = baseline only; "
                          "ef(<codec>) adds EF21 error feedback, e.g. "
                          "ef(topk0.1), ef(int4))")
+    ap.add_argument("--participation", default="full",
+                    help="client schedule for the paper experiments "
+                         "(repro.core.rounds: full | k<K> | bern<p> | "
+                         "straggle(<frac>,<period>), e.g. k2)")
     args = ap.parse_args()
     t0 = time.time()
 
@@ -47,7 +51,8 @@ def main() -> None:
         _section(f"fig2_comm_efficiency (paper Fig. 2, rounds={args.rounds})")
         from benchmarks import fig2_comm_efficiency
 
-        rows = fig2_comm_efficiency.run(args.rounds, codec=args.codec)
+        rows = fig2_comm_efficiency.run(args.rounds, codec=args.codec,
+                                        participation=args.participation)
         budget, hl = fig2_comm_efficiency.headline(rows)
         print(f"# at IFL-90% uplink budget {budget:.2f} MB: "
               + ", ".join(f"{k}={v:.3f}" for k, v in hl.items()))
@@ -60,13 +65,14 @@ def main() -> None:
         _section("fig3_heterogeneity (paper Fig. 3)")
         from benchmarks import fig3_heterogeneity
 
-        r3 = fig3_heterogeneity.run(args.rounds)
+        r3 = fig3_heterogeneity.run(args.rounds,
+                                    participation=args.participation)
         print(f"# final SDs: {[f'{x:.2f}' for x in r3[-1][1:]]}")
 
         _section("fig4_matrix (paper Fig. 4)")
         from benchmarks import fig4_matrix
 
-        fig4_matrix.run(args.rounds)
+        fig4_matrix.run(args.rounds, participation=args.participation)
 
     _section("roofline_report (dry-run artifacts)")
     from benchmarks import roofline_report

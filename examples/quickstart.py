@@ -7,13 +7,21 @@ outputs, then compose each other's modular blocks at inference.
   PYTHONPATH=src python examples/quickstart.py
   PYTHONPATH=src python examples/quickstart.py --codec int8        # ~4x less wire
   PYTHONPATH=src python examples/quickstart.py --codec "ef(int4)"  # ~8x + EF21
+  PYTHONPATH=src python examples/quickstart.py --participation k2  # 2-of-4/round
 
 ``--codec`` picks the fusion-payload wire format (repro.core.codec):
 fp32 (baseline) | bf16 | fp16 | int8 | int8_channel | int8_row | int4 |
-topk | topk<r> — or ``ef(<codec>)`` to add EF21 error feedback: each
-vendor keeps a private residual of what compression dropped and folds
-it into the next round's payload, recovering fp32-level accuracy at the
-compressed wire size.
+topk | topk<r> | sketch<r> — or ``ef(<codec>)`` to add EF21 error
+feedback: each vendor keeps a private residual of what compression
+dropped and folds it into the next round's payload, recovering
+fp32-level accuracy at the compressed wire size.
+
+``--participation`` picks the client schedule (repro.core.rounds):
+full | k<K> | bern<p> | straggle(<frac>,<period>). Under e.g. ``k2``
+only 2 of the 4 vendors train/upload per round; the server's fusion
+cache re-broadcasts absent vendors' last payloads (bounded by
+``--max-staleness``) so modular updates still see all four, while the
+ledger pays only for the fresh uploads.
 """
 
 import argparse
@@ -32,12 +40,14 @@ from repro.models.small import (
 )
 
 
-def main(codec: str = "fp32"):
+def main(codec: str = "fp32", participation: str = "full",
+         max_staleness=None):
     print(f"== IFL quickstart: 4 heterogeneous vendors, synthetic KMNIST, "
-          f"wire codec {codec} ==")
+          f"wire codec {codec}, participation {participation} ==")
     tx, ty, ex, ey = make_synth_kmnist(6000, 1500)
     cfg = IFLConfig(tau=10, batch_size=32, lr_base=0.05, lr_modular=0.05,
-                    codec=codec)
+                    codec=codec, participation=participation,
+                    max_staleness=max_staleness)
     shards = dirichlet_partition(ty, cfg.n_clients, alpha=0.5, seed=0)
 
     clients = []
@@ -63,18 +73,25 @@ def main(codec: str = "fp32"):
             accs = trainer.evaluate(ex, ey)
             print(f"round {r:3d}: base_loss {m['base_loss']:.3f}, "
                   f"uplink {m['uplink_mb']:.2f} MB, "
+                  f"up {len(m['participants'])}/{cfg.n_clients} vendors "
+                  f"(cache {m['cache_size']}), "
                   f"accs {[f'{a:.2f}' for a in accs]}")
 
     print("\ncross-vendor composition matrix (eq. 11):")
     mat = trainer.accuracy_matrix(ex[:1000], ey[:1000])
     print(np.round(mat, 3))
+    m0 = trainer.engine.history[0]
     exp = ifl_round_bytes(cfg.n_clients, cfg.batch_size, cfg.d_fusion,
-                          codec=codec)
+                          codec=codec,
+                          participating=len(m0["participants"]),
+                          broadcast_entries=m0["cache_size"])
     got = trainer.ledger.per_round[0]
     print(f"\nper-round bytes measured {got} == analytic {exp}: "
           f"{got['up'] == exp['up'] and got['down'] == exp['down']}")
-    if codec != "fp32":
-        fp32 = ifl_round_bytes(cfg.n_clients, cfg.batch_size, cfg.d_fusion)
+    if codec != "fp32" and exp["up"]:  # an empty round 0 has no uplink
+        fp32 = ifl_round_bytes(cfg.n_clients, cfg.batch_size, cfg.d_fusion,
+                               participating=len(m0["participants"]),
+                               broadcast_entries=m0["cache_size"])
         print(f"wire saving vs fp32: {fp32['up'] / exp['up']:.2f}x uplink")
     if trainer.codec.has_state:
         norms = {cid: float(np.linalg.norm(np.asarray(e)))
@@ -87,4 +104,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--codec", default="fp32",
                     help="fusion-payload wire codec (see repro.core.codec)")
-    main(ap.parse_args().codec)
+    ap.add_argument("--participation", default="full",
+                    help="client schedule (see repro.core.rounds): "
+                         "full | k<K> | bern<p> | straggle(<frac>,<period>)")
+    ap.add_argument("--max-staleness", type=int, default=None,
+                    help="fusion-cache staleness bound in rounds "
+                         "(default: never evict)")
+    args = ap.parse_args()
+    main(args.codec, args.participation, args.max_staleness)

@@ -286,3 +286,9 @@ class IFLConfig:
     dirichlet_alpha: float = 0.5  # paper's non-IID concentration
     optimizer: str = "sgd"  # paper uses plain SGD
     codec: str = "fp32"  # wire codec for z (see repro.core.codec)
+    # Participation schedule for the round engine (repro.core.rounds):
+    # 'full' | 'k<K>' | 'bern<p>' | 'straggle(<frac>,<period>)'.
+    participation: str = "full"
+    # Fusion-cache staleness bound in rounds (None = never evict;
+    # 0 = fresh uploads only). See rounds.py for the exact semantics.
+    max_staleness: Optional[int] = None

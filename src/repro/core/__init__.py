@@ -3,7 +3,10 @@
 Submodules:
   comm        — communication ledgers + analytic per-round byte formulas
   codec       — fusion-payload wire codecs (fp32/bf16/fp16/int8/int4/
-                topk) + EF21 error-feedback wrapping (ef(<codec>))
+                topk/sketch) + EF21 error-feedback wrapping (ef(<codec>))
+  rounds      — participation schedules (full/k-of-N/Bernoulli/straggler),
+                the staleness-bounded FusionCache, and the RoundEngine
+                shared by all three eager trainers
   ifl         — the two-stage IFL algorithm (eager, heterogeneous clients)
   ifl_spmd    — IFL as a single SPMD train_step on the production mesh
   fl          — FedAvg baseline (paper's FL-1/FL-2)
@@ -16,6 +19,16 @@ from repro.core.comm import (  # noqa: F401
     ifl_round_bytes,
     fl_round_bytes,
     fsl_round_bytes,
+)
+from repro.core.rounds import (  # noqa: F401
+    BernoulliSchedule,
+    FullParticipation,
+    FusionCache,
+    ParticipationSchedule,
+    RoundEngine,
+    StragglerSchedule,
+    UniformK,
+    parse_participation,
 )
 from repro.core.codec import (  # noqa: F401
     Codec,

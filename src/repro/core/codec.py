@@ -26,8 +26,13 @@ Codecs:
                 int32 index sidecar (r = kept fraction, default 0.25)
   int4          packed symmetric per-row absmax int4 — two nibbles per
                 byte, fp32 row-scale sidecar (~8x vs fp32)
+  sketch / sketch<r>  count-sketch along d_fusion: signed hash into
+                round(r * d) fp32 buckets (default r = 0.25), bucket-mean
+                decode. No index sidecar at all (the hash is a shared
+                seed), unlike top-k — 1/r compression with dense wire
+                bytes.
   ef(<codec>)   EF21 error feedback around ANY registered codec
-                (``ef(topk0.1)``, ``ef(int8_row)``, ``ef(int4)``, ...)
+                (``ef(topk0.1)``, ``ef(int8_row)``, ``ef(sketch0.25)``...)
 
 Stateful codecs (error feedback) extend the protocol with an optional
 state API, defaulting to a stateless passthrough so plain codecs are
@@ -51,14 +56,15 @@ state; the eager trainer jits them per client and keeps the residual in
 a per-client dict). Labels ride alongside uncompressed — they are int32
 and already tiny.
 
-Registry is the extension point for future sketching (count-min /
-count-sketch) codecs: subclass ``Codec``, call ``register`` — ``ef(...)``
-wrapping and the property-test suite (tests/test_codec_properties.py)
-pick new codecs up automatically.
+Registry is the extension point for future codecs: subclass ``Codec``,
+call ``register`` — ``ef(...)`` wrapping and the property-test suite
+(tests/test_codec_properties.py) pick new codecs up automatically, as
+``CountSketchCodec`` demonstrates.
 """
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Dict, Optional, Tuple, Union
 
@@ -71,6 +77,7 @@ from repro.core.comm import nbytes
 __all__ = [
     "Codec",
     "CODECS",
+    "CountSketchCodec",
     "EFCodec",
     "Int4RowCodec",
     "get_codec",
@@ -326,6 +333,75 @@ class Int4RowCodec(Codec):
         return rows * ((shape[-1] + 1) // 2) + rows * 4
 
 
+@functools.lru_cache(maxsize=256)
+def _sketch_tables(d: int, w: int, seed: int):
+    """Shared (hash, sign, bucket-count) tables for a (d -> w) sketch.
+
+    Derived deterministically from (d, w, seed) with numpy at trace
+    time, so encoder and decoder agree without any index sidecar on the
+    wire — the whole point of sketching vs top-k. Returned as jnp
+    constants so encode/decode stay jit/vmap-pure."""
+    rng = np.random.default_rng(seed + 1_000_003 * d + w)
+    h = rng.integers(0, w, size=d)
+    s = (rng.integers(0, 2, size=d) * 2 - 1).astype(np.float32)
+    counts = np.maximum(np.bincount(h, minlength=w), 1).astype(np.float32)
+    # Cache NUMPY arrays only: converting here would capture per-trace
+    # constants (tracers) in the lru_cache and leak them across jits.
+    return h.astype(np.int32), s, counts
+
+
+@dataclass(frozen=True, repr=False)
+class CountSketchCodec(Codec):
+    """Count-sketch along the fusion dim (Charikar-Chen-Farach-Colton).
+
+    Encode: each of the d fusion features is assigned a fixed bucket
+    h(i) in [0, w) and sign s(i); the wire payload is the w bucket sums
+    of the signed features — ``w = round(ratio * d)`` fp32 values per
+    row, nothing else. Decode: z_hat[i] = s(i) * sketch[h(i)] / |bucket|
+    — the *bucket-mean* estimator, which within every bucket is the
+    orthogonal projection of the signed feature values onto the all-ones
+    direction. That makes the codec deterministically non-expansive
+    (||z_hat - z|| <= ||z|| always, not just in expectation), so the
+    registry-wide energy bound holds and ``ef(sketch...)`` inherits a
+    contractive compressor, exactly what EF21 assumes.
+
+    The hash/sign tables are derived from (d, w, shared seed): both ends
+    compute them locally, so unlike top-k there is no index sidecar on
+    the wire — pure 1/ratio compression at fp32 bucket precision.
+    """
+
+    name: str = "sketch"
+    ratio: float = 0.25
+    seed: int = 0x5EED
+
+    def w_of(self, d: int) -> int:
+        return max(1, min(d, int(round(self.ratio * d))))
+
+    def encode(self, z):
+        zf = z.astype(jnp.float32)
+        d = zf.shape[-1]
+        h, s, _ = _sketch_tables(d, self.w_of(d), self.seed)
+        flat = (zf * s).reshape(-1, d)
+        sk = jnp.zeros((flat.shape[0], self.w_of(d)), jnp.float32)
+        sk = sk.at[:, h].add(flat)
+        return {"sketch": sk.reshape(*z.shape[:-1], self.w_of(d))}
+
+    def decode(self, payload, *, shape=None, dtype=None):
+        if shape is None:
+            # w = round(ratio * d) is not invertible (rounding), and the
+            # hash tables are keyed by d — the original shape is required.
+            raise ValueError("sketch decode requires the original z shape")
+        d = shape[-1]
+        h, s, counts = _sketch_tables(d, self.w_of(d), self.seed)
+        vals = payload["sketch"] / counts  # bucket means
+        zh = vals[..., h] * s
+        return zh.reshape(shape).astype(dtype or jnp.float32)
+
+    def encoded_nbytes(self, shape):
+        rows = int(np.prod(shape[:-1])) if len(shape) > 1 else 1
+        return rows * self.w_of(shape[-1]) * 4
+
+
 @dataclass(frozen=True, repr=False)
 class EFCodec(Codec):
     """EF21 error feedback around any inner codec (Richtárik et al.).
@@ -407,6 +483,7 @@ register(Int8AffineCodec("int8_channel", per_channel=True))
 register(Int8RowCodec())
 register(TopKCodec())
 register(Int4RowCodec())
+register(CountSketchCodec())
 
 
 def available_codecs() -> Tuple[str, ...]:
@@ -417,8 +494,9 @@ def get_codec(codec: Union[str, Codec, None]) -> Codec:
     """Resolve a codec name (or pass a Codec through).
 
     ``topk<r>`` parameterizes the kept fraction, e.g. ``topk0.1``.
+    ``sketch<r>`` parameterizes the bucket fraction, e.g. ``sketch0.25``.
     ``ef(<codec>)`` wraps any resolvable codec with EF21 error feedback,
-    e.g. ``ef(topk0.1)``, ``ef(int8_row)``, ``ef(int4)``.
+    e.g. ``ef(topk0.1)``, ``ef(int8_row)``, ``ef(sketch0.25)``.
     """
     if codec is None:
         return CODECS["fp32"]
@@ -435,7 +513,15 @@ def get_codec(codec: Union[str, Codec, None]) -> Codec:
             ratio = None
         if ratio is not None and 0.0 < ratio <= 1.0:
             return TopKCodec(name=codec, ratio=ratio)
+    if codec.startswith("sketch"):
+        try:
+            ratio = float(codec[len("sketch"):])
+        except ValueError:
+            ratio = None
+        if ratio is not None and 0.0 < ratio <= 1.0:
+            return CountSketchCodec(name=codec, ratio=ratio)
     raise ValueError(
         f"unknown codec {codec!r}; available: {available_codecs()} "
-        "(or 'topk<ratio>' e.g. topk0.1, or 'ef(<codec>)' e.g. ef(int4))"
+        "(or 'topk<ratio>' e.g. topk0.1, 'sketch<ratio>' e.g. sketch0.25, "
+        "or 'ef(<codec>)' e.g. ef(int4))"
     )

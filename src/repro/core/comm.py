@@ -10,7 +10,7 @@ client-local compute is free, exactly as in the paper.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np
@@ -57,8 +57,18 @@ class CommLedger:
         return self.uplink / 1e6
 
     @property
+    def downlink_mb(self) -> float:
+        return self.downlink / 1e6
+
+    @property
     def total_mb(self) -> float:
         return self.total / 1e6
+
+    def round_mb(self, i: int) -> float:
+        """Total (up + down) MB of closed round ``i`` — negative indices
+        count from the most recent round, list-style."""
+        r = self.per_round[i]
+        return (r["up"] + r["down"]) / 1e6
 
 
 # ------------------------------------------------------------ analytic
@@ -66,9 +76,12 @@ class CommLedger:
 
 def ifl_round_bytes(n_clients: int, batch: int, d_fusion: int,
                     label_bytes: int = 4, act_bytes: int = 4,
-                    codec=None) -> Dict[str, int]:
-    """One IFL round: each client uploads (z_k, y_k); server broadcasts
-    (Z, Y) to all clients. Eq.-level match to Algorithm 1 lines 13-21.
+                    codec=None, participating: Optional[int] = None,
+                    broadcast_entries: Optional[int] = None,
+                    ) -> Dict[str, int]:
+    """One IFL round: each participating client uploads (z_k, y_k); the
+    server broadcasts the valid fusion-cache entries to the participants.
+    Eq.-level match to Algorithm 1 lines 13-21 at full participation.
 
     ``codec`` (name or ``repro.core.codec.Codec``) switches z to its
     compressed wire format; the formula stays exact — it is the codec's
@@ -76,7 +89,15 @@ def ifl_round_bytes(n_clients: int, batch: int, d_fusion: int,
     ``ef(<codec>)`` error-feedback wrappers change what is IN the
     payload, not its size: identical bytes to the inner codec (the
     residual is client-private and never transmitted). Labels always
-    ride uncompressed (int32)."""
+    ride uncompressed (int32).
+
+    ``participating`` is the number K of clients that showed up this
+    round (default: all N); ``broadcast_entries`` is the number M of
+    valid FusionCache entries the server re-broadcasts (default: N —
+    the steady state of an unbounded cache).  Uplink is K fresh
+    payloads; downlink is the M-entry broadcast to each of the K
+    participants — absent clients transmit and receive nothing (see
+    ``repro.core.rounds`` for the cache-staleness semantics)."""
     if codec is not None:
         from repro.core.codec import get_codec
 
@@ -84,20 +105,28 @@ def ifl_round_bytes(n_clients: int, batch: int, d_fusion: int,
     else:
         z = batch * d_fusion * act_bytes
     y = batch * label_bytes
-    up = n_clients * (z + y)
-    down = n_clients * n_clients * (z + y)  # each client receives all N
+    k = n_clients if participating is None else participating
+    m = n_clients if broadcast_entries is None else broadcast_entries
+    up = k * (z + y)
+    down = k * m * (z + y)  # each participant receives the valid cache
     return {"up": up, "down": down}
 
 
-def fl_round_bytes(n_clients: int, model_bytes: int) -> Dict[str, int]:
-    """FedAvg: full model up per client, global model down per client."""
-    return {"up": n_clients * model_bytes, "down": n_clients * model_bytes}
+def fl_round_bytes(n_clients: int, model_bytes: int,
+                   participating: Optional[int] = None) -> Dict[str, int]:
+    """FedAvg: full model up per participating client, global model down
+    per participating client (absent clients move nothing)."""
+    k = n_clients if participating is None else participating
+    return {"up": k * model_bytes, "down": k * model_bytes}
 
 
 def fsl_round_bytes(n_clients: int, batch: int, cut_dim: int,
-                    label_bytes: int = 4, act_bytes: int = 4) -> Dict[str, int]:
+                    label_bytes: int = 4, act_bytes: int = 4,
+                    participating: Optional[int] = None) -> Dict[str, int]:
     """FSL: cut activations + labels up; activation gradients down.
-    One client-side update per round (the paper's FSL limitation)."""
+    One client-side update per round (the paper's FSL limitation);
+    only the K participating clients exchange anything."""
+    k = n_clients if participating is None else participating
     h = batch * cut_dim * act_bytes
     y = batch * label_bytes
-    return {"up": n_clients * (h + y), "down": n_clients * h}
+    return {"up": k * (h + y), "down": k * h}

@@ -4,6 +4,11 @@ All clients must share one architecture (the FL limitation the paper
 highlights): FL-1 deploys client 1's smallest model everywhere, FL-2
 client 2's larger one. Per round: τ local SGD steps on the full model,
 full-model upload, weighted FedAvg (eq. 4), full-model download.
+
+Partial participation (cfg.participation, via the shared round engine)
+is classic sampled FedAvg: only the K participating clients download
+the global model, train, and upload; aggregation weights are sample
+counts normalized over the participants.
 """
 
 from __future__ import annotations
@@ -16,8 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import IFLConfig
-from repro.core.comm import CommLedger
 from repro.core.ifl import Client, softmax_xent
+from repro.core.rounds import RoundEngine
 
 
 class FLTrainer:
@@ -27,8 +32,10 @@ class FLTrainer:
                  seed: int = 0):
         self.clients = list(clients)
         self.cfg = cfg
-        self.ledger = CommLedger()
-        self.rng = np.random.default_rng(seed)
+        self.engine = RoundEngine(len(self.clients), cfg.participation,
+                                  seed=seed)
+        self.ledger = self.engine.ledger
+        self.rng = self.engine.rng
         c0 = self.clients[0]
         self._step = jax.jit(
             functools.partial(self._step_impl, c0.base_apply,
@@ -47,29 +54,43 @@ class FLTrainer:
 
     def run_round(self) -> Dict[str, float]:
         cfg = self.cfg
-        d_total = sum(c.num_samples for c in self.clients)
+        eng = self.engine
+        participants = eng.participants()
+        chosen = [self.clients[k] for k in participants]
+        d_total = sum(c.num_samples for c in chosen)
         locals_, losses = [], []
-        for c in self.clients:
+        for c in chosen:
             # server -> client: global model download.
             self.ledger.send_down(self.global_params)
             p = self.global_params
+            step_losses = []
             for _ in range(cfg.tau):
-                idx = self.rng.integers(0, c.num_samples, cfg.batch_size)
-                x = jnp.asarray(c.data_x[idx])
-                y = jnp.asarray(c.data_y[idx])
+                x, y = eng.sample(c, cfg.batch_size)
                 p, loss = self._step(p, x, y, cfg.lr_base)
+                step_losses.append(loss)
             locals_.append((c.num_samples / d_total, p))
-            losses.append(float(loss))
+            # τ=0 is a legal no-op round for a client: no local steps,
+            # loss NaN by convention (regression: `loss` used to be
+            # unbound here and raised NameError).
+            losses.append(
+                float(jnp.mean(jnp.stack(step_losses)))
+                if step_losses else float("nan")
+            )
             # client -> server: full model upload.
             self.ledger.send_up(p)
-        # FedAvg (eq. 4).
-        self.global_params = jax.tree.map(
-            lambda *xs: sum(w * x for (w, _), x in zip(locals_, xs)),
-            *[p for _, p in locals_],
-        )
-        self.ledger.end_round()
-        return {"loss": float(np.mean(losses)),
-                "uplink_mb": self.ledger.uplink_mb}
+        # FedAvg (eq. 4) over the participants. Nothing trained (no
+        # participants, or τ=0) => the global model is exactly unchanged
+        # rather than re-averaged through float round-off.
+        if locals_ and cfg.tau > 0:
+            self.global_params = jax.tree.map(
+                lambda *xs: sum(w * x for (w, _), x in zip(locals_, xs)),
+                *[p for _, p in locals_],
+            )
+        return eng.end_round({
+            "loss": float(np.mean(losses)) if losses else float("nan"),
+            "uplink_mb": self.ledger.uplink_mb,
+            "participants": [int(k) for k in participants],
+        })
 
     def evaluate(self, test_x, test_y, batch: int = 512) -> float:
         c0 = self.clients[0]

@@ -13,6 +13,10 @@ local steps):
 
 Server-side grads are averaged across clients each round (SplitFed-style).
 Inference REQUIRES the server (no local end-to-end path) — Table I row 2.
+
+Partial participation (cfg.participation, via the shared round engine):
+only the K participating clients run the split exchange; the server
+averages gradients over the K contributors. Absent clients move nothing.
 """
 
 from __future__ import annotations
@@ -25,8 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import IFLConfig
-from repro.core.comm import CommLedger
 from repro.core.ifl import Client
+from repro.core.rounds import RoundEngine
 
 
 class FSLTrainer:
@@ -34,8 +38,10 @@ class FSLTrainer:
                  server_params: Any, server_apply, seed: int = 0):
         self.clients = list(clients)
         self.cfg = cfg
-        self.ledger = CommLedger()
-        self.rng = np.random.default_rng(seed)
+        self.engine = RoundEngine(len(self.clients), cfg.participation,
+                                  seed=seed)
+        self.ledger = self.engine.ledger
+        self.rng = self.engine.rng
         self.server_params = server_params
         self.server_apply = server_apply
         self._client_fwd = {
@@ -74,12 +80,13 @@ class FSLTrainer:
 
     def run_round(self) -> Dict[str, float]:
         cfg = self.cfg
+        eng = self.engine
+        participants = eng.participants()
         losses = []
         server_grads = []
-        for c in self.clients:
-            idx = self.rng.integers(0, c.num_samples, cfg.batch_size)
-            x = jnp.asarray(c.data_x[idx])
-            y = jnp.asarray(c.data_y[idx])
+        for k in participants:
+            c = self.clients[k]
+            x, y = eng.sample(c, cfg.batch_size)
             h = self._client_fwd[c.cid](c.params["base"], x)
             self.ledger.send_up((h, y))  # cut activations + labels up
             gs, gh, loss = self._server_step(self.server_params, h, y,
@@ -92,15 +99,19 @@ class FSLTrainer:
             }
             server_grads.append(gs)
             losses.append(float(loss))
-        # Average server-side grads across clients, single server update.
-        n = len(self.clients)
-        avg = jax.tree.map(lambda *gs_: sum(gs_) / n, *server_grads)
-        self.server_params = jax.tree.map(
-            lambda p, g: p - cfg.lr_modular * g, self.server_params, avg
-        )
-        self.ledger.end_round()
-        return {"loss": float(np.mean(losses)),
-                "uplink_mb": self.ledger.uplink_mb}
+        # Average server-side grads over the participants, single server
+        # update (an empty round updates nothing).
+        if server_grads:
+            n = len(server_grads)
+            avg = jax.tree.map(lambda *gs_: sum(gs_) / n, *server_grads)
+            self.server_params = jax.tree.map(
+                lambda p, g: p - cfg.lr_modular * g, self.server_params, avg
+            )
+        return eng.end_round({
+            "loss": float(np.mean(losses)) if losses else float("nan"),
+            "uplink_mb": self.ledger.uplink_mb,
+            "participants": [int(k) for k in participants],
+        })
 
     # ---------------------------------------------------------- eval
 

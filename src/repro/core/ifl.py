@@ -17,13 +17,22 @@ communication round t:
      jitted encode: the client transmits encode(z + e) and carries
      e' = (z + e) - decode(...) to the next round, recovering fp32-level
      accuracy under aggressive compression at identical wire bytes.
-  3. Modular update     — N sequential SGD steps on θ_m, one per
+  3. Modular update     — sequential SGD steps on θ_m, one per cached
      (decode(payload_i), y_i) pair, as pseudocode lines 24-28 (the
      sequential form of eq. 9). The learning signal sees the same
      lossy z_hat every receiver would reconstruct.
 
 Nothing else ever crosses the client boundary: parameters, gradients and
 architectures stay private (Table I's last three rows).
+
+Partial participation (cfg.participation: 'full' | 'k<K>' | 'bern<p>' |
+'straggle(<frac>,<period>)' — repro.core.rounds) makes rounds honest
+about intermittent availability: only participating clients run local
+steps, upload fresh payloads, receive the broadcast, and update their
+modular blocks. The server's staleness-bounded FusionCache keeps every
+client's last-decoded (z_hat, y) so modular updates still train on up
+to N pairs when only K upload — absent clients' EF residuals stay
+frozen and their bytes never hit the ledger.
 """
 
 from __future__ import annotations
@@ -38,7 +47,7 @@ import numpy as np
 
 from repro.config import IFLConfig
 from repro.core.codec import get_codec
-from repro.core.comm import CommLedger
+from repro.core.rounds import RoundEngine
 
 
 def softmax_xent(logits, labels):
@@ -68,7 +77,15 @@ class IFLTrainer:
                  seed: int = 0):
         self.clients = list(clients)
         self.cfg = cfg
-        self.ledger = CommLedger()
+        # The engine owns the shared round plumbing: rng (one stream for
+        # minibatch sampling AND schedule draws), participation
+        # schedule, CommLedger, FusionCache, metrics history.
+        self.engine = RoundEngine(
+            len(self.clients), cfg.participation, seed=seed,
+            max_staleness=cfg.max_staleness,
+        )
+        self.ledger = self.engine.ledger
+        self.rng = self.engine.rng
         self.codec = get_codec(cfg.codec)
         # encode_with_state is a stateless passthrough for plain codecs,
         # so ONE jitted encode path serves the whole registry.
@@ -86,9 +103,9 @@ class IFLTrainer:
             c.cid: self.codec.init_state((cfg.batch_size, cfg.d_fusion))
             for c in clients
         }
-        self.rng = np.random.default_rng(seed)
         self._base_step = {}
         self._mod_step = {}
+        self._fwd_z = {}
         for c in self.clients:
             self._base_step[c.cid] = jax.jit(
                 functools.partial(self._base_step_impl, c.base_apply,
@@ -98,7 +115,6 @@ class IFLTrainer:
                 functools.partial(self._mod_step_impl, c.modular_apply,
                                   c.loss_fn)
             )
-            self._fwd_z = getattr(self, "_fwd_z", {})
             self._fwd_z[c.cid] = jax.jit(c.base_apply)
 
     # ------------------------------------------------------------ steps
@@ -124,18 +140,21 @@ class IFLTrainer:
     # ------------------------------------------------------------ data
 
     def _sample(self, c: Client) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        idx = self.rng.integers(0, c.num_samples, size=self.cfg.batch_size)
-        return jnp.asarray(c.data_x[idx]), jnp.asarray(c.data_y[idx])
+        return self.engine.sample(c, self.cfg.batch_size)
 
     # ------------------------------------------------------------ round
 
     def run_round(self) -> Dict[str, float]:
         cfg = self.cfg
+        eng = self.engine
+        participants = eng.participants()  # sorted client slots, this round
         losses = []
-        # --- Step 1: τ local base-block updates per client (eq. 7),
-        # reporting the mean loss over the τ steps (τ=0 is a legal
-        # fusion-only round: no base steps, loss is NaN by convention).
-        for c in self.clients:
+        # --- Step 1: τ local base-block updates per participating client
+        # (eq. 7), reporting the mean loss over the τ steps (τ=0 is a
+        # legal fusion-only round: no base steps, loss is NaN by
+        # convention). Absent clients are offline: no compute, no bytes.
+        for k in participants:
+            c = self.clients[k]
             step_losses = []
             for _ in range(cfg.tau):
                 x, y = self._sample(c)
@@ -150,9 +169,10 @@ class IFLTrainer:
 
         # --- Steps 2-3: fusion-layer outputs on a fresh minibatch, encode
         # with the wire codec (threading the client's EF residual, if the
-        # codec carries one), upload the *encoded* payload.
-        payloads, Z, Y = [], [], []
-        for c in self.clients:
+        # codec carries one), upload the *encoded* payload. Absent
+        # clients' EF residuals stay frozen.
+        for k in participants:
+            c = self.clients[k]
             x, y = self._sample(c)
             z = self._fwd_z[c.cid](c.params["base"], x)
             assert z.shape[-1] == cfg.d_fusion, (
@@ -162,33 +182,47 @@ class IFLTrainer:
                 z, self.ef_state[c.cid]
             )
             self.ledger.send_up((payload, y))  # the ONLY uplink bytes in IFL
-            payloads.append(payload)
-            # Every receiver reconstructs the same z_hat; decode once and
-            # train the modular blocks on it so the learning signal sees
-            # exactly what crossed the wire.
-            Z.append(self._decode(payload))
-            Y.append(y)
+            # Every receiver reconstructs the same z_hat; decode once at
+            # the server and cache it so the learning signal sees exactly
+            # what crossed the wire — and so the next partial round can
+            # re-broadcast it for this client if it goes absent.
+            eng.cache.put(int(k), payload=payload, z_hat=self._decode(payload),
+                          y=y, round_idx=eng.round_idx)
 
-        # --- Steps 4-5: server concatenates the encoded payloads and
-        # broadcasts them to all clients (downlink stays compressed too).
-        for _ in self.clients:
+        # --- Steps 4-5: server concatenates the valid cache entries
+        # (fresh uploads + absent clients' last payloads within the
+        # staleness bound) and broadcasts them to the PARTICIPANTS
+        # (absent clients are offline and receive nothing; downlink
+        # stays compressed too).
+        entries = eng.cache.valid_entries(eng.round_idx)
+        payloads = [e.payload for _, e in entries]
+        Z = [e.z_hat for _, e in entries]
+        Y = [e.y for _, e in entries]
+        for _ in participants:
             self.ledger.send_down((payloads, Y))
 
-        # --- Step 6: modular updates on every (z_i, y_i), sequentially.
+        # --- Step 6: modular updates on every cached (z_i, y_i),
+        # sequentially, for the participants.
         mod_losses = []
-        for c in self.clients:
-            mod = c.params["modular"]
+        for k in participants:
+            c = self.clients[k]
+            mod, ml = c.params["modular"], None
             for z_i, y_i in zip(Z, Y):
                 mod, ml = self._mod_step[c.cid](mod, z_i, y_i, cfg.lr_modular)
-            c.params = {"base": c.params["base"], "modular": mod}
-            mod_losses.append(float(ml))
+            if ml is not None:
+                c.params = {"base": c.params["base"], "modular": mod}
+                mod_losses.append(float(ml))
 
-        self.ledger.end_round()
-        return {
-            "base_loss": float(np.mean(losses)),
-            "mod_loss": float(np.mean(mod_losses)),
+        staleness = eng.cache.staleness(eng.round_idx)
+        return eng.end_round({
+            "base_loss": float(np.mean(losses)) if losses else float("nan"),
+            "mod_loss": (float(np.mean(mod_losses)) if mod_losses
+                         else float("nan")),
             "uplink_mb": self.ledger.uplink_mb,
-        }
+            "participants": [int(k) for k in participants],
+            "cache_size": len(entries),
+            "max_staleness_seen": max(staleness.values(), default=0),
+        })
 
     # ------------------------------------------------------------ eval
 

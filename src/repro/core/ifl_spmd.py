@@ -31,6 +31,21 @@ on a derived mesh ('client', 'data', 'model'):
     stays one program with zero extra collectives (the residual is
     client-local and never crosses the 'client' axis). Build the initial
     state with ``init_ef_state``.
+
+    Partial participation (``partial_participation=True``) threads a
+    per-round (N,) bool ``mask`` through the same jitted program: the
+    gathered payload becomes carried round state — a ``payload_cache``
+    holding each client's last encoded payload, its fusion labels, and
+    an ``age`` counter, every leaf sharded P('client', ...) exactly like
+    the wire format (build it with ``init_payload_cache``). One
+    ``jnp.where``-masked encode refreshes participants' cache slots and
+    leaves absent clients' slots (and their EF residuals, base/modular
+    params, and optimizer state) bitwise frozen; the ONE all-gather then
+    moves the cache, so absent clients contribute their last payload at
+    zero fresh uplink. Cached entries older than ``max_staleness``
+    rounds get weight 0 in the modular update (the eager FusionCache
+    evicts them — same staleness semantics, fixed SPMD shapes), and
+    never-filled slots are invalid until first upload.
   - Phase 3 (alg. lines 22-31): scan over the N gathered chunks (z_i, y_i),
     each a sequential SGD step on the modular block — the pseudocode's
     per-i update order, which also microbatches the N× modular compute.
@@ -105,6 +120,19 @@ def _full_loss_wrt_base(base, mod, cfg: ModelConfig, batch):
 # ------------------------------------------------------------------ round
 
 
+_NEVER = 2 ** 30  # age of a never-filled cache slot (always invalid)
+
+
+def _tree_where(mask, new, old):
+    """Per-client select over pytrees whose leaves lead with (N, ...)."""
+
+    def pick(n, o):
+        m = mask.reshape(mask.shape + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+
+    return jax.tree.map(pick, new, old)
+
+
 def make_ifl_round_step(
     cfg: ModelConfig,
     mesh: Mesh,
@@ -116,6 +144,8 @@ def make_ifl_round_step(
     optimizer: str = "sgd",
     codec: str = "fp32",
     debug_return_zhat: bool = False,
+    partial_participation: bool = False,
+    max_staleness: Optional[int] = None,
 ) -> Callable:
     """Build the jittable one-round IFL step for stacked-client params.
 
@@ -131,9 +161,25 @@ def make_ifl_round_step(
     P('client', ...) — the per-client EF21 residual carried round to
     round. ``debug_return_zhat`` adds the pre-encode ``z`` and decoded
     ``z_hat`` to metrics (tests/parity only; never at production shapes).
+
+    ``partial_participation=True`` inserts a bool (N,) ``mask`` and a
+    ``payload_cache`` (from ``init_payload_cache``) after ``batch``:
+
+    Stateless: step(params, opt_state, batch, mask, cache)
+                 -> (params', opt_state', metrics, cache')
+    Stateful : step(params, opt_state, batch, mask, cache, ef_state)
+                 -> (params', opt_state', metrics, cache', ef_state')
+
+    Absent clients (mask False) are bitwise frozen — base/modular
+    params, optimizer state, and EF residual all keep their previous
+    values via ``jnp.where`` — and their cache slot re-enters the
+    all-gather unchanged at zero fresh uplink. ``max_staleness`` bounds
+    the cache ages admitted to the modular update (None = unbounded;
+    matches the eager FusionCache semantics, see repro.core.rounds).
     """
     opt = make_optimizer(optimizer)
     wire = get_codec(codec)
+    age_bound = _NEVER - 1 if max_staleness is None else int(max_staleness)
 
     def repl(spec_tail):
         return NamedSharding(mesh, P(*spec_tail))
@@ -170,8 +216,35 @@ def make_ifl_round_step(
             tail[-1] = "model"
         return jax.lax.with_sharding_constraint(e, repl(("client", *tail)))
 
-    def _round_impl(params, opt_state, batch, ef_state):
+    def cache_constrain(enc, z_ndim, d_fusion):
+        """Keep the carried payload cache sharded like the wire format
+        *before* the gather: leading 'client', per-client batch on
+        'data', full-d_fusion last axis on 'model'; sidecars client-
+        sharded only. The all-gather is what replicates it."""
+
+        def spec_of(leaf):
+            if leaf.ndim == z_ndim:
+                tail = [None] * (leaf.ndim - 1)
+                tail[0] = "data"
+                if leaf.shape[-1] == d_fusion:
+                    tail[-1] = "model"
+                return repl(("client", *tail))
+            return repl(("client",) + (None,) * (leaf.ndim - 1))
+
+        return jax.tree.map(
+            lambda a: jax.lax.with_sharding_constraint(a, spec_of(a)), enc
+        )
+
+    def _round_impl(params, opt_state, batch, ef_state, mask, cache):
         base_p, mod_p = params["base"], params["modular"]
+        maskf = None if mask is None else mask.astype(jnp.float32)
+        n_part = None if mask is None else jnp.maximum(maskf.sum(), 1.0)
+
+        def client_mean(losses):
+            """Mean loss over participating clients only."""
+            if maskf is None:
+                return jnp.mean(losses)
+            return (losses * maskf).sum() / n_part
 
         # ---------------- Phase 1: τ local base-block updates (eq. 7).
         def tau_batch(i_slice):
@@ -194,11 +267,18 @@ def make_ifl_round_step(
             new_bp, new_ost = jax.vmap(
                 lambda p, g, s: opt.update(p, g, s, lr_base)
             )(bp, grads, ost)
-            return (new_bp, new_ost), jnp.mean(losses)
+            return (new_bp, new_ost), client_mean(losses)
 
-        (base_p, ost_b), base_losses = jax.lax.scan(
+        (base_new, ost_b), base_losses = jax.lax.scan(
             base_step, (base_p, opt_state["base"]), base_batches
         )
+        if mask is None:
+            base_p = base_new
+        else:
+            # Absent clients' base params and optimizer state stay
+            # bitwise frozen (they are offline, not just unsampled).
+            base_p = _tree_where(mask, base_new, params["base"])
+            ost_b = _tree_where(mask, ost_b, opt_state["base"])
 
         # ---------------- Phase 2: fusion exchange (lines 13-21).
         fusion_mb = jax.tree.map(lambda a: a[:, tau], batch)  # (N, Bc, ...)
@@ -213,24 +293,55 @@ def make_ifl_round_step(
         # the modular updates — the learning signal sees the wire loss.
         # EF codecs fold the carried residual into the encode and emit
         # the next-round residual here, before the gather, so it stays
-        # client-local.
+        # client-local. Under partial participation the masked encode
+        # refreshes participants' cache slots only; absent clients'
+        # residuals and cache slots pass through untouched.
         if wire.has_state:
-            enc, ef_state = jax.vmap(wire.encode_with_state)(z, ef_state)
-            ef_state = jax.tree.map(ef_constrain, ef_state)
+            enc_new, ef_new = jax.vmap(wire.encode_with_state)(z, ef_state)
+            if mask is not None:
+                ef_new = _tree_where(mask, ef_new, ef_state)
+            ef_state = jax.tree.map(ef_constrain, ef_new)
         else:
-            enc = jax.vmap(wire.encode)(z)
+            enc_new = jax.vmap(wire.encode)(z)
+        if mask is None:
+            enc = enc_new
+            yg_src = fusion_mb["tokens"]
+            new_cache = None
+            valid = None
+        else:
+            enc = _tree_where(mask, enc_new, cache["payload"])
+            yg_src = jnp.where(
+                mask.reshape((-1,) + (1,) * (cache["tokens"].ndim - 1)),
+                fusion_mb["tokens"], cache["tokens"],
+            )
+            age = jnp.where(
+                mask, 0, jnp.minimum(cache["age"], _NEVER - 1) + 1
+            ).astype(cache["age"].dtype)
+            new_cache = cache_constrain(
+                {"payload": enc, "tokens": yg_src, "age": age},
+                z.ndim, z.shape[-1],
+            )
+            enc, yg_src = new_cache["payload"], new_cache["tokens"]
+            # Staleness bound: expired (or never-filled) slots carry
+            # weight 0 in the modular update — the fixed-shape analogue
+            # of the eager FusionCache's eviction.
+            valid = (age <= age_bound).astype(jnp.float32)
         enc = gather_payload(enc, z.ndim, z.shape[-1])
         zg = jax.vmap(
             lambda p: wire.decode(p, shape=z.shape[1:], dtype=z.dtype)
         )(enc)
         yg = jax.lax.with_sharding_constraint(
-            fusion_mb["tokens"], repl((None, "data", None))
+            yg_src, repl((None, "data", None))
         )
 
         # ---------------- Phase 3: modular updates (lines 22-31).
-        def mod_step(carry, zi_yi):
+        def mod_step(carry, chunk):
             mp, ost = carry
-            z_i, y_i = zi_yi  # (Bc, S, dF) replicated over 'client'
+            if valid is None:
+                z_i, y_i = chunk  # (Bc, S, dF) replicated over 'client'
+                w_i = 1.0
+            else:
+                z_i, y_i, w_i = chunk  # w_i: 0.0 for stale/empty slots
 
             def one_client(mp_k):
                 return jax.value_and_grad(_modular_loss)(mp_k, cfg, z_i, y_i)
@@ -239,29 +350,70 @@ def make_ifl_round_step(
             new_mp, new_ost = jax.vmap(
                 lambda p, g, s: opt.update(p, g, s, lr_modular)
             )(mp, grads, ost)
-            return (new_mp, new_ost), jnp.mean(losses)
+            if valid is not None:
+                # A stale/never-filled chunk must be a true no-op — the
+                # fixed-shape analogue of the eager cache's eviction.
+                # Select, don't zero the grads: a zero-grad update is
+                # NOT identity for stateful optimizers (adamw's
+                # bias-corrected momentum still moves params).
+                new_mp = jax.tree.map(
+                    lambda n, o: jnp.where(w_i > 0, n, o), new_mp, mp)
+                new_ost = jax.tree.map(
+                    lambda n, o: jnp.where(w_i > 0, n, o), new_ost, ost)
+            return (new_mp, new_ost), w_i * client_mean(losses)
 
-        (mod_p, ost_m), mod_losses = jax.lax.scan(
-            mod_step, (params["modular"], opt_state["modular"]), (zg, yg)
+        chunks = (zg, yg) if valid is None else (zg, yg, valid)
+        (mod_new, ost_m), mod_losses = jax.lax.scan(
+            mod_step, (params["modular"], opt_state["modular"]), chunks
         )
+        base_loss = jnp.mean(base_losses)
+        if mask is None:
+            mod_p = mod_new
+            mod_loss = jnp.mean(mod_losses)
+        else:
+            mod_p = _tree_where(mask, mod_new, params["modular"])
+            ost_m = _tree_where(mask, ost_m, opt_state["modular"])
+            mod_loss = mod_losses.sum() / jnp.maximum(valid.sum(), 1.0)
+            # Empty rounds (nobody up / nothing valid) report NaN, the
+            # eager trainers' convention — not a spurious 0.0 loss.
+            empty = maskf.sum() == 0
+            base_loss = jnp.where(empty, jnp.nan, base_loss)
+            mod_loss = jnp.where(
+                empty | (valid.sum() == 0), jnp.nan, mod_loss)
 
         new_params = {"base": base_p, "modular": mod_p}
         new_opt = {"base": ost_b, "modular": ost_m}
         metrics = {
-            "base_loss": jnp.mean(base_losses),
-            "mod_loss": jnp.mean(mod_losses),
+            "base_loss": base_loss,
+            "mod_loss": mod_loss,
         }
+        if mask is not None:
+            metrics["participating"] = maskf.sum()
+            metrics["cache_valid"] = valid.sum()
         if debug_return_zhat:
             metrics["z"] = z
             metrics["z_hat"] = zg
-        return new_params, new_opt, metrics, ef_state
+        return new_params, new_opt, metrics, new_cache, ef_state
 
-    if wire.has_state:
+    if partial_participation and wire.has_state:
+        def round_step(params, opt_state, batch, mask, cache, ef_state):
+            p, o, m, c2, e2 = _round_impl(
+                params, opt_state, batch, ef_state, mask, cache)
+            return p, o, m, c2, e2
+    elif partial_participation:
+        def round_step(params, opt_state, batch, mask, cache):
+            p, o, m, c2, _ = _round_impl(
+                params, opt_state, batch, (), mask, cache)
+            return p, o, m, c2
+    elif wire.has_state:
         def round_step(params, opt_state, batch, ef_state):
-            return _round_impl(params, opt_state, batch, ef_state)
+            p, o, m, _, e2 = _round_impl(
+                params, opt_state, batch, ef_state, None, None)
+            return p, o, m, e2
     else:
         def round_step(params, opt_state, batch):
-            p, o, m, _ = _round_impl(params, opt_state, batch, ())
+            p, o, m, _, _ = _round_impl(
+                params, opt_state, batch, (), None, None)
             return p, o, m
 
     return round_step
@@ -276,17 +428,41 @@ def init_ef_state(codec, z_shape: Tuple[int, ...]):
     return get_codec(codec).init_state(z_shape)
 
 
+def init_payload_cache(codec, z_shape: Tuple[int, ...],
+                       token_shape: Tuple[int, ...], *,
+                       dtype=jnp.float32):
+    """Initial carried payload cache for a partial-participation step.
+
+    ``z_shape`` is the stacked fusion-output shape (N, Bc, S, d_fusion)
+    and ``token_shape`` the stacked fusion-minibatch token shape
+    (N, Bc, S). The payload structure/dtypes come from encoding a zero
+    z with the wire codec (so the carry signature matches the masked
+    encode exactly); every slot starts at age ``_NEVER`` — invalid until
+    its client first uploads, regardless of the staleness bound."""
+    wire = get_codec(codec)
+    payload = jax.vmap(wire.encode)(jnp.zeros(z_shape, dtype))
+    return {
+        "payload": payload,
+        "tokens": jnp.zeros(token_shape, jnp.int32),
+        "age": jnp.full((z_shape[0],), _NEVER, jnp.int32),
+    }
+
+
 def init_ifl_state(key, cfg: ModelConfig, *, n_clients: int,
                    optimizer: str = "sgd"):
-    """Stacked-client params + per-block optimizer state."""
+    """Stacked-client params + per-block optimizer state.
+
+    The optimizer init is vmapped over the client axis so EVERY state
+    leaf leads with (N, ...) — adamw's scalar step counter included —
+    matching the per-client vmap the round step applies to opt.update."""
     opt = make_optimizer(optimizer)
     keys = jax.random.split(key, n_clients)
     params = jax.vmap(lambda k: init_lm(k, cfg))(keys)
     pdt = nn.dtype_of(cfg.param_dtype)
     params = jax.tree.map(lambda a: a.astype(pdt), params)
     opt_state = {
-        "base": opt.init(params["base"]),
-        "modular": opt.init(params["modular"]),
+        "base": jax.vmap(opt.init)(params["base"]),
+        "modular": jax.vmap(opt.init)(params["modular"]),
     }
     return params, opt_state
 

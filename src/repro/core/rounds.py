@@ -1,0 +1,321 @@
+"""Participation-aware round engine — one scheduling core for FL/FSL/IFL.
+
+The paper's Algorithm 1 (and the FL/FSL baselines) assume every client
+shows up every round.  Real federated deployments are exactly the
+opposite regime (HeteroFL, SCAFFOLD reference implementations sample
+client subsets per round), and communication efficiency at the client
+boundary matters *most* when clients are intermittently available.  This
+module owns everything the three eager trainers used to triplicate:
+
+  ParticipationSchedule   who shows up in round t
+    - FullParticipation         everyone, every round (the seed behavior)
+    - UniformK(k)               uniform K-of-N sampling without
+                                replacement (the SCAFFOLD/FedAvg regime)
+    - BernoulliSchedule(p)      independent per-client availability
+    - StragglerSchedule(f, m)   deterministic straggler trace: a fixed
+                                fraction f of the fleet only uploads
+                                every m-th round
+  FusionCache             server-side staleness-bounded payload cache
+  RoundEngine             rng + schedule + ledger + metrics history
+
+Parse schedules from strings (the benchmarks' ``--participation`` axis):
+``full`` | ``k2`` | ``bern0.5`` | ``straggle(0.2,3)``.
+
+Cache-staleness semantics
+-------------------------
+IFL's modular update (Algorithm 1 lines 24-28) wants N ``(z_hat, y)``
+pairs per round, one per client.  Under partial participation only K
+clients upload fresh payloads; the server's ``FusionCache`` retains each
+client's *last decoded* payload so the broadcast still carries up to N
+pairs — absent clients are represented by their most recent upload.  An
+entry's **staleness** is ``current_round - round_uploaded`` (0 for a
+fresh upload).  Entries older than ``max_staleness`` rounds are evicted
+and simply drop out of the broadcast: training degrades gracefully to
+fewer pairs rather than learning from arbitrarily old activations
+(``max_staleness=None`` never evicts; ``max_staleness=0`` broadcasts
+fresh uploads only, disabling the cache).  Byte accounting is honest on
+both legs: only participants upload (absent clients' EF residuals stay
+frozen and their bytes never hit the ledger), and the server broadcasts
+the full valid cache to *participants only* — so one round costs
+``K * (z + y)`` up and ``K * M * (z + y)`` down, where M is the number
+of valid cache entries (see ``comm.ifl_round_bytes(participating=,
+broadcast_entries=)``, which stays in exact parity with the ledger).
+
+The SPMD trainer threads the same semantics through one jitted program:
+the gathered payload becomes carried round state updated by a masked
+encode, with an ``age`` vector enforcing the staleness bound (see
+``ifl_spmd.make_ifl_round_step(partial_participation=True)``).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.comm import CommLedger
+
+__all__ = [
+    "ParticipationSchedule",
+    "FullParticipation",
+    "UniformK",
+    "BernoulliSchedule",
+    "StragglerSchedule",
+    "parse_participation",
+    "FusionCache",
+    "CacheEntry",
+    "RoundEngine",
+]
+
+
+# ------------------------------------------------------------- schedules
+
+
+class ParticipationSchedule:
+    """Who participates in round t.  ``mask`` returns a bool (n,) array.
+
+    Schedules that need randomness draw from the generator they are
+    handed (the engine's); deterministic schedules must not touch it, so
+    a ``full`` run consumes exactly the same rng stream as the
+    pre-engine trainers (bitwise-reproducible seeds).
+    """
+
+    name: str = "abstract"
+
+    def mask(self, round_idx: int, n: int,
+             rng: np.random.Generator) -> np.ndarray:
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.name!r})"
+
+
+@dataclass(frozen=True, repr=False)
+class FullParticipation(ParticipationSchedule):
+    """Every client, every round — Algorithm 1 as written."""
+
+    name: str = "full"
+
+    def mask(self, round_idx, n, rng):
+        return np.ones(n, bool)
+
+
+@dataclass(frozen=True, repr=False)
+class UniformK(ParticipationSchedule):
+    """Uniform K-of-N sampling without replacement, fresh each round."""
+
+    k: int = 1
+    name: str = ""
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if not self.name:
+            object.__setattr__(self, "name", f"k{self.k}")
+
+    def mask(self, round_idx, n, rng):
+        m = np.zeros(n, bool)
+        m[rng.choice(n, size=min(self.k, n), replace=False)] = True
+        return m
+
+
+@dataclass(frozen=True, repr=False)
+class BernoulliSchedule(ParticipationSchedule):
+    """Independent per-client availability: P(client up) = p.
+
+    Rounds with zero participants are legal (nothing is transmitted,
+    nothing trains); the engine reports them as empty rounds.
+    """
+
+    p: float = 0.5
+    name: str = ""
+
+    def __post_init__(self):
+        if not 0.0 < self.p <= 1.0:
+            raise ValueError(f"p must be in (0, 1], got {self.p}")
+        if not self.name:
+            object.__setattr__(self, "name", f"bern{self.p:g}")
+
+    def mask(self, round_idx, n, rng):
+        return rng.random(n) < self.p
+
+
+@dataclass(frozen=True, repr=False)
+class StragglerSchedule(ParticipationSchedule):
+    """Deterministic straggler/dropout trace (no rng draws at all).
+
+    The last ``ceil(frac * n)`` client slots are stragglers; straggler
+    slot i only participates in rounds with ``t % period == i % period``
+    (staggered by slot index, so straggler upload rounds spread across
+    the period — though slots sharing a residue mod ``period`` still
+    miss the same rounds).  Everyone else is always up.  Reproducible
+    from (round_idx, n) alone — the trace a deployment postmortem would
+    replay.
+    """
+
+    frac: float = 0.2
+    period: int = 3
+    name: str = ""
+
+    def __post_init__(self):
+        if not 0.0 <= self.frac <= 1.0:
+            raise ValueError(f"frac must be in [0, 1], got {self.frac}")
+        if self.period < 1:
+            raise ValueError(f"period must be >= 1, got {self.period}")
+        if not self.name:
+            object.__setattr__(
+                self, "name", f"straggle({self.frac:g},{self.period})"
+            )
+
+    def mask(self, round_idx, n, rng):
+        m = np.ones(n, bool)
+        n_strag = int(np.ceil(self.frac * n))
+        for i in range(n - n_strag, n):
+            m[i] = (round_idx % self.period) == (i % self.period)
+        return m
+
+
+_STRAGGLE_RE = re.compile(r"^straggle\(([^,]+),(\d+)\)$")
+
+
+def parse_participation(
+    spec: Union[str, ParticipationSchedule, None],
+) -> ParticipationSchedule:
+    """Resolve a schedule spec: ``full`` | ``k<K>`` | ``bern<p>`` |
+    ``straggle(<frac>,<period>)`` — or pass a schedule through."""
+    if spec is None:
+        return FullParticipation()
+    if isinstance(spec, ParticipationSchedule):
+        return spec
+    if spec == "full":
+        return FullParticipation()
+    if spec.startswith("k"):
+        try:
+            k = int(spec[1:])
+        except ValueError:
+            k = None
+        if k is not None:
+            return UniformK(k)  # constructor errors (k<1) propagate
+    if spec.startswith("bern"):
+        try:
+            p = float(spec[len("bern"):])
+        except ValueError:
+            p = None
+        if p is not None:
+            return BernoulliSchedule(p)  # p-range errors propagate
+    m = _STRAGGLE_RE.match(spec)
+    if m:
+        return StragglerSchedule(float(m.group(1)), int(m.group(2)))
+    raise ValueError(
+        f"unknown participation spec {spec!r}; expected 'full', 'k<K>' "
+        "(e.g. k2), 'bern<p>' (e.g. bern0.5), or "
+        "'straggle(<frac>,<period>)' (e.g. straggle(0.2,3))"
+    )
+
+
+# ----------------------------------------------------------- fusion cache
+
+
+@dataclass
+class CacheEntry:
+    """Last upload of one client slot, as the server decoded it."""
+
+    payload: Any  # the encoded wire payload (what a broadcast re-ships)
+    z_hat: Any  # decoded fusion output — what modular updates train on
+    y: Any  # labels (ride uncompressed)
+    round_idx: int  # round the payload was uploaded (staleness anchor)
+
+
+class FusionCache:
+    """Server-side staleness-bounded cache of decoded fusion payloads.
+
+    One entry per client *slot* (index into the trainer's client list),
+    holding the last (payload, z_hat, y) that slot uploaded and the
+    round it did so.  ``valid_entries`` returns the slots whose entry is
+    at most ``max_staleness`` rounds old — and evicts the rest, so the
+    cache never re-serves an expired payload.  See the module docstring
+    for the full semantics.
+    """
+
+    def __init__(self, max_staleness: Optional[int] = None):
+        if max_staleness is not None and max_staleness < 0:
+            raise ValueError("max_staleness must be >= 0 or None")
+        self.max_staleness = max_staleness
+        self._entries: Dict[int, CacheEntry] = {}
+
+    def put(self, slot: int, *, payload, z_hat, y, round_idx: int) -> None:
+        self._entries[slot] = CacheEntry(payload, z_hat, y, round_idx)
+
+    def valid_entries(self, round_idx: int) -> List[Tuple[int, CacheEntry]]:
+        """(slot, entry) pairs within the staleness bound, slot-ordered;
+        expired entries are evicted as a side effect."""
+        if self.max_staleness is not None:
+            expired = [
+                s for s, e in self._entries.items()
+                if round_idx - e.round_idx > self.max_staleness
+            ]
+            for s in expired:
+                del self._entries[s]
+        return sorted(self._entries.items())
+
+    def staleness(self, round_idx: int) -> Dict[int, int]:
+        """Per-slot age (rounds since upload) of the current entries."""
+        return {s: round_idx - e.round_idx
+                for s, e in sorted(self._entries.items())}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, slot: int) -> bool:
+        return slot in self._entries
+
+
+# ------------------------------------------------------------ round engine
+
+
+class RoundEngine:
+    """The scheduling core shared by FL / FSL / IFL trainers.
+
+    Owns the pieces every trainer used to hand-roll: the rng (one stream
+    for minibatch sampling AND schedule draws, so a seed pins the whole
+    run), the participation schedule, the CommLedger, the FusionCache,
+    the round counter, and a metrics history.  Trainers call
+    ``participants()`` once per round, feed the ledger as they transmit,
+    and finish with ``end_round(metrics)``.
+    """
+
+    def __init__(self, n_clients: int,
+                 participation: Union[str, ParticipationSchedule, None] = None,
+                 *, seed: int = 0, max_staleness: Optional[int] = None):
+        self.n_clients = n_clients
+        self.schedule = parse_participation(participation)
+        self.rng = np.random.default_rng(seed)
+        self.ledger = CommLedger()
+        self.cache = FusionCache(max_staleness)
+        self.round_idx = 0
+        self.history: List[Dict[str, Any]] = []
+
+    # -- per-round API ---------------------------------------------------
+
+    def participants(self) -> np.ndarray:
+        """Sorted slot indices participating in the current round."""
+        mask = self.schedule.mask(self.round_idx, self.n_clients, self.rng)
+        return np.flatnonzero(mask)
+
+    def sample(self, client, batch_size: int):
+        """One private minibatch from ``client`` (needs .data_x/.data_y
+        /.num_samples) — the exact draw order the seed trainers used."""
+        idx = self.rng.integers(0, client.num_samples, size=batch_size)
+        return jnp.asarray(client.data_x[idx]), jnp.asarray(client.data_y[idx])
+
+    def end_round(self, metrics: Dict[str, Any]) -> Dict[str, Any]:
+        """Close the ledger round, log metrics, advance the counter."""
+        self.ledger.end_round()
+        metrics = dict(metrics)
+        metrics.setdefault("round", self.round_idx)
+        self.history.append(metrics)
+        self.round_idx += 1
+        return metrics

@@ -21,8 +21,9 @@ from repro.models.small import (
 )
 
 PARITY_CODECS = ["fp32", "bf16", "fp16", "int8", "int8_channel",
-                 "int8_row", "topk", "int4", "ef(int8_row)", "ef(int4)",
-                 "ef(topk0.1)"]
+                 "int8_row", "topk", "int4", "sketch", "sketch0.5",
+                 "ef(int8_row)", "ef(int4)", "ef(topk0.1)",
+                 "ef(sketch0.25)"]
 
 
 def _z(shape=(8, 432), seed=0, scale=2.0):
@@ -115,6 +116,46 @@ def test_topk_ratio_parsing_and_registry_errors():
     with pytest.raises(ValueError):
         get_codec("topk7.5")
     assert "int8" in available_codecs()
+    assert "sketch" in available_codecs()
+    assert get_codec("sketch0.1").w_of(100) == 10
+    with pytest.raises(ValueError):
+        get_codec("sketch7.5")
+
+
+def test_sketch_bucket_mean_decode_and_no_sidecar():
+    """Count-sketch: the wire payload is ONLY the w bucket sums (no
+    index sidecar, unlike topk); decode is the bucket-mean estimator,
+    which reconstructs each feature as the signed mean of its bucket —
+    and is therefore non-expansive (the projection property the
+    registry-wide energy bound relies on)."""
+    from repro.core.codec import _sketch_tables
+
+    codec = get_codec("sketch0.25")
+    z = _z((6, 64))
+    payload = codec.encode(z)
+    assert set(payload) == {"sketch"}  # nothing else crosses the wire
+    w = codec.w_of(64)
+    assert payload["sketch"].shape == (6, w)
+    h, s, counts = _sketch_tables(64, w, codec.seed)
+    zn = np.asarray(z)
+    # Hand-built sketch: bucket sums of the signed features.
+    expect = np.zeros((6, w), np.float32)
+    for i in range(64):
+        expect[:, h[i]] += zn[:, i] * s[i]
+    np.testing.assert_allclose(np.asarray(payload["sketch"]), expect,
+                               rtol=1e-5, atol=1e-5)
+    zh = np.asarray(codec.decode(payload, shape=z.shape))
+    np.testing.assert_allclose(
+        zh, (expect / counts)[:, h] * s, rtol=1e-5, atol=1e-5)
+    # Non-expansive, deterministically (not just in expectation).
+    assert np.linalg.norm(zh - zn) <= np.linalg.norm(zn) + 1e-5
+    # decode without the original shape must refuse (w is not
+    # invertible to d).
+    with pytest.raises(ValueError):
+        codec.decode(payload)
+    # Same shared tables on both ends: a fresh codec instance decodes.
+    zh2 = get_codec("sketch0.25").decode(payload, shape=z.shape)
+    np.testing.assert_array_equal(zh, np.asarray(zh2))
 
 
 # ------------------------------------------------------------ byte parity
@@ -161,7 +202,8 @@ def test_ef_wrapping_preserves_wire_format():
 
 
 @pytest.mark.parametrize("name", ["fp32", "bf16", "int8", "topk",
-                                  "int4", "ef(int8_row)", "ef(topk0.1)"])
+                                  "int4", "sketch", "ef(int8_row)",
+                                  "ef(topk0.1)", "ef(sketch0.25)"])
 def test_ledger_parity_two_client_round(name):
     """CommLedger measured bytes == ifl_round_bytes(..., codec=) on a
     real 2-client round — the acceptance-criteria parity check."""

@@ -177,6 +177,157 @@ def test_ef_spmd_residual_decays_topk(setup):
     assert float(jnp.linalg.norm(ef)) > 0.0  # topk really drops mass
 
 
+def _eager_codec_rig(codec):
+    """The eager trainer's exact jitted encode/decode machinery, as in
+    test_ef_round_state_eager_spmd_parity."""
+    from repro.config import IFLConfig
+    from repro.core import Client, IFLTrainer
+
+    eager_cfg = IFLConfig(n_clients=N, batch_size=B * S,
+                          d_fusion=32, codec=codec)
+    dummy = np.zeros((4, 28, 28, 1), np.float32)
+    clients = [Client(cid=k, params={},
+                      base_apply=lambda p, x: x,
+                      modular_apply=lambda p, z: z,
+                      data_x=dummy, data_y=np.zeros((4,), np.int32))
+               for k in range(N)]
+    return IFLTrainer(clients, eager_cfg, seed=0)
+
+
+@pytest.mark.parametrize("codec", ["int8_row", "ef(int8_row)"])
+def test_masked_round_eager_spmd_parity(setup, codec):
+    """Bitwise eager↔SPMD parity for a PARTIAL round, one stateless and
+    one ef(...) codec: round 1 runs with everyone up (fills the payload
+    cache), round 2 masks client 1 out. The SPMD program's decoded
+    z_hat must equal — bit for bit — what the eager engine's jitted
+    encode/decode produces for the participant's fresh z plus the
+    cached round-1 payload for the absent client, the absent client's
+    EF residual must stay frozen, and its params must not move."""
+    from repro.core.ifl_spmd import init_ef_state, init_payload_cache
+
+    cfg, mesh, params, opt_state, _, batch = setup
+    has_state = codec.startswith("ef(")
+    step = jax.jit(make_ifl_round_step(
+        cfg, mesh, n_clients=N, tau=TAU, lr_base=1e-2, lr_modular=1e-2,
+        codec=codec, debug_return_zhat=True,
+        partial_participation=True, max_staleness=2,
+    ))
+    cache = init_payload_cache(codec, (N, B, S, cfg.d_fusion), (N, B, S))
+    full = jnp.ones((N,), bool)
+    part = jnp.array([True, False])
+    ef = init_ef_state(codec, (N, B, S, cfg.d_fusion))
+    with mesh:
+        if has_state:
+            p1, o1, m1, c1, ef1 = step(params, opt_state, batch, full,
+                                       cache, ef)
+            p2, o2, m2, c2, ef2 = step(p1, o1, batch, part, c1, ef1)
+        else:
+            p1, o1, m1, c1 = step(params, opt_state, batch, full, cache)
+            p2, o2, m2, c2 = step(p1, o1, batch, part, c1)
+    assert float(m2["participating"]) == 1.0
+    assert float(m2["cache_valid"]) == 2.0  # stale slot inside the bound
+    np.testing.assert_array_equal(np.asarray(c2["age"]), [0, 1])
+
+    # Eager replay on the SPMD program's own z tensors.
+    tr = _eager_codec_rig(codec)
+    z1 = np.asarray(m1["z"])
+    z2 = np.asarray(m2["z"])
+    dF = cfg.d_fusion
+    ef_np = {k: tr.ef_state[k] for k in range(N)}
+    pay1 = {}
+    for k in range(N):
+        pay1[k], ef_np[k] = tr._encode_state(
+            jnp.asarray(z1[k].reshape(B * S, dF)), ef_np[k])
+    # Round 2: only client 0 re-encodes; client 1 serves its cache.
+    pay2_0, ef2_0 = tr._encode_state(
+        jnp.asarray(z2[0].reshape(B * S, dF)), ef_np[0])
+    expected = {0: tr._decode(pay2_0), 1: tr._decode(pay1[1])}
+    z_hat2 = np.asarray(m2["z_hat"])
+    for k in range(N):
+        np.testing.assert_array_equal(
+            np.asarray(expected[k]), z_hat2[k].reshape(B * S, dF))
+    if has_state:
+        # Participant's residual advanced; absent client's is frozen at
+        # its round-1 value — bitwise.
+        np.testing.assert_array_equal(
+            np.asarray(ef2_0), np.asarray(ef2)[0].reshape(B * S, dF))
+        np.testing.assert_array_equal(
+            np.asarray(ef1)[1], np.asarray(ef2)[1])
+    # Absent client bitwise frozen across params and optimizer state.
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a)[1], np.asarray(b)[1])
+
+
+@pytest.mark.parametrize("optimizer", ["sgd", "adamw"])
+def test_masked_round_staleness_excludes_expired(setup, optimizer):
+    """max_staleness=0: an expired cache chunk is a true NO-OP in the
+    modular scan, for stateful optimizers too — the participant's
+    modular params match a single hand-rolled update on the one valid
+    chunk to jit-fusion epsilon (regression: zero-weighting the grads
+    instead of skipping let adamw's bias-corrected momentum move params
+    by ~1e-1, four orders of magnitude above this tolerance)."""
+    from repro.core.ifl_spmd import _modular_loss, init_payload_cache
+    from repro.optim import make_optimizer
+
+    cfg, mesh, params, opt_state, _, batch = setup
+    opt = make_optimizer(optimizer)
+    opt_state = {"base": jax.vmap(opt.init)(params["base"]),
+                 "modular": jax.vmap(opt.init)(params["modular"])}
+    step = jax.jit(make_ifl_round_step(
+        cfg, mesh, n_clients=N, tau=TAU, lr_base=1e-2, lr_modular=1e-2,
+        optimizer=optimizer, partial_participation=True, max_staleness=0,
+        debug_return_zhat=True,
+    ))
+    cache = init_payload_cache("fp32", (N, B, S, cfg.d_fusion), (N, B, S))
+    with mesh:
+        p1, o1, m1, c1 = step(params, opt_state, batch,
+                              jnp.ones((N,), bool), cache)
+        p2, o2, m2, c2 = step(p1, o1, batch, jnp.array([True, False]), c1)
+    assert float(m1["cache_valid"]) == 2.0
+    assert float(m2["cache_valid"]) == 1.0  # age-1 slot expired at bound 0
+    assert np.isfinite(float(m2["mod_loss"]))
+
+    # Hand-rolled expectation for the participant (client 0): exactly
+    # ONE modular update, on the valid chunk (its own fresh payload).
+    z0 = jnp.asarray(np.asarray(m2["z_hat"])[0])
+    y0 = batch["tokens"][0, TAU]
+    mp0 = jax.tree.map(lambda a: a[0], p1["modular"])
+    os0 = jax.tree.map(lambda a: a[0], o1["modular"])
+    grads = jax.grad(_modular_loss)(mp0, cfg, z0, y0)
+    exp_mp, _ = opt.update(mp0, grads, os0, 1e-2)
+    for a, b in zip(jax.tree.leaves(exp_mp),
+                    jax.tree.leaves(jax.tree.map(lambda x: x[0],
+                                                 p2["modular"]))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=0)
+
+
+def test_masked_round_empty_is_noop_with_nan_losses(setup):
+    """All-False mask (a legal Bernoulli draw): params, opt state and
+    cache bitwise unchanged except ages +1, losses NaN — the eager
+    trainers' empty-round convention, not a spurious 0.0."""
+    from repro.core.ifl_spmd import init_payload_cache
+
+    cfg, mesh, params, opt_state, _, batch = setup
+    step = jax.jit(make_ifl_round_step(
+        cfg, mesh, n_clients=N, tau=TAU, lr_base=1e-2, lr_modular=1e-2,
+        partial_participation=True,
+    ))
+    cache = init_payload_cache("fp32", (N, B, S, cfg.d_fusion), (N, B, S))
+    with mesh:
+        p1, o1, m1, c1 = step(params, opt_state, batch,
+                              jnp.ones((N,), bool), cache)
+        p2, o2, m2, c2 = step(p1, o1, batch, jnp.zeros((N,), bool), c1)
+    assert np.isnan(float(m2["base_loss"]))
+    assert np.isnan(float(m2["mod_loss"]))
+    assert float(m2["participating"]) == 0.0
+    for a, b in zip(jax.tree.leaves((p1, o1, c1["payload"])),
+                    jax.tree.leaves((p2, o2, c2["payload"]))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(c2["age"]),
+                                  np.asarray(c1["age"]) + 1)
+
+
 def test_dp_step_matches_manual_sgd():
     cfg = ModelConfig(num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
                       d_ff=64, vocab_size=64, compute_dtype="float32",

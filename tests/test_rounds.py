@@ -1,0 +1,394 @@
+"""Round-engine invariants: participation schedules, the staleness-
+bounded FusionCache, CommLedger helpers, and exact analytic↔ledger byte
+parity under every participation schedule × codec (including ef(...))
+for all three trainers."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import IFLConfig
+from repro.core import (
+    Client,
+    CommLedger,
+    FLTrainer,
+    FSLTrainer,
+    IFLTrainer,
+    fl_round_bytes,
+    fsl_round_bytes,
+    ifl_round_bytes,
+)
+from repro.core.rounds import (
+    BernoulliSchedule,
+    FullParticipation,
+    FusionCache,
+    ParticipationSchedule,
+    RoundEngine,
+    StragglerSchedule,
+    UniformK,
+    parse_participation,
+)
+
+# ------------------------------------------------------------- schedules
+
+
+def test_parse_participation_specs():
+    assert isinstance(parse_participation(None), FullParticipation)
+    assert isinstance(parse_participation("full"), FullParticipation)
+    k = parse_participation("k2")
+    assert isinstance(k, UniformK) and k.k == 2 and k.name == "k2"
+    b = parse_participation("bern0.5")
+    assert isinstance(b, BernoulliSchedule) and b.p == 0.5
+    s = parse_participation("straggle(0.2,3)")
+    assert isinstance(s, StragglerSchedule)
+    assert s.frac == 0.2 and s.period == 3
+    assert s.name == "straggle(0.2,3)"
+    # Schedules pass through untouched.
+    assert parse_participation(k) is k
+    for bad in ["k", "kX", "bern", "bern2.0", "straggle(0.2)", "gzip"]:
+        with pytest.raises(ValueError):
+            parse_participation(bad)
+    # Well-formed specs with out-of-range values surface the schedule's
+    # own constraint, not a misleading 'unknown spec' error.
+    with pytest.raises(ValueError, match="k must be >= 1"):
+        parse_participation("k0")
+    with pytest.raises(ValueError, match="p must be in"):
+        parse_participation("bern0.0")
+
+
+def test_schedule_mask_shapes_and_counts():
+    rng = np.random.default_rng(0)
+    n = 6
+    assert parse_participation("full").mask(0, n, rng).sum() == n
+    for r in range(5):
+        m = UniformK(2).mask(r, n, rng)
+        assert m.shape == (n,) and m.dtype == bool and m.sum() == 2
+    # k >= n degrades to full participation.
+    assert UniformK(99).mask(0, n, rng).sum() == n
+    for r in range(5):
+        m = BernoulliSchedule(0.5).mask(r, n, rng)
+        assert m.shape == (n,) and 0 <= m.sum() <= n
+
+
+def test_straggler_trace_is_deterministic_and_staggered():
+    s = StragglerSchedule(0.5, 3)  # slots 2,3 of 4 are stragglers
+    rng = np.random.default_rng(0)
+    masks = [s.mask(t, 4, rng) for t in range(6)]
+    # Deterministic: identical regardless of rng state.
+    masks2 = [s.mask(t, 4, np.random.default_rng(99)) for t in range(6)]
+    for a, b in zip(masks, masks2):
+        np.testing.assert_array_equal(a, b)
+    # Non-stragglers always up; straggler slot i up iff t % 3 == i % 3.
+    for t, m in enumerate(masks):
+        assert m[0] and m[1]
+        assert m[2] == (t % 3 == 2)
+        assert m[3] == (t % 3 == 0)
+
+
+def test_schedules_deterministic_under_fixed_seed():
+    for spec in ["k2", "bern0.5"]:
+        a = RoundEngine(4, spec, seed=7)
+        b = RoundEngine(4, spec, seed=7)
+        seq_a = [list(a.participants()) for _ in range(8)]
+        seq_b = [list(b.participants()) for _ in range(8)]
+        assert seq_a == seq_b, spec
+        c = RoundEngine(4, spec, seed=8)
+        seq_c = [list(c.participants()) for _ in range(8)]
+        assert seq_a != seq_c, spec  # a different seed must move the draw
+
+
+def test_full_schedule_consumes_no_rng():
+    """A 'full' run must replay the exact pre-engine sampling stream:
+    the schedule takes zero draws from the engine rng."""
+    eng = RoundEngine(4, "full", seed=5)
+    eng.participants()
+    ref = np.random.default_rng(5)
+    got = eng.rng.integers(0, 1000, size=8)
+    np.testing.assert_array_equal(got, ref.integers(0, 1000, size=8))
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError):
+        UniformK(0)
+    with pytest.raises(ValueError):
+        BernoulliSchedule(0.0)
+    with pytest.raises(ValueError):
+        StragglerSchedule(1.5, 3)
+    with pytest.raises(ValueError):
+        StragglerSchedule(0.2, 0)
+
+
+# ----------------------------------------------------------- fusion cache
+
+
+def test_fusion_cache_put_valid_staleness():
+    cache = FusionCache(max_staleness=2)
+    cache.put(0, payload="p0", z_hat="z0", y="y0", round_idx=0)
+    cache.put(1, payload="p1", z_hat="z1", y="y1", round_idx=1)
+    entries = cache.valid_entries(1)
+    assert [s for s, _ in entries] == [0, 1]
+    assert cache.staleness(1) == {0: 1, 1: 0}
+    # Round 3: slot 0 is 3 rounds old > bound 2 -> evicted for good.
+    entries = cache.valid_entries(3)
+    assert [s for s, _ in entries] == [1]
+    assert len(cache) == 1 and 0 not in cache and 1 in cache
+    # Re-upload resurrects the slot.
+    cache.put(0, payload="p0'", z_hat="z0'", y="y0'", round_idx=3)
+    assert [s for s, _ in cache.valid_entries(3)] == [0, 1]
+    assert cache.valid_entries(3)[0][1].payload == "p0'"
+
+
+def test_fusion_cache_bounds():
+    # max_staleness=0: only same-round (fresh) entries are valid.
+    cache = FusionCache(max_staleness=0)
+    cache.put(0, payload="p", z_hat="z", y="y", round_idx=0)
+    assert [s for s, _ in cache.valid_entries(0)] == [0]
+    assert cache.valid_entries(1) == []
+    # None: never evicts.
+    cache = FusionCache(None)
+    cache.put(0, payload="p", z_hat="z", y="y", round_idx=0)
+    assert [s for s, _ in cache.valid_entries(10 ** 6)] == [0]
+    with pytest.raises(ValueError):
+        FusionCache(-1)
+
+
+# ---------------------------------------------------------- ledger helpers
+
+
+def test_ledger_downlink_and_round_mb():
+    led = CommLedger()
+    led.send_up((jnp.zeros((250, 1000), jnp.float32),))  # 1e6 B up
+    led.send_down((jnp.zeros((500, 1000), jnp.float32),))  # 2e6 B down
+    led.end_round()
+    led.send_down((jnp.zeros((125, 1000), jnp.float32),))  # 5e5 B down
+    led.end_round()
+    assert led.uplink_mb == 1.0
+    assert led.downlink_mb == 2.5
+    assert led.total_mb == 3.5
+    assert led.round_mb(0) == 3.0
+    assert led.round_mb(1) == 0.5
+    assert led.round_mb(-1) == 0.5  # list-style negative indexing
+
+
+# ------------------------------------------------- trainers, tiny clients
+
+D_FUSION = 32
+N_CLIENTS = 4
+BATCH = 4
+
+
+def _tiny_clients(n=N_CLIENTS, d=D_FUSION, samples=64, seed=0):
+    """Linear toy vendors: base is an elementwise gain (z = x * g), so
+    d_fusion is satisfied with near-zero compute and full grad flow."""
+    rng = np.random.default_rng(seed)
+    clients = []
+    for k in range(n):
+        x = rng.normal(size=(samples, d)).astype(np.float32)
+        y = rng.integers(0, 10, size=samples).astype(np.int32)
+        params = {
+            "base": jnp.ones((d,)) * (1.0 + 0.1 * k),
+            "modular": jnp.asarray(
+                rng.normal(size=(d, 10)).astype(np.float32) * 0.05),
+        }
+        clients.append(Client(
+            cid=k, params=params,
+            base_apply=lambda p, x: x * p,
+            modular_apply=lambda m, z: z @ m,
+            data_x=x, data_y=y,
+        ))
+    return clients
+
+
+SCHEDULES = ["full", "k2", "bern0.5", "straggle(0.5,2)"]
+CODECS = ["fp32", "int8_row", "sketch", "ef(int4)", "ef(topk0.25)"]
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize("codec", CODECS)
+def test_ifl_ledger_parity_under_schedule(schedule, codec):
+    """EXACT analytic↔ledger byte parity, every round, for every
+    participation schedule × codec: uplink = K fresh payloads, downlink
+    = the M-entry cache broadcast to the K participants."""
+    cfg = IFLConfig(n_clients=N_CLIENTS, tau=1, batch_size=BATCH,
+                    d_fusion=D_FUSION, codec=codec,
+                    participation=schedule)
+    tr = IFLTrainer(_tiny_clients(), cfg, seed=11)
+    for r in range(5):
+        m = tr.run_round()
+        k = len(m["participants"])
+        exp = ifl_round_bytes(
+            N_CLIENTS, BATCH, D_FUSION, codec=codec,
+            participating=k, broadcast_entries=m["cache_size"],
+        )
+        got = tr.ledger.per_round[r]
+        assert got["up"] == exp["up"], (r, got, exp)
+        assert got["down"] == exp["down"], (r, got, exp)
+        if schedule == "full":
+            assert k == N_CLIENTS and m["cache_size"] == N_CLIENTS
+        elif schedule == "k2":
+            assert k == 2
+
+
+def test_ifl_absent_clients_fully_frozen():
+    """An absent client is offline: params AND EF residual untouched,
+    zero bytes attributed, while the cache serves its stale payload."""
+
+    class FirstOnly(ParticipationSchedule):
+        name = "first-only"
+
+        def mask(self, round_idx, n, rng):
+            m = np.zeros(n, bool)
+            m[0 if round_idx else slice(None)] = True
+            return m  # round 0: everyone; later rounds: slot 0 only
+
+    cfg = IFLConfig(n_clients=N_CLIENTS, tau=2, batch_size=BATCH,
+                    d_fusion=D_FUSION, codec="ef(int8_row)",
+                    participation=FirstOnly())
+    tr = IFLTrainer(_tiny_clients(), cfg, seed=0)
+    tr.run_round()
+    frozen_params = jax.tree.map(
+        jnp.copy, {c.cid: c.params for c in tr.clients[1:]})
+    frozen_ef = {c.cid: jnp.copy(tr.ef_state[c.cid])
+                 for c in tr.clients[1:]}
+    m = tr.run_round()
+    assert m["participants"] == [0]
+    assert m["cache_size"] == N_CLIENTS  # stale slots still broadcast
+    assert m["max_staleness_seen"] == 1
+    for c in tr.clients[1:]:
+        for a, b in zip(jax.tree.leaves(frozen_params[c.cid]),
+                        jax.tree.leaves(c.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(
+            np.asarray(frozen_ef[c.cid]), np.asarray(tr.ef_state[c.cid]))
+    # The participant trained on all four cached pairs.
+    assert np.isfinite(m["base_loss"]) and np.isfinite(m["mod_loss"])
+
+
+def test_ifl_staleness_bound_evicts():
+    """straggle(0.25,4): slot 3 uploads at t=3,7,... With
+    max_staleness=1 its entry serves exactly one extra round, then the
+    broadcast (and the ledger) shrink to 3 entries."""
+    cfg = IFLConfig(n_clients=4, tau=0, batch_size=BATCH,
+                    d_fusion=D_FUSION, participation="straggle(0.25,4)",
+                    max_staleness=1)
+    tr = IFLTrainer(_tiny_clients(), cfg, seed=0)
+    sizes, started = [], []
+    for r in range(8):
+        m = tr.run_round()
+        sizes.append(m["cache_size"])
+        started.append(len(m["participants"]))
+    # t=0..2: slot 3 never seen (3 entries). t=3: uploads (4). t=4: one
+    # round stale, still valid (4). t=5,6: evicted (3). t=7: fresh (4).
+    assert started == [3, 3, 3, 4, 3, 3, 3, 4]
+    assert sizes == [3, 3, 3, 4, 4, 3, 3, 4]
+
+
+def test_ifl_empty_round_is_noop():
+    class Nobody(ParticipationSchedule):
+        name = "nobody"
+
+        def mask(self, round_idx, n, rng):
+            return np.zeros(n, bool)
+
+    cfg = IFLConfig(n_clients=2, tau=1, batch_size=BATCH,
+                    d_fusion=D_FUSION, participation=Nobody())
+    tr = IFLTrainer(_tiny_clients(n=2), cfg, seed=0)
+    before = jax.tree.map(jnp.copy, {c.cid: c.params for c in tr.clients})
+    m = tr.run_round()  # must not raise
+    assert np.isnan(m["base_loss"]) and np.isnan(m["mod_loss"])
+    assert m["participants"] == [] and m["cache_size"] == 0
+    assert tr.ledger.per_round[0] == {"up": 0, "down": 0}
+    for c in tr.clients:
+        for a, b in zip(jax.tree.leaves(before[c.cid]),
+                        jax.tree.leaves(c.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ifl_trainer_schedule_deterministic():
+    """Same seed => same participant trace AND same final params."""
+    runs = []
+    for _ in range(2):
+        cfg = IFLConfig(n_clients=4, tau=1, batch_size=BATCH,
+                        d_fusion=D_FUSION, participation="k2")
+        tr = IFLTrainer(_tiny_clients(), cfg, seed=3)
+        ms = [tr.run_round() for _ in range(4)]
+        runs.append((
+            [m["participants"] for m in ms],
+            np.asarray(tr.clients[0].params["modular"]),
+        ))
+    assert runs[0][0] == runs[1][0]
+    np.testing.assert_array_equal(runs[0][1], runs[1][1])
+
+
+# ------------------------------------------------------------- baselines
+
+
+def _fl_clients(n=4, samples=64, seed=0):
+    return _tiny_clients(n=n, samples=samples, seed=seed)
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_fl_ledger_parity_under_schedule(schedule):
+    from repro.core.comm import nbytes
+
+    cfg = IFLConfig(n_clients=4, tau=1, batch_size=BATCH,
+                    d_fusion=D_FUSION, participation=schedule)
+    tr = FLTrainer(_fl_clients(), cfg, seed=5)
+    model_b = nbytes(tr.global_params)
+    for r in range(4):
+        m = tr.run_round()
+        exp = fl_round_bytes(4, model_b,
+                             participating=len(m["participants"]))
+        assert tr.ledger.per_round[r] == exp, (schedule, r)
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+def test_fsl_ledger_parity_under_schedule(schedule):
+    cfg = IFLConfig(n_clients=4, tau=1, batch_size=BATCH,
+                    d_fusion=D_FUSION, participation=schedule)
+    clients = _tiny_clients()
+    server = jnp.asarray(
+        np.random.default_rng(1).normal(size=(D_FUSION, 10))
+        .astype(np.float32) * 0.05)
+    tr = FSLTrainer(clients, cfg, server,
+                    server_apply=lambda sp, h: h @ sp, seed=5)
+    for r in range(4):
+        m = tr.run_round()
+        exp = fsl_round_bytes(4, BATCH, D_FUSION,
+                              participating=len(m["participants"]))
+        assert tr.ledger.per_round[r] == exp, (schedule, r)
+
+
+def test_fl_tau_zero_round_reports_nan():
+    """Regression: FLTrainer.run_round used to raise NameError at τ=0
+    (`loss` unbound) — same bug class fixed for IFL in PR 2. A τ=0 FL
+    round is a no-op: loss NaN by convention, global model EXACTLY
+    unchanged (not re-averaged through float round-off), bytes still
+    ledgered (download + upload of the untouched model)."""
+    cfg = IFLConfig(n_clients=4, tau=0, batch_size=BATCH,
+                    d_fusion=D_FUSION)
+    tr = FLTrainer(_fl_clients(), cfg, seed=0)
+    before = jax.tree.map(jnp.copy, tr.global_params)
+    m = tr.run_round()  # must not raise
+    assert np.isnan(m["loss"])
+    for a, b in zip(jax.tree.leaves(before),
+                    jax.tree.leaves(tr.global_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    from repro.core.comm import nbytes
+
+    assert tr.ledger.per_round[0] == fl_round_bytes(
+        4, nbytes(tr.global_params))
+
+
+def test_fl_partial_round_aggregates_participants_only():
+    """Under k2, FedAvg weights are sample counts normalized over the 2
+    participants, and absent clients contribute nothing."""
+    cfg = IFLConfig(n_clients=4, tau=2, batch_size=BATCH,
+                    d_fusion=D_FUSION, participation="k2")
+    tr = FLTrainer(_fl_clients(), cfg, seed=9)
+    m = tr.run_round()
+    assert len(m["participants"]) == 2
+    assert np.isfinite(m["loss"])
