@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks.paper_repro import run_scheme
+from repro.api import DataSpec, ExperimentSpec, PAPER_RESULTS, run_experiment
 
 
 def run(rounds: int = 60, force: bool = False, quiet: bool = False,
@@ -34,14 +34,17 @@ def run(rounds: int = 60, force: bool = False, quiet: bool = False,
     schemes = ["ifl", "fsl", "fl1", "fl2"]
     if codec != "fp32":
         schemes.insert(1, f"ifl+{codec}")
-    kw = dict(participation=participation, force=force)
-    if smoke:
-        kw.update(n_train=800, n_test=200, tau=2)
+    base_spec = ExperimentSpec(
+        rounds=rounds, eval_every=max(1, rounds // 40),
+        participation=participation,
+        **(dict(tau=2, data=DataSpec(n_train=800, n_test=200))
+           if smoke else {}),
+    )
     for scheme in schemes:
         base, _, cdc = scheme.partition("+")
-        out = run_scheme(base, rounds, eval_every=max(1, rounds // 40),
-                         codec=cdc or "fp32", **kw)
-        for rec in out["records"]:
+        spec = base_spec.replace(scheme=base, codec=cdc or "fp32")
+        out = run_experiment(spec, cache_dir=PAPER_RESULTS, force=force)
+        for rec in out.records:
             rows.append((scheme, rec["round"], rec["uplink_mb"],
                          rec["acc_mean"]))
     if not quiet:

@@ -11,17 +11,19 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks.paper_repro import run_scheme
+from repro.api import ExperimentSpec, PAPER_RESULTS, run_experiment
 
 LABELS = ["A1-X2", "B1-X2", "C1-X2", "D1-X2"]
 
 
 def run(rounds: int = 60, force: bool = False, quiet: bool = False,
         participation: str = "full"):
-    out = run_scheme("ifl", rounds, eval_every=max(1, rounds // 40),
-                     participation=participation, force=force)
+    spec = ExperimentSpec(scheme="ifl", rounds=rounds,
+                          eval_every=max(1, rounds // 40),
+                          participation=participation)
+    out = run_experiment(spec, cache_dir=PAPER_RESULTS, force=force)
     rows = []
-    for rec in out["records"]:
+    for rec in out.records:
         if "sd_per_base" in rec:
             rows.append((rec["round"], *rec["sd_per_base"]))
     if not quiet:

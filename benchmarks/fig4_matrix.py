@@ -12,16 +12,18 @@ import argparse
 
 import numpy as np
 
-from benchmarks.paper_repro import run_scheme
+from repro.api import ExperimentSpec, PAPER_RESULTS, run_experiment
 
 NAMES = ["A", "B", "C", "D"]
 
 
 def run(rounds: int = 60, force: bool = False, quiet: bool = False,
         participation: str = "full"):
-    out = run_scheme("ifl", rounds, eval_every=max(1, rounds // 40),
-                     participation=participation, force=force)
-    mat = np.array(out["records"][-1]["matrix"])
+    spec = ExperimentSpec(scheme="ifl", rounds=rounds,
+                          eval_every=max(1, rounds // 40),
+                          participation=participation)
+    out = run_experiment(spec, cache_dir=PAPER_RESULTS, force=force)
+    mat = np.array(out.final["matrix"])
     if not quiet:
         print("base\\modular," + ",".join(f"{n}2" for n in NAMES))
         for k in range(4):

@@ -1,56 +1,40 @@
-"""Shared harness for the paper's §IV experiments (Figs 2-4, Table I).
+"""Back-compat shim over the ``repro.api`` front door.
 
-Trains IFL / FSL / FL-1 / FL-2 on the synthetic-KMNIST setup (N=4
-heterogeneous Table II clients, Dirichlet α=0.5, τ=10, B=32, SGD 0.01)
-and caches round-by-round metrics in results/paper/*.json so the figure
-benchmarks are reproducible and re-runnable incrementally.
+The de-facto experiment API used to live here: a string-dispatch
+``run_scheme`` with five copies of make-data -> dirichlet-partition ->
+build-Client-list -> loop-rounds boilerplate and a filename-keyed JSON
+cache.  All of that is now ``repro.api`` (scheme registry +
+``ExperimentSpec`` + ``run_experiment`` with spec-hash caching);
+``run_scheme``/``make_clients`` remain as thin delegates so existing
+notebooks and scripts keep working.  New code should build an
+``ExperimentSpec`` directly — see benchmarks/fig2_comm_efficiency.py.
 """
 
 from __future__ import annotations
 
-import functools
-import json
-import os
 from typing import Dict, List
 
-import jax
-import numpy as np
-
-from repro.config import IFLConfig
-from repro.core import Client, FLTrainer, FSLTrainer, IFLTrainer
-from repro.data import dirichlet_partition, make_synth_kmnist
-from repro.models.small import (
-    client_base_apply,
-    client_modular_apply,
-    init_client_model,
+from repro.api import (
+    DataBundle,
+    DataSpec,
+    ExperimentSpec,
+    FleetSpec,
+    build_fleet,
+    run_experiment,
 )
-
-RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "paper")
-
-
-def _apply_fns(cid: int):
-    return (
-        functools.partial(
-            lambda p, x, c: client_base_apply({"base": p}, c, x), c=cid),
-        functools.partial(
-            lambda p, z, c: client_modular_apply({"modular": p}, c, z), c=cid),
-    )
+from repro.api import PAPER_RESULTS as RESULTS  # noqa: F401  (old name)
+from repro.core import Client
 
 
 def make_clients(tx, ty, *, heterogeneous: bool = True, arch: int = 1,
                  alpha: float = 0.5, seed: int = 0) -> List[Client]:
-    shards = dirichlet_partition(ty, 4, alpha=alpha, seed=seed)
-    clients = []
-    for k in range(4):
-        cid = (k + 1) if heterogeneous else arch
-        base_fn, mod_fn = _apply_fns(cid)
-        clients.append(Client(
-            cid=cid,
-            params=init_client_model(jax.random.PRNGKey(100 + k), cid),
-            base_apply=base_fn, modular_apply=mod_fn,
-            data_x=tx[shards[k]], data_y=ty[shards[k]],
-        ))
-    return clients
+    """Deprecated — use ``repro.api.build_fleet`` (same construction)."""
+    spec = ExperimentSpec(
+        seed=seed,
+        fleet=FleetSpec(n_clients=4, heterogeneous=heterogeneous,
+                        arch=arch, alpha=alpha),
+    )
+    return build_fleet(spec, DataBundle(tx, ty, None, None))
 
 
 def run_scheme(scheme: str, rounds: int, *, eval_every: int = 5,
@@ -58,95 +42,21 @@ def run_scheme(scheme: str, rounds: int, *, eval_every: int = 5,
                tau: int = 10, seed: int = 0, lr: float = 0.05,
                codec: str = "fp32", participation: str = "full",
                max_staleness=None, force: bool = False) -> Dict:
-    """NOTE on lr: the paper uses η=0.01 on real KMNIST. On the offline
+    """Deprecated — ``run_experiment(ExperimentSpec(...))`` is the API.
+
+    NOTE on lr: the paper uses η=0.01 on real KMNIST. On the offline
     synthetic stand-in, 0.01 undertrains badly within 200 rounds (58%
     after 2000 base steps), so the default here is the calibrated 0.05 —
     applied identically to every scheme, preserving the paper's
     *comparative* claims (see EXPERIMENTS.md §Paper calibration note).
 
-    ``codec`` selects the fusion-payload wire format (repro.core.codec);
-    it only affects the IFL scheme — FL ships parameters and FSL ships
-    cut activations+grads, both at their native fp32.
-
-    ``participation`` selects the round engine's client schedule
-    (repro.core.rounds: 'full' | 'k<K>' | 'bern<p>' |
-    'straggle(<frac>,<period>)') and applies to EVERY scheme — partial
-    rounds are a property of the deployment, not of the algorithm. For
-    IFL, ``max_staleness`` bounds the server fusion cache."""
-    os.makedirs(RESULTS, exist_ok=True)
-    tag = f"{scheme}_r{rounds}_n{n_train}_tau{tau}_s{seed}"
-    if lr != 0.01:
-        tag += f"_lr{lr}"
-    if codec != "fp32":
-        tag += f"_c{codec}"
-    if participation != "full":
-        tag += f"_p{participation}"
-        if max_staleness is not None:
-            tag += f"_st{max_staleness}"
-    path = os.path.join(RESULTS, tag + ".json")
-    if os.path.exists(path) and not force:
-        return json.load(open(path))
-
-    tx, ty, ex, ey = make_synth_kmnist(n_train, n_test)
-    cfg = IFLConfig(tau=tau, rounds=rounds, lr_base=lr, lr_modular=lr,
-                    codec=codec, participation=participation,
-                    max_staleness=max_staleness)
-    recs: List[Dict] = []
-
-    if scheme == "ifl":
-        tr = IFLTrainer(make_clients(tx, ty, seed=seed), cfg, seed=seed)
-        for r in range(rounds):
-            m = tr.run_round()
-            if r % eval_every == 0 or r == rounds - 1:
-                accs = tr.evaluate(ex, ey)
-                mat = tr.accuracy_matrix(ex[:2000], ey[:2000])
-                recs.append({
-                    "round": r,
-                    "uplink_mb": tr.ledger.uplink_mb,
-                    "total_mb": tr.ledger.total_mb,
-                    "acc_mean": float(np.mean(accs)),
-                    "accs": accs,
-                    "matrix": mat.tolist(),
-                    # Fig 3: per-base-block SD across modular compositions.
-                    "sd_per_base": np.std(mat * 100, axis=1).tolist(),
-                })
-    elif scheme == "fsl":
-        clients = make_clients(tx, ty, seed=seed)
-        server = init_client_model(jax.random.PRNGKey(999), 1)["modular"]
-        _, server_apply = _apply_fns(1)
-        tr = FSLTrainer(clients, cfg, server, server_apply, seed=seed)
-        for r in range(rounds):
-            tr.run_round()
-            if r % eval_every == 0 or r == rounds - 1:
-                accs = tr.evaluate(ex, ey)
-                recs.append({
-                    "round": r,
-                    "uplink_mb": tr.ledger.uplink_mb,
-                    "total_mb": tr.ledger.total_mb,
-                    "acc_mean": float(np.mean(accs)),
-                    "accs": accs,
-                })
-    elif scheme in ("fl1", "fl2"):
-        arch = 1 if scheme == "fl1" else 2
-        tr = FLTrainer(
-            make_clients(tx, ty, heterogeneous=False, arch=arch, seed=seed),
-            cfg, seed=seed,
-        )
-        for r in range(rounds):
-            tr.run_round()
-            if r % eval_every == 0 or r == rounds - 1:
-                acc = tr.evaluate(ex, ey)
-                recs.append({
-                    "round": r,
-                    "uplink_mb": tr.ledger.uplink_mb,
-                    "total_mb": tr.ledger.total_mb,
-                    "acc_mean": acc,
-                })
-    else:
-        raise ValueError(scheme)
-
-    out = {"scheme": scheme, "rounds": rounds, "tau": tau, "codec": codec,
-           "participation": participation, "records": recs}
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
-    return out
+    Results are cached under results/paper/ keyed by ``spec_hash()``;
+    the old filename-tag caches are still read (never written).
+    """
+    spec = ExperimentSpec(
+        scheme=scheme, rounds=rounds, tau=tau, lr=lr, codec=codec,
+        participation=participation, max_staleness=max_staleness,
+        eval_every=eval_every, seed=seed,
+        data=DataSpec(n_train=n_train, n_test=n_test),
+    )
+    return run_experiment(spec, cache_dir=RESULTS, force=force).to_dict()

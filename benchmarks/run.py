@@ -3,9 +3,10 @@ plus the framework-scale roofline/communication reports.
 
   PYTHONPATH=src python -m benchmarks.run [--rounds N] [--skip-training]
 
-Paper-experiment results are cached under results/paper/ (delete to
-re-run); roofline sections read results/dryrun/ (produced by
-repro.launch.dryrun).
+Every training benchmark routes through the repro.api front door
+(ExperimentSpec -> run_experiment); results are cached under
+results/paper/ keyed by spec_hash (delete to re-run); roofline sections
+read results/dryrun/ (produced by repro.launch.dryrun).
 """
 
 from __future__ import annotations

@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.config import IFLConfig
+from repro.config import RunConfig
 from repro.core import fl_round_bytes, fsl_round_bytes, ifl_round_bytes
 from repro.models.small import init_client_model, model_bytes
 
@@ -24,7 +24,7 @@ FEATURES = [
 
 
 def run(quiet: bool = False):
-    cfg = IFLConfig()
+    cfg = RunConfig()
     m1 = model_bytes(init_client_model(jax.random.PRNGKey(0), 1))
     m2 = model_bytes(init_client_model(jax.random.PRNGKey(0), 2))
     fp32_up = ifl_round_bytes(4, cfg.batch_size, cfg.d_fusion)["up"]

@@ -12,47 +12,25 @@ at BOTH scales:
   PYTHONPATH=src python examples/compose_inference.py
 """
 
-import functools
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.config import IFLConfig, LayerSpec, ModelConfig
-from repro.core import Client, IFLTrainer
-from repro.data import dirichlet_partition, make_synth_kmnist
-from repro.models.small import (
-    client_base_apply,
-    client_modular_apply,
-    init_client_model,
-)
+from repro.api import DataSpec, ExperimentSpec, run_experiment
+from repro.config import LayerSpec, ModelConfig
 from repro.models.transformer import base_forward, init_lm, modular_forward
 
 
 def small_scale():
     print("== Table II vendors: composition after 10 IFL rounds ==")
-    tx, ty, ex, ey = make_synth_kmnist(4000, 1000)
-    cfg = IFLConfig(tau=10, lr_base=0.03, lr_modular=0.03)
-    shards = dirichlet_partition(ty, 4, alpha=0.5, seed=0)
-    clients = [
-        Client(
-            cid=c, params=init_client_model(jax.random.PRNGKey(c), c),
-            base_apply=functools.partial(
-                lambda p, x, cc: client_base_apply({"base": p}, cc, x), cc=c),
-            modular_apply=functools.partial(
-                lambda p, z, cc: client_modular_apply({"modular": p}, cc, z),
-                cc=c),
-            data_x=tx[shards[c - 1]], data_y=ty[shards[c - 1]],
-        )
-        for c in [1, 2, 3, 4]
-    ]
-    tr = IFLTrainer(clients, cfg)
-    for _ in range(10):
-        tr.run_round()
-    mat = tr.accuracy_matrix(ex[:1000], ey[:1000])
+    spec = ExperimentSpec(
+        scheme="ifl", rounds=10, tau=10, lr=0.03, eval_every=0, seed=0,
+        data=DataSpec(n_train=4000, n_test=1000),
+    )
+    result = run_experiment(spec)
+    mat = result.final["matrix"]
     names = "ABCD"
     for i in range(4):
-        row = " ".join(f"{names[i]}1-{names[j]}2:{mat[i, j]:.2f}"
+        row = " ".join(f"{names[i]}1-{names[j]}2:{mat[i][j]:.2f}"
                        for j in range(4))
         print("  " + row)
 

@@ -1,8 +1,13 @@
-"""Quickstart: one IFL communication round, end to end, in ~a minute.
+"""Quickstart: collaborative IFL training through the `repro.api` front
+door, end to end, in ~a minute.
 
 Four vendors with the paper's Table II architectures collaboratively
 train on non-IID synthetic KMNIST while exchanging ONLY fusion-layer
-outputs, then compose each other's modular blocks at inference.
+outputs, then compose each other's modular blocks at inference. The
+whole experiment is one declarative spec:
+
+    from repro.api import ExperimentSpec, run_experiment
+    result = run_experiment(ExperimentSpec(scheme="ifl", codec="int8"))
 
   PYTHONPATH=src python examples/quickstart.py
   PYTHONPATH=src python examples/quickstart.py --codec int8        # ~4x less wire
@@ -22,86 +27,90 @@ only 2 of the 4 vendors train/upload per round; the server's fusion
 cache re-broadcasts absent vendors' last payloads (bounded by
 ``--max-staleness``) so modular updates still see all four, while the
 ledger pays only for the fresh uploads.
+
+``--scheme`` swaps the whole algorithm (anything in
+``repro.api.available_schemes()``: ifl | fsl | fl1 | fl2 | ifl_spmd) —
+the point of the registry is that baselines are a flag, not a fork.
 """
 
 import argparse
-import functools
 
-import jax
 import numpy as np
 
-from repro.config import IFLConfig
-from repro.core import Client, IFLTrainer, ifl_round_bytes
-from repro.data import dirichlet_partition, make_synth_kmnist
-from repro.models.small import (
-    client_base_apply,
-    client_modular_apply,
-    init_client_model,
+from repro.api import (
+    DataSpec,
+    ExperimentSpec,
+    available_schemes,
+    run_experiment,
 )
+from repro.core import ifl_round_bytes
 
 
-def main(codec: str = "fp32", participation: str = "full",
-         max_staleness=None):
-    print(f"== IFL quickstart: 4 heterogeneous vendors, synthetic KMNIST, "
+def main(scheme: str = "ifl", codec: str = "fp32",
+         participation: str = "full", max_staleness=None, rounds: int = 20):
+    data_name = ("synthetic LM tokens" if scheme == "ifl_spmd"
+                 else "synthetic KMNIST")
+    print(f"== {scheme} quickstart: 4 vendors, {data_name}, "
           f"wire codec {codec}, participation {participation} ==")
-    tx, ty, ex, ey = make_synth_kmnist(6000, 1500)
-    cfg = IFLConfig(tau=10, batch_size=32, lr_base=0.05, lr_modular=0.05,
-                    codec=codec, participation=participation,
-                    max_staleness=max_staleness)
-    shards = dirichlet_partition(ty, cfg.n_clients, alpha=0.5, seed=0)
+    spmd = scheme == "ifl_spmd"
+    spec = ExperimentSpec(
+        scheme=scheme, rounds=rounds, tau=10, lr=0.05, batch_size=32,
+        codec=codec, participation=participation,
+        max_staleness=max_staleness, eval_every=5, seed=0,
+        # The SPMD demo runs the smoke LM: match its 32-dim fusion cut
+        # (the spec's d_fusion is authoritative over the model config).
+        d_fusion=32 if spmd else 432,
+        data=(DataSpec(dataset="synth_tokens", n_test=32) if spmd
+              else DataSpec(n_train=6000, n_test=1500)),
+    )
+    print(f"   spec {spec.spec_hash()}: {spec.canonical_json()[:72]}...")
 
-    clients = []
-    for k in range(cfg.n_clients):
-        cid = k + 1
-        clients.append(Client(
-            cid=cid,
-            params=init_client_model(jax.random.PRNGKey(cid), cid),
-            base_apply=functools.partial(
-                lambda p, x, c: client_base_apply({"base": p}, c, x), c=cid),
-            modular_apply=functools.partial(
-                lambda p, z, c: client_modular_apply({"modular": p}, c, z),
-                c=cid),
-            data_x=tx[shards[k]], data_y=ty[shards[k]],
-        ))
-        print(f"  vendor {cid}: {len(shards[k])} non-IID samples, "
-              f"private architecture #{cid}")
+    def progress(rec, report):
+        accs = rec.get("accs", [rec["acc_mean"]])
+        parts = report.participants
+        extra = (f"base_loss {report['base_loss']:.3f}, "
+                 if "base_loss" in report.metrics else "")
+        print(f"round {rec['round']:3d}: {extra}"
+              f"uplink {rec['uplink_mb']:.2f} MB, "
+              f"up {len(parts)}/{spec.fleet.n_clients} vendors "
+              f"(cache {report.metrics.get('cache_size', '-')}), "
+              f"accs {[f'{a:.2f}' for a in accs]}")
 
-    trainer = IFLTrainer(clients, cfg, seed=0)
-    for r in range(20):
-        m = trainer.run_round()
-        if r % 5 == 0 or r == 19:
-            accs = trainer.evaluate(ex, ey)
-            print(f"round {r:3d}: base_loss {m['base_loss']:.3f}, "
-                  f"uplink {m['uplink_mb']:.2f} MB, "
-                  f"up {len(m['participants'])}/{cfg.n_clients} vendors "
-                  f"(cache {m['cache_size']}), "
-                  f"accs {[f'{a:.2f}' for a in accs]}")
+    result = run_experiment(spec, keep_trainer=True, on_record=progress)
+    trainer = result.trainer
 
-    print("\ncross-vendor composition matrix (eq. 11):")
-    mat = trainer.accuracy_matrix(ex[:1000], ey[:1000])
-    print(np.round(mat, 3))
-    m0 = trainer.engine.history[0]
-    exp = ifl_round_bytes(cfg.n_clients, cfg.batch_size, cfg.d_fusion,
-                          codec=codec,
-                          participating=len(m0["participants"]),
-                          broadcast_entries=m0["cache_size"])
-    got = trainer.ledger.per_round[0]
-    print(f"\nper-round bytes measured {got} == analytic {exp}: "
-          f"{got['up'] == exp['up'] and got['down'] == exp['down']}")
-    if codec != "fp32" and exp["up"]:  # an empty round 0 has no uplink
-        fp32 = ifl_round_bytes(cfg.n_clients, cfg.batch_size, cfg.d_fusion,
-                               participating=len(m0["participants"]),
-                               broadcast_entries=m0["cache_size"])
-        print(f"wire saving vs fp32: {fp32['up'] / exp['up']:.2f}x uplink")
-    if trainer.codec.has_state:
-        norms = {cid: float(np.linalg.norm(np.asarray(e)))
-                 for cid, e in trainer.ef_state.items()}
-        print("EF residual norms (client-private, 0 wire bytes): "
-              + ", ".join(f"{c}: {n:.1f}" for c, n in norms.items()))
+    if hasattr(trainer, "accuracy_matrix"):
+        print("\ncross-vendor composition matrix (eq. 11):")
+        mat = np.asarray(result.records[-1]["matrix"])
+        print(np.round(mat, 3))
+
+    if scheme == "ifl":
+        m0 = trainer.engine.history[0]
+        exp = ifl_round_bytes(spec.fleet.n_clients, spec.batch_size,
+                              spec.d_fusion, codec=codec,
+                              participating=len(m0["participants"]),
+                              broadcast_entries=m0["cache_size"])
+        got = trainer.ledger.per_round[0]
+        print(f"\nper-round bytes measured {got} == analytic {exp}: "
+              f"{got['up'] == exp['up'] and got['down'] == exp['down']}")
+        if codec != "fp32" and exp["up"]:  # an empty round 0 has no uplink
+            fp32 = ifl_round_bytes(spec.fleet.n_clients, spec.batch_size,
+                                   spec.d_fusion,
+                                   participating=len(m0["participants"]),
+                                   broadcast_entries=m0["cache_size"])
+            print(f"wire saving vs fp32: {fp32['up'] / exp['up']:.2f}x uplink")
+        if trainer.codec.has_state:
+            norms = {trainer.clients[k].cid: float(np.linalg.norm(np.asarray(e)))
+                     for k, e in trainer.ef_state.items()}
+            print("EF residual norms (client-private, 0 wire bytes): "
+                  + ", ".join(f"{c}: {n:.1f}" for c, n in norms.items()))
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
+    ap.add_argument("--scheme", default="ifl",
+                    help="registered scheme to run: "
+                         + " | ".join(available_schemes()))
     ap.add_argument("--codec", default="fp32",
                     help="fusion-payload wire codec (see repro.core.codec)")
     ap.add_argument("--participation", default="full",
@@ -110,5 +119,7 @@ if __name__ == "__main__":
     ap.add_argument("--max-staleness", type=int, default=None,
                     help="fusion-cache staleness bound in rounds "
                          "(default: never evict)")
+    ap.add_argument("--rounds", type=int, default=20)
     args = ap.parse_args()
-    main(args.codec, args.participation, args.max_staleness)
+    main(args.scheme, args.codec, args.participation, args.max_staleness,
+         args.rounds)

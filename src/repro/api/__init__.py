@@ -1,0 +1,44 @@
+"""repro.api — the front door.
+
+One import gives you the whole comparative apparatus of the paper:
+
+    from repro.api import ExperimentSpec, run_experiment
+
+    result = run_experiment(ExperimentSpec(
+        scheme="ifl", rounds=20, codec="int8", participation="k2",
+    ))
+    print(result.final["acc_mean"], result.uplink_mb)
+
+Pieces (each its own module, all re-exported here):
+
+  ExperimentSpec / DataSpec / FleetSpec   what to run (frozen, hashable:
+                                          ``spec_hash()`` content-keys
+                                          the result cache)
+  register_scheme / get_scheme /          scheme registry — FL-1, FL-2,
+  available_schemes                       FSL, IFL, ifl_spmd today;
+                                          FedMD/HeteroFL-style baselines
+                                          are one entry away
+  Trainer / RoundReport / RunResult       the unified protocol and its
+                                          structured outputs
+  run_experiment / build_trainer          the runner (spec-hash caching)
+  save_trainer / load_trainer             mid-run checkpoint + resume
+                                          (repro.checkpoint format)
+"""
+
+from repro.api.spec import DataSpec, ExperimentSpec, FleetSpec  # noqa: F401
+from repro.api.registry import (  # noqa: F401
+    SchemeEntry,
+    available_schemes,
+    get_scheme,
+    register_scheme,
+)
+from repro.core.report import RoundReport  # noqa: F401
+from repro.api.result import RunResult  # noqa: F401
+from repro.api.trainer import Trainer, load_trainer, save_trainer  # noqa: F401
+from repro.api import schemes  # noqa: F401  (registers the builtin schemes)
+from repro.api.schemes import DataBundle, build_fleet, load_data  # noqa: F401
+from repro.api.runner import (  # noqa: F401
+    PAPER_RESULTS,
+    build_trainer,
+    run_experiment,
+)

@@ -1,0 +1,69 @@
+"""Scheme registry — collaborative-learning schemes as pluggable entries.
+
+Mirrors the codec registry (``repro.core.codec.register``): FL-1/FL-2,
+FSL, IFL and the SPMD IFL adapter are *looked up*, not if/elif'd, so a
+new scheme (a FedMD-style distillation exchange, a HeteroFL width-sliced
+FedAvg, ...) is one ``@register_scheme("name")`` away from every
+benchmark, example, and the ``run_experiment`` runner — exactly how new
+codecs already inherit the property suite and the ``ef(...)`` wrapper.
+
+A *builder* is a callable ``(spec, data) -> Trainer``: it receives the
+full :class:`~repro.api.spec.ExperimentSpec` plus the loaded
+:class:`~repro.api.schemes.DataBundle` and returns an object satisfying
+the :class:`~repro.api.trainer.Trainer` protocol.  Construction order
+inside a builder is part of the reproducibility contract — the rng draws
+it makes (param init keys, dirichlet partition) pin the run.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+__all__ = [
+    "SchemeEntry",
+    "register_scheme",
+    "get_scheme",
+    "available_schemes",
+    "SCHEMES",
+]
+
+
+@dataclass(frozen=True)
+class SchemeEntry:
+    """One registered scheme: its name, builder, and one-line summary."""
+
+    name: str
+    builder: Callable  # (ExperimentSpec, DataBundle) -> Trainer
+    summary: str = ""
+
+    def build(self, spec, data):
+        return self.builder(spec, data)
+
+
+SCHEMES: Dict[str, SchemeEntry] = {}
+
+
+def register_scheme(name: str, *, summary: str = ""):
+    """Decorator: ``@register_scheme("ifl")`` over a builder callable."""
+
+    def deco(builder):
+        SCHEMES[name] = SchemeEntry(name, builder, summary)
+        return builder
+
+    return deco
+
+
+def available_schemes() -> Tuple[str, ...]:
+    return tuple(sorted(SCHEMES))
+
+
+def get_scheme(name: str) -> SchemeEntry:
+    """Resolve a scheme name; unknown names list what IS registered."""
+    try:
+        return SCHEMES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheme {name!r}; available: "
+            f"{', '.join(available_schemes()) or '(none registered)'}"
+        ) from None

@@ -1,0 +1,92 @@
+"""`RunResult` — the structured outcome of `run_experiment`.
+
+Bundles the spec that produced it, the eval-cadence ``records`` (the
+exact per-figure payload the benchmarks consume: round, cumulative
+uplink/total MB, accuracies, composition matrix for IFL), the per-round
+``reports`` (serialized :class:`~repro.core.report.RoundReport`:
+losses, participants, ledger MB both legs), and the final ledger
+totals.  JSON round-trips losslessly — ``to_dict`` is also the cache
+file format, self-describing via the embedded spec (no more decoding
+hyper-parameters out of filenames).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.api.spec import ExperimentSpec
+
+__all__ = ["RunResult"]
+
+
+@dataclass
+class RunResult:
+    spec: ExperimentSpec
+    records: List[Dict[str, Any]] = field(default_factory=list)
+    reports: List[Dict[str, Any]] = field(default_factory=list)
+    uplink_mb: float = 0.0
+    downlink_mb: float = 0.0
+    # Set by run_experiment(keep_trainer=True); never serialized.
+    trainer: Optional[Any] = None
+
+    # ------------------------------------------------------------- dicts
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-able dict; keeps the legacy top-level keys (scheme,
+        rounds, tau, codec, participation) so pre-existing consumers of
+        ``run_scheme``'s return shape read it unchanged."""
+        return {
+            "scheme": self.spec.scheme,
+            "rounds": self.spec.rounds,
+            "tau": self.spec.tau,
+            "codec": self.spec.codec,
+            "participation": self.spec.participation,
+            "spec": self.spec.to_dict(),
+            "spec_hash": self.spec.spec_hash(),
+            "records": self.records,
+            "reports": self.reports,
+            "uplink_mb": self.uplink_mb,
+            "downlink_mb": self.downlink_mb,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any],
+                  spec: Optional[ExperimentSpec] = None) -> "RunResult":
+        """Rebuild from ``to_dict()`` output — or from a legacy cache
+        dict (no embedded spec: records only), given the spec that
+        located it."""
+        if spec is None:
+            spec = ExperimentSpec.from_dict(d["spec"])
+        return cls(
+            spec=spec,
+            records=list(d.get("records", [])),
+            reports=list(d.get("reports", [])),
+            uplink_mb=float(d.get("uplink_mb", 0.0)),
+            downlink_mb=float(d.get("downlink_mb", 0.0)),
+        )
+
+    # -------------------------------------------------------------- json
+
+    def to_json(self, path: Optional[str] = None, *, indent: int = 1) -> str:
+        s = json.dumps(self.to_dict(), indent=indent)
+        if path:
+            with open(path, "w") as f:
+                f.write(s)
+        return s
+
+    @classmethod
+    def from_json(cls, src: str) -> "RunResult":
+        """``src`` is a path or a JSON string (must embed its spec)."""
+        if src.lstrip().startswith("{"):
+            return cls.from_dict(json.loads(src))
+        with open(src) as f:
+            return cls.from_dict(json.load(f))
+
+    # ------------------------------------------------------- convenience
+
+    @property
+    def final(self) -> Dict[str, Any]:
+        """Last eval record (the end-of-training numbers)."""
+        return self.records[-1] if self.records else {}

@@ -1,0 +1,153 @@
+"""`run_experiment(spec)` — the one way to run any scheme.
+
+Replaces the five hand-rolled copies of the build-and-loop harness:
+resolve the scheme from the registry, load the data, build the trainer,
+run ``spec.rounds`` rounds collecting :class:`RoundReport`s, evaluate on
+the spec's cadence, and return (and optionally cache) a
+:class:`RunResult`.
+
+Caching is content-addressed: the file is ``<scheme>_<spec_hash>.json``
+— shell-safe, collision-free, self-describing (the spec rides inside
+the JSON).  Legacy filename-tag caches (``ifl_r20_..._cef(int4).json``)
+are still *read* when the hash file is absent, so the tracked fixtures
+under results/paper/ keep serving the long 200-round runs, but nothing
+new is ever written under the old fragile keys.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.api import schemes  # noqa: F401  (populates the registry)
+from repro.api.registry import get_scheme
+from repro.api.result import RunResult
+from repro.api.spec import ExperimentSpec
+from repro.api.trainer import Trainer
+from repro.core.report import RoundReport
+
+__all__ = ["run_experiment", "build_trainer", "PAPER_RESULTS"]
+
+PAPER_RESULTS = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "results", "paper"
+)
+
+
+def build_trainer(spec: ExperimentSpec) -> Trainer:
+    """Registry lookup + data load + scheme build (no rounds run)."""
+    return get_scheme(spec.scheme).build(spec, schemes.load_data(spec))
+
+
+def _eval_record(trainer, data, report: RoundReport) -> Dict[str, Any]:
+    """One eval-cadence record — the exact shape the figure benchmarks
+    (and the pre-API cache files) established per scheme."""
+    rec: Dict[str, Any] = {
+        "round": report.round,
+        "uplink_mb": trainer.ledger.uplink_mb,
+        "total_mb": trainer.ledger.total_mb,
+    }
+    accs = trainer.evaluate(data.test_x, data.test_y)
+    if isinstance(accs, (list, tuple)):
+        rec["acc_mean"] = float(np.mean(accs))
+        rec["accs"] = list(accs)
+    else:
+        rec["acc_mean"] = float(accs)
+    if hasattr(trainer, "accuracy_matrix"):
+        mat = trainer.accuracy_matrix(data.test_x[:2000], data.test_y[:2000])
+        rec["matrix"] = mat.tolist()
+        # Fig 3: per-base-block SD across modular compositions.
+        rec["sd_per_base"] = np.std(mat * 100, axis=1).tolist()
+    return rec
+
+
+def _legacy_tag(spec: ExperimentSpec) -> str:
+    """The pre-hash filename tag — READ-ONLY back compat with tracked
+    fixtures (this is the naming scheme spec_hash() retires)."""
+    d, f = spec.data, spec.fleet
+    tag = f"{spec.scheme}_r{spec.rounds}_n{d.n_train}_tau{spec.tau}_s{spec.seed}"
+    if spec.lr != 0.01:
+        tag += f"_lr{spec.lr}"
+    if spec.codec != "fp32":
+        tag += f"_c{spec.codec}"
+    if spec.participation != "full":
+        tag += f"_p{spec.participation}"
+        if spec.max_staleness is not None:
+            tag += f"_st{spec.max_staleness}"
+    return tag + ".json"
+
+
+def run_experiment(
+    spec: ExperimentSpec,
+    *,
+    cache_dir: Optional[str] = None,
+    force: bool = False,
+    keep_trainer: bool = False,
+    on_record: Optional[Callable[[Dict[str, Any], RoundReport], None]] = None,
+) -> RunResult:
+    """Run (or serve from cache) the experiment ``spec`` describes.
+
+    ``cache_dir`` enables spec-hash result caching (the benchmarks pass
+    ``PAPER_RESULTS``); ``force`` re-runs and overwrites.  With
+    ``keep_trainer`` the live trainer rides on ``result.trainer`` for
+    post-hoc analysis (composition matrices, ledger forensics, further
+    rounds) — a live trainer only exists for a live run, so
+    ``keep_trainer`` bypasses cache hits.  ``on_record(record, report)``
+    fires at every eval point — progress printing without re-owning the
+    loop; on a cache hit it replays over the cached records (with the
+    matching cached RoundReport when the file carries reports).
+    """
+    if cache_dir and not force and not keep_trainer:
+        cached = None
+        path = os.path.join(cache_dir,
+                            f"{spec.scheme}_{spec.spec_hash()}.json")
+        if os.path.exists(path):
+            cached = RunResult.from_json(path)
+        else:
+            legacy = os.path.join(cache_dir, _legacy_tag(spec))
+            if os.path.exists(legacy):
+                with open(legacy) as f:
+                    cached = RunResult.from_dict(json.load(f), spec=spec)
+        if cached is not None:
+            if on_record:
+                by_round = {rep.get("round"): rep for rep in cached.reports}
+                for rec in cached.records:
+                    on_record(rec, RoundReport.from_dict(
+                        by_round.get(rec.get("round"), rec)))
+            return cached
+
+    data = schemes.load_data(spec)
+    trainer = get_scheme(spec.scheme).build(spec, data)
+
+    records: List[Dict[str, Any]] = []
+    reports: List[Dict[str, Any]] = []
+    for r in range(spec.rounds):
+        report = trainer.run_round()
+        reports.append(report.to_dict())
+        if (spec.eval_every > 0 and r % spec.eval_every == 0) \
+                or r == spec.rounds - 1:
+            rec = _eval_record(trainer, data, report)
+            records.append(rec)
+            if on_record:
+                on_record(rec, report)
+
+    result = RunResult(
+        spec=spec,
+        records=records,
+        reports=reports,
+        uplink_mb=trainer.ledger.uplink_mb,
+        downlink_mb=trainer.ledger.downlink_mb,
+    )
+    if cache_dir:
+        os.makedirs(cache_dir, exist_ok=True)
+        out_path = os.path.join(cache_dir,
+                                f"{spec.scheme}_{spec.spec_hash()}.json")
+        # Only ``force`` may clobber an existing cache entry (a
+        # keep_trainer live run must not silently rewrite fixtures).
+        if force or not os.path.exists(out_path):
+            result.to_json(out_path)
+    if keep_trainer:
+        result.trainer = trainer
+    return result

@@ -1,0 +1,166 @@
+"""Registered schemes: data loading, fleet construction, trainer builders.
+
+This is the one home of the make-data -> dirichlet-partition -> build-
+Client-list -> construct-trainer sequence that used to be copy-pasted
+across benchmarks/paper_repro.py, both training examples, and every
+figure script.  Construction is bit-for-bit the sequence the original
+``run_scheme`` performed (same dirichlet seed, same ``PRNGKey(100+k)``
+param init keys, same trainer seeds), so a spec replays the exact
+cached trajectories.
+
+Adding a scheme == adding a builder here (or in your own module):
+
+    @register_scheme("fedmd", summary="distillation exchange baseline")
+    def build_fedmd(spec, data):
+        ...
+        return trainer  # anything satisfying repro.api.Trainer
+
+and every benchmark/example/CLI axis picks it up — the same way new
+codecs inherit ``ef(...)`` and the property suite.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, NamedTuple, Optional
+
+import jax
+import numpy as np
+
+from repro.api.registry import register_scheme
+from repro.api.spec import ExperimentSpec
+from repro.core import Client, FLTrainer, FSLTrainer, IFLTrainer
+from repro.data import dirichlet_partition, make_synth_kmnist
+from repro.models.small import (
+    client_base_apply,
+    client_modular_apply,
+    init_client_model,
+)
+
+__all__ = ["DataBundle", "load_data", "build_fleet", "apply_fns"]
+
+
+# ---------------------------------------------------------------- datasets
+
+
+class DataBundle(NamedTuple):
+    """Loaded train/test arrays (token schemes stream internally: None)."""
+
+    train_x: Optional[np.ndarray]
+    train_y: Optional[np.ndarray]
+    test_x: Optional[np.ndarray]
+    test_y: Optional[np.ndarray]
+
+
+def _load_synth_kmnist(spec: ExperimentSpec) -> DataBundle:
+    return DataBundle(*make_synth_kmnist(spec.data.n_train, spec.data.n_test))
+
+
+def _load_synth_tokens(spec: ExperimentSpec) -> DataBundle:
+    # LM schemes stream minibatches from a seeded SyntheticLM inside the
+    # trainer (the data IS the generator); nothing to materialize here.
+    return DataBundle(None, None, None, None)
+
+
+DATASETS: Dict[str, Callable[[ExperimentSpec], DataBundle]] = {
+    "synth_kmnist": _load_synth_kmnist,
+    "synth_tokens": _load_synth_tokens,
+}
+
+
+def load_data(spec: ExperimentSpec) -> DataBundle:
+    try:
+        loader = DATASETS[spec.data.dataset]
+    except KeyError:
+        raise ValueError(
+            f"unknown dataset {spec.data.dataset!r}; available: "
+            f"{', '.join(sorted(DATASETS))}"
+        ) from None
+    return loader(spec)
+
+
+# ------------------------------------------------------------------ fleet
+
+
+def apply_fns(cid: int):
+    """(base_apply, modular_apply) closures for Table-II arch ``cid``."""
+    return (
+        functools.partial(
+            lambda p, x, c: client_base_apply({"base": p}, c, x), c=cid),
+        functools.partial(
+            lambda p, z, c: client_modular_apply({"modular": p}, c, z), c=cid),
+    )
+
+
+def build_fleet(spec: ExperimentSpec, data: DataBundle, *,
+                heterogeneous: Optional[bool] = None,
+                arch: Optional[int] = None) -> List[Client]:
+    """Dirichlet-shard the data and build the Client list.
+
+    Reproduces the original harness draw-for-draw: shard seed =
+    ``spec.seed``, param init key = ``PRNGKey(100 + k)`` for slot k.
+    Heterogeneous fleets cycle the paper's four Table-II architectures;
+    homogeneous ones (the FL regime) clone ``arch`` everywhere.
+    """
+    fleet = spec.fleet
+    if heterogeneous is None:
+        heterogeneous = fleet.heterogeneous
+    arch = fleet.arch if arch is None else arch
+    shards = dirichlet_partition(data.train_y, fleet.n_clients,
+                                 alpha=fleet.alpha, seed=spec.seed)
+    clients = []
+    for k in range(fleet.n_clients):
+        cid = (k % 4 + 1) if heterogeneous else arch
+        base_fn, mod_fn = apply_fns(cid)
+        clients.append(Client(
+            cid=cid,
+            params=init_client_model(jax.random.PRNGKey(100 + k), cid),
+            base_apply=base_fn, modular_apply=mod_fn,
+            data_x=data.train_x[shards[k]], data_y=data.train_y[shards[k]],
+        ))
+    return clients
+
+
+# ----------------------------------------------------------------- schemes
+
+
+@register_scheme("ifl", summary="Interoperable FL (the paper, Algorithm 1): "
+                                "heterogeneous fleet, fusion-output exchange")
+def build_ifl(spec: ExperimentSpec, data: DataBundle) -> IFLTrainer:
+    return IFLTrainer(build_fleet(spec, data), spec.run_config(),
+                      seed=spec.seed)
+
+
+@register_scheme("fsl", summary="federated split learning baseline "
+                                "(SplitFed-style shared server block)")
+def build_fsl(spec: ExperimentSpec, data: DataBundle) -> FSLTrainer:
+    clients = build_fleet(spec, data)
+    server = init_client_model(jax.random.PRNGKey(999), 1)["modular"]
+    _, server_apply = apply_fns(1)
+    return FSLTrainer(clients, spec.run_config(), server, server_apply,
+                      seed=spec.seed)
+
+
+def _build_fl(spec: ExperimentSpec, data: DataBundle, arch: int) -> FLTrainer:
+    clients = build_fleet(spec, data, heterogeneous=False, arch=arch)
+    return FLTrainer(clients, spec.run_config(), seed=spec.seed)
+
+
+@register_scheme("fl1", summary="FedAvg, client 1's smallest arch cloned "
+                                "fleet-wide (paper FL-1)")
+def build_fl1(spec: ExperimentSpec, data: DataBundle) -> FLTrainer:
+    return _build_fl(spec, data, arch=1)
+
+
+@register_scheme("fl2", summary="FedAvg, client 2's larger arch cloned "
+                                "fleet-wide (paper FL-2)")
+def build_fl2(spec: ExperimentSpec, data: DataBundle) -> FLTrainer:
+    return _build_fl(spec, data, arch=2)
+
+
+@register_scheme("ifl_spmd", summary="IFL as one jitted SPMD round step "
+                                     "(LM-scale, stacked-client mesh)")
+def build_ifl_spmd(spec: ExperimentSpec, data: DataBundle):
+    from repro.api.spmd import SPMDIFLTrainer  # jax-heavy; import lazily
+
+    return SPMDIFLTrainer(spec)

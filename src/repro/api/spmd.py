@@ -1,0 +1,244 @@
+"""`SPMDIFLTrainer` — the jitted SPMD round step behind the Trainer protocol.
+
+Adapts ``repro.core.ifl_spmd.make_ifl_round_step`` (one jitted program =
+one communication round, stacked-client params on a
+('client','data','model') mesh) to the same front-door interface as the
+eager trainers, so ``run_experiment(spec.replace(scheme="ifl_spmd"))``
+drives the LM-scale path with the exact scheduling, staleness, and
+byte-accounting semantics of the eager engine:
+
+  - participation masks come from the SAME ``RoundEngine`` (one rng
+    stream pins schedule draws to the seed),
+  - the ledger records the codec's analytic ``encoded_nbytes`` per
+    fresh upload — the quantity the property suite pins to measured
+    wire bytes for every registered codec — plus int32 token labels,
+    and the broadcast leg as participants x valid cache entries,
+  - ``snapshot/restore`` captures params, optimizer state, and the
+    carried EF residual / payload cache, so resume is bitwise.
+
+Data streams from a seeded ``SyntheticLM`` (the 'synth_tokens'
+dataset): minibatch t of round r is a pure function of (seed, r, t,
+client), so there is nothing to checkpoint on the data side.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.api.spec import ExperimentSpec
+from repro.config import ModelConfig
+from repro.core.codec import get_codec
+from repro.core.ifl_spmd import (
+    init_ef_state,
+    init_ifl_state,
+    init_payload_cache,
+    make_ifl_round_step,
+)
+from repro.core.report import RoundReport
+from repro.core.rounds import FullParticipation, RoundEngine
+from repro.data.synthetic import SyntheticLM
+from repro.models.transformer import base_forward, modular_forward
+
+__all__ = ["SPMDIFLTrainer", "smoke_model_config"]
+
+_EVAL_STEP = 999_983  # SyntheticLM step reserved for held-out eval data
+
+
+def smoke_model_config() -> ModelConfig:
+    """CPU-scale LM config the scheme defaults to (spec.model == '')."""
+    return ModelConfig(
+        name="spmd-smoke", num_layers=4, d_model=48, num_heads=2,
+        num_kv_heads=2, d_ff=96, vocab_size=128, d_fusion=32, q_block=16,
+        compute_dtype="float32", remat="none",
+    ).validate()
+
+
+def _one_device_mesh() -> Mesh:
+    dev = np.array(jax.devices()[:1]).reshape(1, 1, 1)
+    return Mesh(dev, ("client", "data", "model"))
+
+
+class SPMDIFLTrainer:
+    """IFL on the production mesh, one spec -> one resumable run.
+
+    ``spec.batch_size`` is the per-client fusion/base minibatch Bc;
+    ``seq`` is the LM context (kept small — this adapter's job is the
+    front door, the 256-chip shapes live in ``repro.launch``).
+    """
+
+    def __init__(self, spec: ExperimentSpec, *, mesh: Optional[Mesh] = None,
+                 seq: int = 32):
+        if spec.model:
+            from repro.configs import get_config
+
+            self.model_cfg = get_config(spec.model).reduced()
+        else:
+            self.model_cfg = smoke_model_config()
+        # The spec is the single source of truth for the fusion
+        # interface — override whatever the model config carries, so a
+        # hashed field is never silently ignored.
+        self.model_cfg = self.model_cfg.replace(
+            d_fusion=spec.d_fusion).validate()
+        self.spec = spec
+        self.seq = seq
+        self.mesh = mesh or _one_device_mesh()
+        self.n_clients = spec.fleet.n_clients
+        self.engine = RoundEngine(
+            self.n_clients, spec.participation, seed=spec.seed,
+            max_staleness=spec.max_staleness,
+        )
+        self.ledger = self.engine.ledger
+        self.codec = get_codec(spec.codec)
+        self.partial = not isinstance(self.engine.schedule, FullParticipation)
+
+        self.params, self.opt_state = init_ifl_state(
+            jax.random.PRNGKey(spec.seed), self.model_cfg,
+            n_clients=self.n_clients,
+        )
+        self._step = jax.jit(make_ifl_round_step(
+            self.model_cfg, self.mesh, n_clients=self.n_clients,
+            tau=spec.tau, lr_base=spec.lr, lr_modular=spec.lr,
+            codec=spec.codec, partial_participation=self.partial,
+            max_staleness=spec.max_staleness,
+        ))
+        z_shape = (self.n_clients, spec.batch_size, seq,
+                   self.model_cfg.d_fusion)
+        tok_shape = (self.n_clients, spec.batch_size, seq)
+        self.ef_state = (init_ef_state(spec.codec, z_shape)
+                         if self.codec.has_state else None)
+        self.cache = (init_payload_cache(spec.codec, z_shape, tok_shape)
+                      if self.partial else None)
+        self._stream = SyntheticLM(self.model_cfg.vocab_size, seed=spec.seed)
+        # Analytic wire bytes of one client's fusion payload (+ labels):
+        # encoded_nbytes is pinned to measured bytes by the codec
+        # property suite, so the ledger stays honest without pulling
+        # payloads out of the jitted program.
+        self._entry_bytes = (
+            self.codec.encoded_nbytes(z_shape[1:])
+            + spec.batch_size * seq * 4
+        )
+        self._eval_acc = jax.jit(self._eval_acc_impl)
+
+    # ------------------------------------------------------------- data
+
+    def _round_batch(self, round_idx: int) -> Dict[str, jnp.ndarray]:
+        spec = self.spec
+        toks = np.stack([
+            np.stack([
+                self._stream.sample(spec.batch_size, self.seq,
+                                    step=round_idx * (spec.tau + 1) + t,
+                                    client=k)
+                for t in range(spec.tau + 1)
+            ])
+            for k in range(self.n_clients)
+        ])  # (N, tau+1, Bc, S)
+        return {"tokens": jnp.asarray(toks)}
+
+    # ------------------------------------------------------------ round
+
+    def run_round(self) -> RoundReport:
+        eng = self.engine
+        participants = eng.participants()
+        batch = self._round_batch(eng.round_idx)
+        k = len(participants)
+
+        with self.mesh:
+            if self.partial:
+                host_mask = np.zeros(self.n_clients, bool)
+                host_mask[participants] = True
+                mask = jnp.asarray(host_mask)
+                if self.codec.has_state:
+                    (self.params, self.opt_state, m, self.cache,
+                     self.ef_state) = self._step(
+                        self.params, self.opt_state, batch, mask,
+                        self.cache, self.ef_state)
+                else:
+                    self.params, self.opt_state, m, self.cache = self._step(
+                        self.params, self.opt_state, batch, mask, self.cache)
+                entries = int(m["cache_valid"])
+            elif self.codec.has_state:
+                self.params, self.opt_state, m, self.ef_state = self._step(
+                    self.params, self.opt_state, batch, self.ef_state)
+                entries = self.n_clients
+            else:
+                self.params, self.opt_state, m = self._step(
+                    self.params, self.opt_state, batch)
+                entries = self.n_clients
+
+        # Bytes that crossed the client boundary: K fresh uploads, then
+        # the M-entry cache broadcast to the K participants — the same
+        # split ifl_round_bytes(participating=, broadcast_entries=)
+        # proves against the eager ledger.
+        self.ledger.send_up_bytes(k * self._entry_bytes)
+        self.ledger.send_down_bytes(k * entries * self._entry_bytes)
+
+        return eng.end_round({
+            "base_loss": float(m["base_loss"]),
+            "mod_loss": float(m["mod_loss"]),
+            "participants": [int(i) for i in participants],
+            "cache_size": entries,
+        })
+
+    # ------------------------------------------------------------- eval
+
+    def _eval_acc_impl(self, params, toks):
+        cfg = self.model_cfg
+
+        def one_client(p_k):
+            z, _ = base_forward(p_k["base"], cfg, {"tokens": toks})
+            logits, _ = modular_forward(p_k["modular"], cfg, z)
+            pred = jnp.argmax(logits[:, :-1], axis=-1)
+            return jnp.mean((pred == toks[:, 1:]).astype(jnp.float32))
+
+        return jax.vmap(one_client)(params)
+
+    def evaluate(self, test_x=None, test_y=None) -> List[float]:
+        """Per-client next-token accuracy.
+
+        ``test_x`` may be an (B, S) int token array; None — or a
+        non-token array from an image DataSpec — uses the held-out
+        SyntheticLM batch (step ``_EVAL_STEP``, never drawn in
+        training), sized from ``spec.data.n_test`` (capped for CPU).
+        ``test_y`` is ignored — LM targets are the shifted tokens.
+        """
+        if test_x is not None:
+            arr = np.asarray(test_x)
+            if arr.ndim != 2 or not np.issubdtype(arr.dtype, np.integer):
+                test_x = None
+        if test_x is None:
+            n = max(1, min(self.spec.data.n_test, 64))
+            test_x = self._stream.sample(n, self.seq, step=_EVAL_STEP,
+                                         client=0)
+        toks = jnp.asarray(np.asarray(test_x), jnp.int32)
+        with self.mesh:
+            accs = self._eval_acc(self.params, toks)
+        return [float(a) for a in accs]
+
+    # ------------------------------------------------- snapshot/restore
+
+    def snapshot(self):
+        """(array pytree, JSON-able aux) — Trainer-protocol state.
+
+        Unlike the eager IFL trainer, the payload cache here is
+        fixed-shape carried state, so it checkpoints exactly; resume is
+        bitwise even mid-partial-participation."""
+        tree = {"params": self.params, "opt": self.opt_state}
+        if self.ef_state is not None:
+            tree["ef"] = self.ef_state
+        if self.cache is not None:
+            tree["cache"] = self.cache
+        return tree, self.engine.aux_state()
+
+    def restore(self, tree, aux) -> None:
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        if self.ef_state is not None:
+            self.ef_state = tree["ef"]
+        if self.cache is not None:
+            self.cache = tree["cache"]
+        self.engine.restore_aux(aux)

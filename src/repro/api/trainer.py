@@ -1,0 +1,64 @@
+"""The unified `Trainer` protocol + checkpoint plumbing for resume.
+
+Every scheme the registry can build — eager IFL/FSL/FL and the SPMD IFL
+adapter — satisfies one structural interface:
+
+  run_round()  -> RoundReport     one communication round
+  evaluate(test_x, test_y)        scalar (global-model schemes) or
+                                  per-client list (personalized schemes)
+  snapshot()   -> (tree, aux)     array pytree + JSON-able aux state
+  restore(tree, aux)              inverse of snapshot
+  ledger       : CommLedger       bytes that crossed the client boundary
+
+``snapshot``/``restore`` split state the way ``repro.checkpoint``
+stores it: the *tree* is arrays only (flattened into the .npz), the
+*aux* is small JSON (round counter, rng bit-generator state, ledger
+totals — written into the manifest's ``extra``).  ``save_trainer`` /
+``load_trainer`` wire the two together so any Trainer resumes
+bit-for-bit mid-run.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Protocol, Tuple, runtime_checkable
+
+from repro.checkpoint import load_checkpoint, load_extra, save_checkpoint
+from repro.core.comm import CommLedger
+from repro.core.report import RoundReport
+
+__all__ = ["Trainer", "save_trainer", "load_trainer"]
+
+
+@runtime_checkable
+class Trainer(Protocol):
+    """Structural interface every registered scheme's trainer satisfies."""
+
+    ledger: CommLedger
+
+    def run_round(self) -> RoundReport: ...
+
+    def evaluate(self, test_x, test_y): ...
+
+    def snapshot(self) -> Tuple[Any, Dict[str, Any]]: ...
+
+    def restore(self, tree, aux) -> None: ...
+
+
+def save_trainer(path: str, trainer: Trainer) -> None:
+    """Checkpoint a mid-run trainer (repro.checkpoint .npz + manifest)."""
+    tree, aux = trainer.snapshot()
+    save_checkpoint(path, tree, step=int(aux.get("round_idx", 0)), extra=aux)
+
+
+def load_trainer(path: str, trainer: Trainer) -> Trainer:
+    """Restore ``trainer`` (freshly built from the same spec) in place.
+
+    The trainer's own ``snapshot()`` tree is the shape/dtype template
+    the flattened checkpoint is validated against — restoring across a
+    different spec (other fleet, other codec state shape) fails loudly
+    instead of silently mixing states.
+    """
+    template, _ = trainer.snapshot()
+    tree = load_checkpoint(path, template)
+    trainer.restore(tree, load_extra(path))
+    return trainer

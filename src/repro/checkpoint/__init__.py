@@ -1,1 +1,6 @@
-from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint  # noqa: F401
+from repro.checkpoint.ckpt import (  # noqa: F401
+    load_checkpoint,
+    load_extra,
+    manifest_path,
+    save_checkpoint,
+)

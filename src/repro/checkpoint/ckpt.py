@@ -30,6 +30,19 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
+def manifest_path(path: str) -> str:
+    """The JSON manifest that rides next to a checkpoint's .npz — the
+    one naming rule shared by writer and readers (repro.api resume
+    reads ``extra`` back out of it)."""
+    return (path[:-4] if path.endswith(".npz") else path) + ".json"
+
+
+def load_extra(path: str) -> Dict[str, Any]:
+    """The ``extra`` dict save_checkpoint recorded in the manifest."""
+    with open(manifest_path(path)) as f:
+        return json.load(f).get("extra", {})
+
+
 def save_checkpoint(path: str, tree, *, step: Optional[int] = None,
                     extra: Optional[Dict[str, Any]] = None) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
@@ -41,8 +54,7 @@ def save_checkpoint(path: str, tree, *, step: Optional[int] = None,
                  for k, v in flat.items()},
         "extra": extra or {},
     }
-    mpath = (path[:-4] if path.endswith(".npz") else path) + ".json"
-    with open(mpath, "w") as f:
+    with open(manifest_path(path), "w") as f:
         json.dump(manifest, f, indent=1)
 
 

@@ -270,12 +270,22 @@ class ModelConfig:
 
 
 # ---------------------------------------------------------------------------
-# IFL run config (paper hyper-parameters live here)
+# Run config (paper hyper-parameters live here)
 # ---------------------------------------------------------------------------
 
 
 @dataclass(frozen=True)
-class IFLConfig:
+class RunConfig:
+    """Hyper-parameters of one collaborative-training run.
+
+    Shared by EVERY scheme (IFL, FSL, FL-1/FL-2, SPMD IFL) — it used to
+    be named ``IFLConfig``, which was misleading precisely because the
+    non-IFL trainers consume it too.  ``IFLConfig`` remains available as
+    a deprecated alias (module ``__getattr__``); new code — and the
+    ``repro.api.ExperimentSpec`` front door, which builds one of these
+    per run — should say ``RunConfig``.
+    """
+
     n_clients: int = 4  # paper: N = 4
     tau: int = 10  # paper: τ = 10 local base-block steps per round
     rounds: int = 200  # paper: T = 200
@@ -292,3 +302,25 @@ class IFLConfig:
     # Fusion-cache staleness bound in rounds (None = never evict;
     # 0 = fresh uploads only). See rounds.py for the exact semantics.
     max_staleness: Optional[int] = None
+
+
+def __getattr__(name: str):
+    """PEP 562 deprecated alias: ``IFLConfig`` -> :class:`RunConfig`.
+
+    The old name configured the FL/FSL baselines too, which is exactly
+    why it was renamed; keep it importable so external call sites and
+    cached scripts don't break, but tell them.
+    """
+    if name == "IFLConfig":
+        import warnings
+
+        warnings.warn(
+            "repro.config.IFLConfig is deprecated: it configures every "
+            "scheme (FL/FSL/IFL), not just IFL — use repro.config."
+            "RunConfig (same fields) or the repro.api.ExperimentSpec "
+            "front door.",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return RunConfig
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -2,6 +2,8 @@
 
 Submodules:
   comm        — communication ledgers + analytic per-round byte formulas
+  report      — RoundReport, the structured run_round() return type
+                (repro.api is the user-facing front door over all this)
   codec       — fusion-payload wire codecs (fp32/bf16/fp16/int8/int4/
                 topk/sketch) + EF21 error-feedback wrapping (ef(<codec>))
   rounds      — participation schedules (full/k-of-N/Bernoulli/straggler),
@@ -20,6 +22,7 @@ from repro.core.comm import (  # noqa: F401
     fl_round_bytes,
     fsl_round_bytes,
 )
+from repro.core.report import RoundReport  # noqa: F401
 from repro.core.rounds import (  # noqa: F401
     BernoulliSchedule,
     FullParticipation,

@@ -32,12 +32,20 @@ class CommLedger:
     _round_down: int = 0
 
     def send_up(self, tree):
-        b = nbytes(tree)
+        self.send_up_bytes(nbytes(tree))
+
+    def send_down(self, tree):
+        self.send_down_bytes(nbytes(tree))
+
+    def send_up_bytes(self, b: int):
+        """Account ``b`` uplink bytes directly — for trainers whose
+        payloads never materialize as host arrays (the SPMD round step
+        encodes inside jit; its adapter ledgers the codec's analytic
+        ``encoded_nbytes``, which byte-parity tests pin to measured)."""
         self.uplink += b
         self._round_up += b
 
-    def send_down(self, tree):
-        b = nbytes(tree)
+    def send_down_bytes(self, b: int):
         self.downlink += b
         self._round_down += b
 

@@ -20,15 +20,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import IFLConfig
+from repro.config import RunConfig
 from repro.core.ifl import Client, softmax_xent
+from repro.core.report import RoundReport
 from repro.core.rounds import RoundEngine
 
 
 class FLTrainer:
     """FedAvg over homogeneous clients (arch cloned from ``template_cid``)."""
 
-    def __init__(self, clients: Sequence[Client], cfg: IFLConfig,
+    def __init__(self, clients: Sequence[Client], cfg: RunConfig,
                  seed: int = 0):
         self.clients = list(clients)
         self.cfg = cfg
@@ -52,7 +53,7 @@ class FLTrainer:
         loss, g = jax.value_and_grad(loss_of)(params)
         return jax.tree.map(lambda p, gg: p - lr * gg, params, g), loss
 
-    def run_round(self) -> Dict[str, float]:
+    def run_round(self) -> RoundReport:
         cfg = self.cfg
         eng = self.engine
         participants = eng.participants()
@@ -88,9 +89,21 @@ class FLTrainer:
             )
         return eng.end_round({
             "loss": float(np.mean(losses)) if losses else float("nan"),
-            "uplink_mb": self.ledger.uplink_mb,
             "participants": [int(k) for k in participants],
         })
+
+    def snapshot(self):
+        """(array pytree, JSON-able aux) — Trainer-protocol state.
+
+        FedAvg's only learned state is the global model; client shards
+        and apply fns are reconstructed by the builder, and the engine
+        aux (round counter, rng, ledger totals) makes the resumed
+        trajectory bitwise identical."""
+        return {"global": self.global_params}, self.engine.aux_state()
+
+    def restore(self, tree, aux) -> None:
+        self.global_params = tree["global"]
+        self.engine.restore_aux(aux)
 
     def evaluate(self, test_x, test_y, batch: int = 512) -> float:
         c0 = self.clients[0]

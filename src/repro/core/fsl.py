@@ -28,13 +28,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import IFLConfig
+from repro.config import RunConfig
 from repro.core.ifl import Client
+from repro.core.report import RoundReport
 from repro.core.rounds import RoundEngine
 
 
 class FSLTrainer:
-    def __init__(self, clients: Sequence[Client], cfg: IFLConfig,
+    def __init__(self, clients: Sequence[Client], cfg: RunConfig,
                  server_params: Any, server_apply, seed: int = 0):
         self.clients = list(clients)
         self.cfg = cfg
@@ -78,7 +79,7 @@ class FSLTrainer:
 
     # ---------------------------------------------------------- round
 
-    def run_round(self) -> Dict[str, float]:
+    def run_round(self) -> RoundReport:
         cfg = self.cfg
         eng = self.engine
         participants = eng.participants()
@@ -109,9 +110,25 @@ class FSLTrainer:
             )
         return eng.end_round({
             "loss": float(np.mean(losses)) if losses else float("nan"),
-            "uplink_mb": self.ledger.uplink_mb,
             "participants": [int(k) for k in participants],
         })
+
+    # ------------------------------------------------- snapshot/restore
+
+    def snapshot(self):
+        """(array pytree, JSON-able aux) — Trainer-protocol state:
+        every client's cut-layer block plus the server-side model."""
+        tree = {
+            "clients": [c.params for c in self.clients],
+            "server": self.server_params,
+        }
+        return tree, self.engine.aux_state()
+
+    def restore(self, tree, aux) -> None:
+        for c, p in zip(self.clients, tree["clients"]):
+            c.params = p
+        self.server_params = tree["server"]
+        self.engine.restore_aux(aux)
 
     # ---------------------------------------------------------- eval
 

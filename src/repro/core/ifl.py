@@ -13,7 +13,7 @@ communication round t:
      the encoded payloads and broadcasts (lines 13-21). The ledger
      records exactly the encoded payload bytes — compressed bytes are
      what cross the boundary. Stateful ``ef(...)`` codecs keep an EF21
-     residual per client (``self.ef_state[cid]``) that flows through the
+     residual per client (``self.ef_state[slot]``) that flows through the
      jitted encode: the client transmits encode(z + e) and carries
      e' = (z + e) - decode(...) to the next round, recovering fp32-level
      accuracy under aggressive compression at identical wire bytes.
@@ -45,8 +45,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import IFLConfig
+from repro.config import RunConfig
 from repro.core.codec import get_codec
+from repro.core.report import RoundReport
 from repro.core.rounds import RoundEngine
 
 
@@ -73,7 +74,7 @@ class Client:
 
 
 class IFLTrainer:
-    def __init__(self, clients: Sequence[Client], cfg: IFLConfig,
+    def __init__(self, clients: Sequence[Client], cfg: RunConfig,
                  seed: int = 0):
         self.clients = list(clients)
         self.cfg = cfg
@@ -99,9 +100,12 @@ class IFLTrainer:
         )
         # Per-client EF residual (empty pytree for stateless codecs).
         # Client-private, never transmitted, never counted by the ledger.
+        # Keyed by client *slot*, not cid: cids name architectures and
+        # repeat when a fleet larger than the four Table-II archs cycles
+        # them — each client still owns its own residual.
         self.ef_state = {
-            c.cid: self.codec.init_state((cfg.batch_size, cfg.d_fusion))
-            for c in clients
+            k: self.codec.init_state((cfg.batch_size, cfg.d_fusion))
+            for k in range(len(self.clients))
         }
         self._base_step = {}
         self._mod_step = {}
@@ -144,7 +148,7 @@ class IFLTrainer:
 
     # ------------------------------------------------------------ round
 
-    def run_round(self) -> Dict[str, float]:
+    def run_round(self) -> RoundReport:
         cfg = self.cfg
         eng = self.engine
         participants = eng.participants()  # sorted client slots, this round
@@ -178,8 +182,8 @@ class IFLTrainer:
             assert z.shape[-1] == cfg.d_fusion, (
                 f"client {c.cid} fusion dim {z.shape[-1]} != {cfg.d_fusion}"
             )
-            payload, self.ef_state[c.cid] = self._encode_state(
-                z, self.ef_state[c.cid]
+            payload, self.ef_state[int(k)] = self._encode_state(
+                z, self.ef_state[int(k)]
             )
             self.ledger.send_up((payload, y))  # the ONLY uplink bytes in IFL
             # Every receiver reconstructs the same z_hat; decode once at
@@ -218,11 +222,38 @@ class IFLTrainer:
             "base_loss": float(np.mean(losses)) if losses else float("nan"),
             "mod_loss": (float(np.mean(mod_losses)) if mod_losses
                          else float("nan")),
-            "uplink_mb": self.ledger.uplink_mb,
             "participants": [int(k) for k in participants],
             "cache_size": len(entries),
             "max_staleness_seen": max(staleness.values(), default=0),
         })
+
+    # ---------------------------------------------------- snapshot/restore
+
+    def snapshot(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """(array pytree, JSON-able aux) — the Trainer-protocol state.
+
+        The pytree holds every client's params plus the per-client EF
+        residuals (slot order); the aux dict carries the round counter,
+        the rng bit-generator state, and the ledger totals, so a
+        restored run replays the exact byte/metric trajectory. The
+        server FusionCache is deliberately NOT captured: its variable
+        structure doesn't fit a fixed checkpoint template, and restoring
+        cold only means absent clients drop out of broadcasts until
+        their next upload (graceful under the staleness bound anyway).
+        Persist with ``repro.api.save_trainer`` (repro.checkpoint).
+        """
+        tree = {
+            "clients": [c.params for c in self.clients],
+            "ef": [self.ef_state[k] for k in range(len(self.clients))],
+        }
+        return tree, self.engine.aux_state()
+
+    def restore(self, tree, aux) -> None:
+        for k, (c, p, e) in enumerate(
+                zip(self.clients, tree["clients"], tree["ef"])):
+            c.params = p
+            self.ef_state[k] = e
+        self.engine.restore_aux(aux)
 
     # ------------------------------------------------------------ eval
 

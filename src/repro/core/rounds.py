@@ -57,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.comm import CommLedger
+from repro.core.report import RoundReport
 
 __all__ = [
     "ParticipationSchedule",
@@ -311,11 +312,53 @@ class RoundEngine:
         idx = self.rng.integers(0, client.num_samples, size=batch_size)
         return jnp.asarray(client.data_x[idx]), jnp.asarray(client.data_y[idx])
 
-    def end_round(self, metrics: Dict[str, Any]) -> Dict[str, Any]:
-        """Close the ledger round, log metrics, advance the counter."""
+    def aux_state(self) -> Dict[str, Any]:
+        """JSON-able engine state for checkpoint resume: round counter,
+        rng bit-generator state, ledger totals.  The FusionCache is not
+        captured (variable structure); a restored run starts with a cold
+        cache and absent clients simply drop out of broadcasts until
+        their next upload."""
+        return {
+            "round_idx": self.round_idx,
+            "rng": self.rng.bit_generator.state,
+            "ledger": {"uplink": self.ledger.uplink,
+                       "downlink": self.ledger.downlink},
+        }
+
+    def restore_aux(self, aux: Dict[str, Any]) -> None:
+        self.round_idx = int(aux["round_idx"])
+        self.rng.bit_generator.state = aux["rng"]
+        self.ledger.uplink = int(aux["ledger"]["uplink"])
+        self.ledger.downlink = int(aux["ledger"]["downlink"])
+        # Cold-cache semantics must hold for in-place rewinds too: a
+        # used engine may hold payloads uploaded AFTER the snapshot
+        # round, which would look negative-staleness (never expiring)
+        # to the rewound counter. Drop them, and truncate the
+        # history/per-round trails past the restored round.
+        self.cache = FusionCache(self.cache.max_staleness)
+        del self.history[self.round_idx:]
+        del self.ledger.per_round[self.round_idx:]
+
+    def end_round(self, metrics: Dict[str, Any]) -> RoundReport:
+        """Close the ledger round, log metrics, advance the counter.
+
+        Returns a structured :class:`RoundReport` (the Trainer-protocol
+        return type): cross-scheme fields — round index, cumulative
+        ledger MB both legs, participants — are typed attributes, and
+        everything else in ``metrics`` rides in ``report.metrics``. The
+        report is a read-only Mapping over both, so dict-style consumers
+        of the old ad-hoc metrics keep working unchanged.
+        """
         self.ledger.end_round()
         metrics = dict(metrics)
-        metrics.setdefault("round", self.round_idx)
-        self.history.append(metrics)
+        metrics.pop("uplink_mb", None)  # a ledger fact, not a metric
+        report = RoundReport(
+            round=int(metrics.pop("round", self.round_idx)),
+            uplink_mb=self.ledger.uplink_mb,
+            downlink_mb=self.ledger.downlink_mb,
+            participants=[int(k) for k in metrics.pop("participants", [])],
+            metrics=metrics,
+        )
+        self.history.append(report)
         self.round_idx += 1
-        return metrics
+        return report

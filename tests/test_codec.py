@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import IFLConfig, ModelConfig
+from repro.config import RunConfig, ModelConfig
 from repro.core import Client, IFLTrainer, get_codec, ifl_round_bytes
 from repro.core.codec import available_codecs
 from repro.core.comm import nbytes
@@ -208,7 +208,7 @@ def test_ledger_parity_two_client_round(name):
     """CommLedger measured bytes == ifl_round_bytes(..., codec=) on a
     real 2-client round — the acceptance-criteria parity check."""
     tx, ty, _, _ = make_synth_kmnist(600, 100)
-    cfg = IFLConfig(tau=2, batch_size=16, codec=name)
+    cfg = RunConfig(tau=2, batch_size=16, codec=name)
     shards = dirichlet_partition(ty, 2, alpha=0.5, seed=0)
     clients = []
     for k in range(2):

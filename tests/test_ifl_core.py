@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 from hypothesis import given, strategies as st
 
-from repro.config import IFLConfig
+from repro.config import RunConfig
 from repro.core import (
     Client,
     CommLedger,
@@ -55,7 +55,7 @@ def small_data():
 @pytest.fixture(scope="module")
 def trained_round(small_data):
     tx, ty, ex, ey = small_data
-    cfg = IFLConfig(tau=3, batch_size=16)
+    cfg = RunConfig(tau=3, batch_size=16)
     tr = IFLTrainer(_mk_clients(tx, ty), cfg, seed=1)
     before = jax.tree.map(jnp.copy, {c.cid: c.params for c in tr.clients})
     tr.run_round()
@@ -118,7 +118,7 @@ def test_tau_zero_round_is_fusion_only(small_data):
     run_round. A τ=0 round is legal — fusion exchange + modular updates
     only: base params untouched, base_loss NaN by convention."""
     tx, ty, _, _ = small_data
-    cfg = IFLConfig(tau=0, batch_size=8)
+    cfg = RunConfig(tau=0, batch_size=8)
     tr = IFLTrainer(_mk_clients(tx, ty), cfg, seed=2)
     before = jax.tree.map(jnp.copy, {c.cid: c.params for c in tr.clients})
     m = tr.run_round()  # must not raise
@@ -134,7 +134,7 @@ def test_base_loss_averages_all_tau_steps(small_data):
     losses. Replay the trainer's exact sampling stream and check the
     reported value equals the mean over every (client, step) loss."""
     tx, ty, _, _ = small_data
-    cfg = IFLConfig(tau=3, batch_size=16)
+    cfg = RunConfig(tau=3, batch_size=16)
     seed = 5
     clients = _mk_clients(tx, ty)
     params0 = jax.tree.map(jnp.copy, {c.cid: c.params for c in clients})
@@ -163,7 +163,7 @@ def test_base_loss_averages_all_tau_steps(small_data):
 
 def test_fsl_round_and_costs(small_data):
     tx, ty, ex, ey = small_data
-    cfg = IFLConfig(tau=3, batch_size=16)
+    cfg = RunConfig(tau=3, batch_size=16)
     clients = _mk_clients(tx, ty)
     # shared server model = client 1's modular arch
     server = init_client_model(jax.random.PRNGKey(99), 1)["modular"]
@@ -183,7 +183,7 @@ def test_fsl_round_and_costs(small_data):
 
 def test_fl_round_and_costs(small_data):
     tx, ty, _, _ = small_data
-    cfg = IFLConfig(tau=2, batch_size=16)
+    cfg = RunConfig(tau=2, batch_size=16)
     shards = dirichlet_partition(ty, 4, alpha=0.5, seed=0)
     # FL-1: everyone runs client 1's architecture.
     clients = []
@@ -207,7 +207,7 @@ def test_fl_round_and_costs(small_data):
 
 def test_comm_ordering_ifl_cheapest_per_round(small_data):
     """Table I / Fig 2 premise: per-round uplink IFL == FSL << FL."""
-    cfg = IFLConfig()
+    cfg = RunConfig()
     ifl = ifl_round_bytes(4, cfg.batch_size, 432)["up"]
     fsl = fsl_round_bytes(4, cfg.batch_size, 432)["up"]
     model_b = 4_000_000  # ~1M params fp32 (client 2 scale)

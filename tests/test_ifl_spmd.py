@@ -114,7 +114,7 @@ def test_ef_round_state_eager_spmd_parity(setup):
     """
     import functools
 
-    from repro.config import IFLConfig
+    from repro.config import RunConfig
     from repro.core import Client, IFLTrainer
     from repro.core.ifl_spmd import init_ef_state
 
@@ -134,7 +134,7 @@ def test_ef_round_state_eager_spmd_parity(setup):
     # The eager trainer, configured for the same codec and row count;
     # its _encode_state/_decode are the exact jitted callables run_round
     # uses, and its ef_state holds the same zeros-init residual.
-    eager_cfg = IFLConfig(n_clients=N, batch_size=B * S,
+    eager_cfg = RunConfig(n_clients=N, batch_size=B * S,
                           d_fusion=cfg.d_fusion, codec=codec)
     dummy = np.zeros((4, 28, 28, 1), np.float32)
     clients = [Client(cid=k, params={},
@@ -180,10 +180,10 @@ def test_ef_spmd_residual_decays_topk(setup):
 def _eager_codec_rig(codec):
     """The eager trainer's exact jitted encode/decode machinery, as in
     test_ef_round_state_eager_spmd_parity."""
-    from repro.config import IFLConfig
+    from repro.config import RunConfig
     from repro.core import Client, IFLTrainer
 
-    eager_cfg = IFLConfig(n_clients=N, batch_size=B * S,
+    eager_cfg = RunConfig(n_clients=N, batch_size=B * S,
                           d_fusion=32, codec=codec)
     dummy = np.zeros((4, 28, 28, 1), np.float32)
     clients = [Client(cid=k, params={},

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import IFLConfig
+from repro.config import RunConfig
 from repro.core import (
     Client,
     CommLedger,
@@ -212,7 +212,7 @@ def test_ifl_ledger_parity_under_schedule(schedule, codec):
     """EXACT analytic↔ledger byte parity, every round, for every
     participation schedule × codec: uplink = K fresh payloads, downlink
     = the M-entry cache broadcast to the K participants."""
-    cfg = IFLConfig(n_clients=N_CLIENTS, tau=1, batch_size=BATCH,
+    cfg = RunConfig(n_clients=N_CLIENTS, tau=1, batch_size=BATCH,
                     d_fusion=D_FUSION, codec=codec,
                     participation=schedule)
     tr = IFLTrainer(_tiny_clients(), cfg, seed=11)
@@ -244,25 +244,25 @@ def test_ifl_absent_clients_fully_frozen():
             m[0 if round_idx else slice(None)] = True
             return m  # round 0: everyone; later rounds: slot 0 only
 
-    cfg = IFLConfig(n_clients=N_CLIENTS, tau=2, batch_size=BATCH,
+    cfg = RunConfig(n_clients=N_CLIENTS, tau=2, batch_size=BATCH,
                     d_fusion=D_FUSION, codec="ef(int8_row)",
                     participation=FirstOnly())
     tr = IFLTrainer(_tiny_clients(), cfg, seed=0)
     tr.run_round()
     frozen_params = jax.tree.map(
-        jnp.copy, {c.cid: c.params for c in tr.clients[1:]})
-    frozen_ef = {c.cid: jnp.copy(tr.ef_state[c.cid])
-                 for c in tr.clients[1:]}
+        jnp.copy, {k: tr.clients[k].params for k in range(1, N_CLIENTS)})
+    frozen_ef = {k: jnp.copy(tr.ef_state[k])  # ef_state is slot-keyed
+                 for k in range(1, N_CLIENTS)}
     m = tr.run_round()
     assert m["participants"] == [0]
     assert m["cache_size"] == N_CLIENTS  # stale slots still broadcast
     assert m["max_staleness_seen"] == 1
-    for c in tr.clients[1:]:
-        for a, b in zip(jax.tree.leaves(frozen_params[c.cid]),
-                        jax.tree.leaves(c.params)):
+    for k in range(1, N_CLIENTS):
+        for a, b in zip(jax.tree.leaves(frozen_params[k]),
+                        jax.tree.leaves(tr.clients[k].params)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         np.testing.assert_array_equal(
-            np.asarray(frozen_ef[c.cid]), np.asarray(tr.ef_state[c.cid]))
+            np.asarray(frozen_ef[k]), np.asarray(tr.ef_state[k]))
     # The participant trained on all four cached pairs.
     assert np.isfinite(m["base_loss"]) and np.isfinite(m["mod_loss"])
 
@@ -271,7 +271,7 @@ def test_ifl_staleness_bound_evicts():
     """straggle(0.25,4): slot 3 uploads at t=3,7,... With
     max_staleness=1 its entry serves exactly one extra round, then the
     broadcast (and the ledger) shrink to 3 entries."""
-    cfg = IFLConfig(n_clients=4, tau=0, batch_size=BATCH,
+    cfg = RunConfig(n_clients=4, tau=0, batch_size=BATCH,
                     d_fusion=D_FUSION, participation="straggle(0.25,4)",
                     max_staleness=1)
     tr = IFLTrainer(_tiny_clients(), cfg, seed=0)
@@ -293,7 +293,7 @@ def test_ifl_empty_round_is_noop():
         def mask(self, round_idx, n, rng):
             return np.zeros(n, bool)
 
-    cfg = IFLConfig(n_clients=2, tau=1, batch_size=BATCH,
+    cfg = RunConfig(n_clients=2, tau=1, batch_size=BATCH,
                     d_fusion=D_FUSION, participation=Nobody())
     tr = IFLTrainer(_tiny_clients(n=2), cfg, seed=0)
     before = jax.tree.map(jnp.copy, {c.cid: c.params for c in tr.clients})
@@ -311,7 +311,7 @@ def test_ifl_trainer_schedule_deterministic():
     """Same seed => same participant trace AND same final params."""
     runs = []
     for _ in range(2):
-        cfg = IFLConfig(n_clients=4, tau=1, batch_size=BATCH,
+        cfg = RunConfig(n_clients=4, tau=1, batch_size=BATCH,
                         d_fusion=D_FUSION, participation="k2")
         tr = IFLTrainer(_tiny_clients(), cfg, seed=3)
         ms = [tr.run_round() for _ in range(4)]
@@ -334,7 +334,7 @@ def _fl_clients(n=4, samples=64, seed=0):
 def test_fl_ledger_parity_under_schedule(schedule):
     from repro.core.comm import nbytes
 
-    cfg = IFLConfig(n_clients=4, tau=1, batch_size=BATCH,
+    cfg = RunConfig(n_clients=4, tau=1, batch_size=BATCH,
                     d_fusion=D_FUSION, participation=schedule)
     tr = FLTrainer(_fl_clients(), cfg, seed=5)
     model_b = nbytes(tr.global_params)
@@ -347,7 +347,7 @@ def test_fl_ledger_parity_under_schedule(schedule):
 
 @pytest.mark.parametrize("schedule", SCHEDULES)
 def test_fsl_ledger_parity_under_schedule(schedule):
-    cfg = IFLConfig(n_clients=4, tau=1, batch_size=BATCH,
+    cfg = RunConfig(n_clients=4, tau=1, batch_size=BATCH,
                     d_fusion=D_FUSION, participation=schedule)
     clients = _tiny_clients()
     server = jnp.asarray(
@@ -368,7 +368,7 @@ def test_fl_tau_zero_round_reports_nan():
     round is a no-op: loss NaN by convention, global model EXACTLY
     unchanged (not re-averaged through float round-off), bytes still
     ledgered (download + upload of the untouched model)."""
-    cfg = IFLConfig(n_clients=4, tau=0, batch_size=BATCH,
+    cfg = RunConfig(n_clients=4, tau=0, batch_size=BATCH,
                     d_fusion=D_FUSION)
     tr = FLTrainer(_fl_clients(), cfg, seed=0)
     before = jax.tree.map(jnp.copy, tr.global_params)
@@ -386,7 +386,7 @@ def test_fl_tau_zero_round_reports_nan():
 def test_fl_partial_round_aggregates_participants_only():
     """Under k2, FedAvg weights are sample counts normalized over the 2
     participants, and absent clients contribute nothing."""
-    cfg = IFLConfig(n_clients=4, tau=2, batch_size=BATCH,
+    cfg = RunConfig(n_clients=4, tau=2, batch_size=BATCH,
                     d_fusion=D_FUSION, participation="k2")
     tr = FLTrainer(_fl_clients(), cfg, seed=9)
     m = tr.run_round()

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import IFLConfig
+from repro.config import RunConfig
 from repro.core import Client, IFLTrainer
 from repro.data import dirichlet_partition, make_synth_kmnist
 from repro.models.small import (
@@ -24,7 +24,7 @@ def trained():
     the system-level claims (incl. the slower conv clients) to become
     measurable in CI time."""
     tx, ty, ex, ey = make_synth_kmnist(4000, 1000)
-    cfg = IFLConfig(tau=10, batch_size=32, lr_base=0.05, lr_modular=0.05)
+    cfg = RunConfig(tau=10, batch_size=32, lr_base=0.05, lr_modular=0.05)
     shards = dirichlet_partition(ty, 4, alpha=0.5, seed=0)
     clients = [
         Client(
@@ -92,7 +92,7 @@ def _run_ifl(codec, *, data, cids, tau, rounds, seed,
         )
         for k, c in enumerate(cids)
     ]
-    cfg = IFLConfig(tau=tau, batch_size=32, lr_base=0.05, lr_modular=0.05,
+    cfg = RunConfig(tau=tau, batch_size=32, lr_base=0.05, lr_modular=0.05,
                     codec=codec, participation=participation,
                     max_staleness=max_staleness)
     tr = IFLTrainer(clients, cfg, seed=seed)
