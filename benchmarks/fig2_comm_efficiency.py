@@ -16,6 +16,10 @@ schedule (repro.core.rounds: k2 | bern0.5 | straggle(0.2,3) | ...) —
 the HeteroFL regime where only K of N clients show up per round. IFL's
 staleness-bounded fusion cache keeps modular updates training on up to
 N pairs while the ledger only pays for the K fresh uploads.
+``--broadcast delta`` switches the IFL schemes' downlink to the
+delta-shipping policy (repro.core.exchange) — identical accuracy curve
+(same decoded cache state by construction), so the figure's
+total-MB variant shows the downlink saving directly.
 ``--smoke`` shrinks data/rounds to a seconds-long CI check of the full
 axis grid. Prints CSV: scheme,round,uplink_mb,accuracy.
 """
@@ -29,7 +33,7 @@ from repro.api import DataSpec, ExperimentSpec, PAPER_RESULTS, run_experiment
 
 def run(rounds: int = 60, force: bool = False, quiet: bool = False,
         codec: str = "fp32", participation: str = "full",
-        smoke: bool = False):
+        smoke: bool = False, broadcast: str = "full"):
     rows = []
     schemes = ["ifl", "fsl", "fl1", "fl2"]
     if codec != "fp32":
@@ -42,7 +46,13 @@ def run(rounds: int = 60, force: bool = False, quiet: bool = False,
     )
     for scheme in schemes:
         base, _, cdc = scheme.partition("+")
-        spec = base_spec.replace(scheme=base, codec=cdc or "fp32")
+        # The broadcast axis only exists for fusion downlinks; keeping
+        # FL/FSL at 'full' keeps their spec hashes (and cached curves)
+        # untouched.
+        spec = base_spec.replace(
+            scheme=base, codec=cdc or "fp32",
+            broadcast=broadcast if base.startswith("ifl") else "full",
+        )
         out = run_experiment(spec, cache_dir=PAPER_RESULTS, force=force)
         for rec in out.records:
             rows.append((scheme, rec["round"], rec["uplink_mb"],
@@ -88,6 +98,11 @@ if __name__ == "__main__":
                     help="client schedule for every scheme "
                          "(repro.core.rounds: full | k<K> | bern<p> | "
                          "straggle(<frac>,<period>), e.g. k2)")
+    ap.add_argument("--broadcast", default="full",
+                    choices=["full", "delta"],
+                    help="downlink policy for the IFL curves "
+                         "(repro.core.exchange): full cache per "
+                         "participant, or delta mirror-sync")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-long CI mode: tiny data, few rounds")
     ap.add_argument("--force", action="store_true")
@@ -96,7 +111,8 @@ if __name__ == "__main__":
         args.rounds = min(args.rounds, 4)
         args.force = True  # never serve a smoke run from the full cache
     rows = run(args.rounds, args.force, codec=args.codec,
-               participation=args.participation, smoke=args.smoke)
+               participation=args.participation, smoke=args.smoke,
+               broadcast=args.broadcast)
     budget, hl = headline(rows)
     print(f"# at IFL-90% uplink budget {budget:.2f} MB: {hl}")
     if args.codec != "fp32":

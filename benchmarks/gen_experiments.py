@@ -61,6 +61,12 @@ def _paper_runs(rounds: int = 200):
             continue
         if d.get("participation", "full") != "full":
             continue
+        # Delta-downlink runs have identical accuracy but different
+        # total-MB trajectories; only the full-broadcast baseline may
+        # stand in for a scheme's headline numbers. (The broadcast axis
+        # is elided from the spec dict at its 'full' default.)
+        if d.get("spec", {}).get("broadcast", "full") != "full":
+            continue
         s = d.get("scheme")
         spec = d.get("spec", {})
         calibrated = (spec.get("lr", 0.05) != 0.01 if spec

@@ -35,6 +35,13 @@ def main() -> None:
                     help="client schedule for the paper experiments "
                          "(repro.core.rounds: full | k<K> | bern<p> | "
                          "straggle(<frac>,<period>), e.g. k2)")
+    ap.add_argument("--broadcast", default="full",
+                    choices=["full", "delta"],
+                    help="downlink policy for the IFL curves "
+                         "(repro.core.exchange): full cache per "
+                         "participant, or delta mirror-sync — the "
+                         "spec-hash cache keys the variant "
+                         "automatically")
     args = ap.parse_args()
     t0 = time.time()
 
@@ -53,7 +60,8 @@ def main() -> None:
         from benchmarks import fig2_comm_efficiency
 
         rows = fig2_comm_efficiency.run(args.rounds, codec=args.codec,
-                                        participation=args.participation)
+                                        participation=args.participation,
+                                        broadcast=args.broadcast)
         budget, hl = fig2_comm_efficiency.headline(rows)
         print(f"# at IFL-90% uplink budget {budget:.2f} MB: "
               + ", ".join(f"{k}={v:.3f}" for k, v in hl.items()))

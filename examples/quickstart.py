@@ -28,6 +28,11 @@ cache re-broadcasts absent vendors' last payloads (bounded by
 ``--max-staleness``) so modular updates still see all four, while the
 ledger pays only for the fresh uploads.
 
+``--broadcast`` picks the downlink policy (repro.core.exchange): full
+(every participant receives the whole valid cache) | delta (vendors
+mirror the server cache, so the server ships each entry at most once
+per round — identical training signal, far fewer downlink bytes).
+
 ``--scheme`` swaps the whole algorithm (anything in
 ``repro.api.available_schemes()``: ifl | fsl | fl1 | fl2 | ifl_spmd) —
 the point of the registry is that baselines are a flag, not a fork.
@@ -47,15 +52,17 @@ from repro.core import ifl_round_bytes
 
 
 def main(scheme: str = "ifl", codec: str = "fp32",
-         participation: str = "full", max_staleness=None, rounds: int = 20):
+         participation: str = "full", max_staleness=None, rounds: int = 20,
+         broadcast: str = "full"):
     data_name = ("synthetic LM tokens" if scheme == "ifl_spmd"
                  else "synthetic KMNIST")
     print(f"== {scheme} quickstart: 4 vendors, {data_name}, "
-          f"wire codec {codec}, participation {participation} ==")
+          f"wire codec {codec}, participation {participation}, "
+          f"broadcast {broadcast} ==")
     spmd = scheme == "ifl_spmd"
     spec = ExperimentSpec(
         scheme=scheme, rounds=rounds, tau=10, lr=0.05, batch_size=32,
-        codec=codec, participation=participation,
+        codec=codec, participation=participation, broadcast=broadcast,
         max_staleness=max_staleness, eval_every=5, seed=0,
         # The SPMD demo runs the smoke LM: match its 32-dim fusion cut
         # (the spec's d_fusion is authoritative over the model config).
@@ -89,10 +96,21 @@ def main(scheme: str = "ifl", codec: str = "fp32",
         exp = ifl_round_bytes(spec.fleet.n_clients, spec.batch_size,
                               spec.d_fusion, codec=codec,
                               participating=len(m0["participants"]),
-                              broadcast_entries=m0["cache_size"])
+                              broadcast_entries=m0["cache_size"],
+                              broadcast=spec.broadcast,
+                              delta_entries=m0.metrics.get(
+                                  "shipped_entries"))
         got = trainer.ledger.per_round[0]
         print(f"\nper-round bytes measured {got} == analytic {exp}: "
               f"{got['up'] == exp['up'] and got['down'] == exp['down']}")
+        if spec.broadcast == "delta":
+            full_down = ifl_round_bytes(
+                spec.fleet.n_clients, spec.batch_size, spec.d_fusion,
+                codec=codec, participating=len(m0["participants"]),
+                broadcast_entries=m0["cache_size"])["down"]
+            if got["down"]:
+                print(f"delta downlink saving vs full broadcast: "
+                      f"{full_down / got['down']:.2f}x this round")
         if codec != "fp32" and exp["up"]:  # an empty round 0 has no uplink
             fp32 = ifl_round_bytes(spec.fleet.n_clients, spec.batch_size,
                                    spec.d_fusion,
@@ -119,7 +137,12 @@ if __name__ == "__main__":
     ap.add_argument("--max-staleness", type=int, default=None,
                     help="fusion-cache staleness bound in rounds "
                          "(default: never evict)")
+    ap.add_argument("--broadcast", default="full",
+                    choices=["full", "delta"],
+                    help="downlink policy (repro.core.exchange): full "
+                         "cache to every participant, or delta "
+                         "mirror-sync (each entry ships once)")
     ap.add_argument("--rounds", type=int, default=20)
     args = ap.parse_args()
     main(args.scheme, args.codec, args.participation, args.max_staleness,
-         args.rounds)
+         args.rounds, args.broadcast)

@@ -105,7 +105,11 @@ def run_experiment(
                             f"{spec.scheme}_{spec.spec_hash()}.json")
         if os.path.exists(path):
             cached = RunResult.from_json(path)
-        else:
+        elif spec.broadcast == "full":
+            # The legacy tags predate the broadcast axis (every legacy
+            # fixture is a full-broadcast run), so a non-default policy
+            # must never match one — a delta spec served the tracked
+            # full-broadcast file would silently report zero saving.
             legacy = os.path.join(cache_dir, _legacy_tag(spec))
             if os.path.exists(legacy):
                 with open(legacy) as f:

@@ -81,16 +81,30 @@ class ExperimentSpec:
     codec: str = "fp32"
     participation: str = "full"
     max_staleness: Optional[int] = None
+    # Downlink policy for the fusion broadcast: 'full' | 'delta'
+    # (repro.core.exchange). Ignored by schemes without a fusion
+    # downlink (FL/FSL).
+    broadcast: str = "full"
     eval_every: int = 5  # <=0: evaluate on the final round only
     seed: int = 0
     model: str = ""
     data: DataSpec = field(default_factory=DataSpec)
     fleet: FleetSpec = field(default_factory=FleetSpec)
 
+    # Axes added after the canonical form was pinned, elided from
+    # ``to_dict`` at their compat default: every pre-existing spec hash
+    # (including the tracked results/paper fixtures) stays addressable,
+    # and only a non-default value hashes as a new experiment.
+    _ELIDE_AT_DEFAULT = (("broadcast", "full"),)
+
     # ------------------------------------------------------- conversions
 
     def to_dict(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        for name, default in self._ELIDE_AT_DEFAULT:
+            if d[name] == default:
+                del d[name]
+        return d
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "ExperimentSpec":
@@ -126,6 +140,7 @@ class ExperimentSpec:
             codec=self.codec,
             participation=self.participation,
             max_staleness=self.max_staleness,
+            broadcast=self.broadcast,
         )
 
     # ------------------------------------------------------------ hashing

@@ -9,12 +9,17 @@ byte-accounting semantics of the eager engine:
 
   - participation masks come from the SAME ``RoundEngine`` (one rng
     stream pins schedule draws to the seed),
-  - the ledger records the codec's analytic ``encoded_nbytes`` per
-    fresh upload — the quantity the property suite pins to measured
-    wire bytes for every registered codec — plus int32 token labels,
-    and the broadcast leg as participants x valid cache entries,
+  - byte accounting is the exchange plane's
+    (``SPMDFusionExchange.account_round``): the codec's analytic
+    ``encoded_nbytes`` per fresh upload — the quantity the property
+    suite pins to measured wire bytes for every registered codec — plus
+    int32 token labels, and the downlink under the spec's broadcast
+    policy (``full``: participants x valid cache entries; ``delta``:
+    mirror-sync shipping, each entry at most once plus the slot-index
+    sidecar — same formula ``ifl_round_bytes(broadcast=)`` models),
   - ``snapshot/restore`` captures params, optimizer state, and the
-    carried EF residual / payload cache, so resume is bitwise.
+    carried EF residual / payload cache (plus the plane's host mirror
+    state in the aux), so resume is bitwise.
 
 Data streams from a seeded ``SyntheticLM`` (the 'synth_tokens'
 dataset): minibatch t of round r is a pure function of (seed, r, t,
@@ -32,7 +37,7 @@ from jax.sharding import Mesh
 
 from repro.api.spec import ExperimentSpec
 from repro.config import ModelConfig
-from repro.core.codec import get_codec
+from repro.core.exchange import SPMDFusionExchange
 from repro.core.ifl_spmd import (
     init_ef_state,
     init_ifl_state,
@@ -88,12 +93,20 @@ class SPMDIFLTrainer:
         self.seq = seq
         self.mesh = mesh or _one_device_mesh()
         self.n_clients = spec.fleet.n_clients
+        # The exchange plane owns both halves of the wire: the
+        # jit-traceable pipeline the round step runs, and the host-side
+        # analytic ledger (same codec, staleness, and broadcast policy
+        # by construction).
+        self.exchange = SPMDFusionExchange(
+            spec.codec, self.mesh, n_clients=self.n_clients,
+            max_staleness=spec.max_staleness, broadcast=spec.broadcast,
+        )
         self.engine = RoundEngine(
             self.n_clients, spec.participation, seed=spec.seed,
-            max_staleness=spec.max_staleness,
+            exchange=self.exchange,
         )
         self.ledger = self.engine.ledger
-        self.codec = get_codec(spec.codec)
+        self.codec = self.exchange.codec
         self.partial = not isinstance(self.engine.schedule, FullParticipation)
 
         self.params, self.opt_state = init_ifl_state(
@@ -103,8 +116,8 @@ class SPMDIFLTrainer:
         self._step = jax.jit(make_ifl_round_step(
             self.model_cfg, self.mesh, n_clients=self.n_clients,
             tau=spec.tau, lr_base=spec.lr, lr_modular=spec.lr,
-            codec=spec.codec, partial_participation=self.partial,
-            max_staleness=spec.max_staleness,
+            partial_participation=self.partial,
+            exchange=self.exchange,
         ))
         z_shape = (self.n_clients, spec.batch_size, seq,
                    self.model_cfg.d_fusion)
@@ -145,7 +158,6 @@ class SPMDIFLTrainer:
         eng = self.engine
         participants = eng.participants()
         batch = self._round_batch(eng.round_idx)
-        k = len(participants)
 
         with self.mesh:
             if self.partial:
@@ -160,29 +172,32 @@ class SPMDIFLTrainer:
                 else:
                     self.params, self.opt_state, m, self.cache = self._step(
                         self.params, self.opt_state, batch, mask, self.cache)
-                entries = int(m["cache_valid"])
             elif self.codec.has_state:
                 self.params, self.opt_state, m, self.ef_state = self._step(
                     self.params, self.opt_state, batch, self.ef_state)
-                entries = self.n_clients
             else:
                 self.params, self.opt_state, m = self._step(
                     self.params, self.opt_state, batch)
-                entries = self.n_clients
 
-        # Bytes that crossed the client boundary: K fresh uploads, then
-        # the M-entry cache broadcast to the K participants — the same
-        # split ifl_round_bytes(participating=, broadcast_entries=)
-        # proves against the eager ledger.
-        self.ledger.send_up_bytes(k * self._entry_bytes)
-        self.ledger.send_down_bytes(k * entries * self._entry_bytes)
+        # Bytes that crossed the client boundary, by the plane's host
+        # accounting: K fresh uploads, downlink under the broadcast
+        # policy — the same split ifl_round_bytes(participating=,
+        # broadcast_entries=, broadcast=, delta_entries=) proves against
+        # the eager ledger. Its valid-entry replay of the mask stream
+        # matches the in-program cache_valid metric exactly.
+        entries, shipped = self.exchange.account_round(
+            [int(i) for i in participants], eng.round_idx,
+            self._entry_bytes)
 
-        return eng.end_round({
+        metrics = {
             "base_loss": float(m["base_loss"]),
             "mod_loss": float(m["mod_loss"]),
             "participants": [int(i) for i in participants],
             "cache_size": entries,
-        })
+        }
+        if self.exchange.broadcast == "delta":
+            metrics["shipped_entries"] = shipped
+        return eng.end_round(metrics)
 
     # ------------------------------------------------------------- eval
 
@@ -242,3 +257,16 @@ class SPMDIFLTrainer:
         if self.cache is not None:
             self.cache = tree["cache"]
         self.engine.restore_aux(aux)
+        if "exchange" not in aux and self.cache is not None:
+            # Pre-exchange-plane checkpoint: the carried cache comes
+            # back warm, so the host accounting must not come back cold
+            # (it would under-ledger the broadcasts the program really
+            # runs). Rebuild the age replica from the restored ages:
+            # a slot with age a last uploaded at (round_idx - 1) - a.
+            from repro.core.exchange import _NEVER
+
+            last = self.engine.round_idx - 1
+            self.exchange._last_upload = [
+                None if int(a) >= _NEVER else last - int(a)
+                for a in np.asarray(self.cache["age"])
+            ]

@@ -302,6 +302,11 @@ class RunConfig:
     # Fusion-cache staleness bound in rounds (None = never evict;
     # 0 = fresh uploads only). See rounds.py for the exact semantics.
     max_staleness: Optional[int] = None
+    # Downlink policy for the fusion broadcast (repro.core.exchange):
+    # 'full' ships the whole valid cache to every participant; 'delta'
+    # ships each entry once — clients mirror the server cache, so the
+    # decoded training signal is identical at a fraction of the bytes.
+    broadcast: str = "full"
 
 
 def __getattr__(name: str):

@@ -6,9 +6,11 @@ Submodules:
                 (repro.api is the user-facing front door over all this)
   codec       — fusion-payload wire codecs (fp32/bf16/fp16/int8/int4/
                 topk/sketch) + EF21 error-feedback wrapping (ef(<codec>))
-  rounds      — participation schedules (full/k-of-N/Bernoulli/straggler),
-                the staleness-bounded FusionCache, and the RoundEngine
-                shared by all three eager trainers
+  exchange    — the exchange plane: ONE uplink/downlink wire pipeline
+                (codec + EF state + FusionCache + ledger + full/delta
+                broadcast policy) with an eager and an SPMD backend
+  rounds      — participation schedules (full/k-of-N/Bernoulli/straggler)
+                and the RoundEngine shared by all three eager trainers
   ifl         — the two-stage IFL algorithm (eager, heterogeneous clients)
   ifl_spmd    — IFL as a single SPMD train_step on the production mesh
   fl          — FedAvg baseline (paper's FL-1/FL-2)
@@ -17,10 +19,17 @@ Submodules:
 """
 
 from repro.core.comm import (  # noqa: F401
+    DELTA_SIDECAR_BYTES,
     CommLedger,
     ifl_round_bytes,
     fl_round_bytes,
     fsl_round_bytes,
+)
+from repro.core.exchange import (  # noqa: F401
+    ExchangePlane,
+    FusionExchange,
+    SPMDFusionExchange,
+    parse_broadcast,
 )
 from repro.core.report import RoundReport  # noqa: F401
 from repro.core.rounds import (  # noqa: F401

@@ -82,10 +82,18 @@ class CommLedger:
 # ------------------------------------------------------------ analytic
 
 
+# Per shipped delta-broadcast entry: one int32 slot index plus one int32
+# upload-round (the staleness anchor a client mirror needs to apply the
+# server's eviction rule locally). See repro.core.exchange.
+DELTA_SIDECAR_BYTES = 8
+
+
 def ifl_round_bytes(n_clients: int, batch: int, d_fusion: int,
                     label_bytes: int = 4, act_bytes: int = 4,
                     codec=None, participating: Optional[int] = None,
                     broadcast_entries: Optional[int] = None,
+                    broadcast: str = "full",
+                    delta_entries: Optional[int] = None,
                     ) -> Dict[str, int]:
     """One IFL round: each participating client uploads (z_k, y_k); the
     server broadcasts the valid fusion-cache entries to the participants.
@@ -103,9 +111,24 @@ def ifl_round_bytes(n_clients: int, batch: int, d_fusion: int,
     round (default: all N); ``broadcast_entries`` is the number M of
     valid FusionCache entries the server re-broadcasts (default: N —
     the steady state of an unbounded cache).  Uplink is K fresh
-    payloads; downlink is the M-entry broadcast to each of the K
-    participants — absent clients transmit and receive nothing (see
-    ``repro.core.rounds`` for the cache-staleness semantics)."""
+    payloads; absent clients transmit and receive nothing (see
+    ``repro.core.rounds`` for the cache-staleness semantics).
+
+    ``broadcast`` selects the downlink policy (repro.core.exchange):
+
+      ``"full"``   the M-entry cache goes to each of the K participants
+                   (the unicast baseline): ``down = K * M * (z + y)``.
+      ``"delta"``  clients mirror the server cache, so the server ships
+                   each (slot, payload, y) entry at most ONCE per round
+                   — the E entries some participant's mirror lacks, plus
+                   a ``DELTA_SIDECAR_BYTES`` slot-index sidecar each:
+                   ``down = E * (z + y + sidecar)``.  ``delta_entries``
+                   is E — per-round, read it off the trainer's
+                   ``shipped_entries`` metric; analytically, it defaults
+                   to K, which is exact ONLY at full participation
+                   (partial schedules add rejoin catch-up entries — use
+                   ``repro.core.exchange.expected_delta_entries`` for an
+                   honest schedule-dependent mean)."""
     if codec is not None:
         from repro.core.codec import get_codec
 
@@ -116,7 +139,16 @@ def ifl_round_bytes(n_clients: int, batch: int, d_fusion: int,
     k = n_clients if participating is None else participating
     m = n_clients if broadcast_entries is None else broadcast_entries
     up = k * (z + y)
-    down = k * m * (z + y)  # each participant receives the valid cache
+    if broadcast == "full":
+        down = k * m * (z + y)  # each participant receives the valid cache
+    elif broadcast == "delta":
+        e = k if delta_entries is None else delta_entries
+        down = e * (z + y + DELTA_SIDECAR_BYTES)
+    else:
+        raise ValueError(
+            f"unknown broadcast policy {broadcast!r}; expected 'full' or "
+            "'delta'"
+        )
     return {"up": up, "down": down}
 
 

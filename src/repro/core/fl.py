@@ -35,6 +35,10 @@ class FLTrainer:
         self.cfg = cfg
         self.engine = RoundEngine(len(self.clients), cfg.participation,
                                   seed=seed)
+        # FedAvg's exchange is the base plane: full model trees up and
+        # down, no codec/cache/policy — but every boundary byte still
+        # routes through the one accounting surface.
+        self.exchange = self.engine.exchange
         self.ledger = self.engine.ledger
         self.rng = self.engine.rng
         c0 = self.clients[0]
@@ -62,7 +66,7 @@ class FLTrainer:
         locals_, losses = [], []
         for c in chosen:
             # server -> client: global model download.
-            self.ledger.send_down(self.global_params)
+            self.exchange.down(self.global_params)
             p = self.global_params
             step_losses = []
             for _ in range(cfg.tau):
@@ -78,7 +82,7 @@ class FLTrainer:
                 if step_losses else float("nan")
             )
             # client -> server: full model upload.
-            self.ledger.send_up(p)
+            self.exchange.up(p)
         # FedAvg (eq. 4) over the participants. Nothing trained (no
         # participants, or τ=0) => the global model is exactly unchanged
         # rather than re-averaged through float round-off.

@@ -41,6 +41,10 @@ class FSLTrainer:
         self.cfg = cfg
         self.engine = RoundEngine(len(self.clients), cfg.participation,
                                   seed=seed)
+        # FSL's exchange is the base plane: cut activations (+labels) up,
+        # activation gradients down — no codec/cache/policy, but the
+        # boundary bytes route through the one accounting surface.
+        self.exchange = self.engine.exchange
         self.ledger = self.engine.ledger
         self.rng = self.engine.rng
         self.server_params = server_params
@@ -89,10 +93,10 @@ class FSLTrainer:
             c = self.clients[k]
             x, y = eng.sample(c, cfg.batch_size)
             h = self._client_fwd[c.cid](c.params["base"], x)
-            self.ledger.send_up((h, y))  # cut activations + labels up
+            self.exchange.up((h, y))  # cut activations + labels up
             gs, gh, loss = self._server_step(self.server_params, h, y,
                                              cfg.lr_modular)
-            self.ledger.send_down(gh)  # activation gradients down
+            self.exchange.down(gh)  # activation gradients down
             c.params = {
                 "base": self._client_bwd[c.cid](c.params["base"], x, gh,
                                                 cfg.lr_base),

@@ -33,6 +33,12 @@ modular blocks. The server's staleness-bounded FusionCache keeps every
 client's last-decoded (z_hat, y) so modular updates still train on up
 to N pairs when only K upload — absent clients' EF residuals stay
 frozen and their bytes never hit the ledger.
+
+The whole wire side — encode/EF/cache/ledger/broadcast-policy — lives
+on the exchange plane (repro.core.exchange.FusionExchange); this
+trainer's job is the learning steps. cfg.broadcast='delta' switches the
+downlink to mirror-sync delta shipping (same decoded training signal,
+K entries instead of K×M on the wire).
 """
 
 from __future__ import annotations
@@ -46,7 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import RunConfig
-from repro.core.codec import get_codec
+from repro.core.exchange import FusionExchange
 from repro.core.report import RoundReport
 from repro.core.rounds import RoundEngine
 
@@ -78,35 +84,22 @@ class IFLTrainer:
                  seed: int = 0):
         self.clients = list(clients)
         self.cfg = cfg
-        # The engine owns the shared round plumbing: rng (one stream for
-        # minibatch sampling AND schedule draws), participation
-        # schedule, CommLedger, FusionCache, metrics history.
+        # The exchange plane owns the wire side (codec + per-client EF
+        # residuals + FusionCache + ledger + broadcast policy); the
+        # engine owns scheduling (one rng stream for minibatch sampling
+        # AND schedule draws, round counter, metrics history).
+        self.exchange = FusionExchange(
+            cfg.codec, len(self.clients),
+            (cfg.batch_size, cfg.d_fusion),
+            max_staleness=cfg.max_staleness, broadcast=cfg.broadcast,
+        )
         self.engine = RoundEngine(
             len(self.clients), cfg.participation, seed=seed,
-            max_staleness=cfg.max_staleness,
+            exchange=self.exchange,
         )
         self.ledger = self.engine.ledger
         self.rng = self.engine.rng
-        self.codec = get_codec(cfg.codec)
-        # encode_with_state is a stateless passthrough for plain codecs,
-        # so ONE jitted encode path serves the whole registry.
-        self._encode_state = jax.jit(self.codec.encode_with_state)
-        self._decode = jax.jit(
-            functools.partial(
-                self.codec.decode,
-                shape=(cfg.batch_size, cfg.d_fusion),
-                dtype=jnp.float32,
-            )
-        )
-        # Per-client EF residual (empty pytree for stateless codecs).
-        # Client-private, never transmitted, never counted by the ledger.
-        # Keyed by client *slot*, not cid: cids name architectures and
-        # repeat when a fleet larger than the four Table-II archs cycles
-        # them — each client still owns its own residual.
-        self.ef_state = {
-            k: self.codec.init_state((cfg.batch_size, cfg.d_fusion))
-            for k in range(len(self.clients))
-        }
+        self.codec = self.exchange.codec
         self._base_step = {}
         self._mod_step = {}
         self._fwd_z = {}
@@ -120,6 +113,21 @@ class IFLTrainer:
                                   c.loss_fn)
             )
             self._fwd_z[c.cid] = jax.jit(c.base_apply)
+
+    # -- wire-pipeline views (the plane owns them; parity tests and the
+    # -- quickstart's EF forensics read them here) ----------------------
+
+    @property
+    def ef_state(self):
+        return self.exchange.ef_state
+
+    @property
+    def _encode_state(self):
+        return self.exchange._encode_state
+
+    @property
+    def _decode(self):
+        return self.exchange._decode
 
     # ------------------------------------------------------------ steps
 
@@ -171,10 +179,10 @@ class IFLTrainer:
                 if step_losses else float("nan")
             )
 
-        # --- Steps 2-3: fusion-layer outputs on a fresh minibatch, encode
-        # with the wire codec (threading the client's EF residual, if the
-        # codec carries one), upload the *encoded* payload. Absent
-        # clients' EF residuals stay frozen.
+        # --- Steps 2-3: fusion-layer outputs on a fresh minibatch, then
+        # the exchange plane runs the whole wire pipeline: EF-threaded
+        # encode, uplink ledger, decode-once into the server cache.
+        # Absent clients' EF residuals stay frozen.
         for k in participants:
             c = self.clients[k]
             x, y = self._sample(c)
@@ -182,28 +190,17 @@ class IFLTrainer:
             assert z.shape[-1] == cfg.d_fusion, (
                 f"client {c.cid} fusion dim {z.shape[-1]} != {cfg.d_fusion}"
             )
-            payload, self.ef_state[int(k)] = self._encode_state(
-                z, self.ef_state[int(k)]
-            )
-            self.ledger.send_up((payload, y))  # the ONLY uplink bytes in IFL
-            # Every receiver reconstructs the same z_hat; decode once at
-            # the server and cache it so the learning signal sees exactly
-            # what crossed the wire — and so the next partial round can
-            # re-broadcast it for this client if it goes absent.
-            eng.cache.put(int(k), payload=payload, z_hat=self._decode(payload),
-                          y=y, round_idx=eng.round_idx)
+            self.exchange.upload(int(k), z, y, eng.round_idx)
 
-        # --- Steps 4-5: server concatenates the valid cache entries
+        # --- Steps 4-5: the server serves the valid cache entries
         # (fresh uploads + absent clients' last payloads within the
-        # staleness bound) and broadcasts them to the PARTICIPANTS
-        # (absent clients are offline and receive nothing; downlink
-        # stays compressed too).
-        entries = eng.cache.valid_entries(eng.round_idx)
-        payloads = [e.payload for _, e in entries]
-        Z = [e.z_hat for _, e in entries]
-        Y = [e.y for _, e in entries]
-        for _ in participants:
-            self.ledger.send_down((payloads, Y))
+        # staleness bound) to the PARTICIPANTS under the configured
+        # broadcast policy — full unicast, or delta mirror-sync (same
+        # decoded pairs, far fewer downlink bytes). Absent clients are
+        # offline and receive nothing.
+        Z, Y, entries, shipped = self.exchange.broadcast_round(
+            participants, eng.round_idx
+        )
 
         # --- Step 6: modular updates on every cached (z_i, y_i),
         # sequentially, for the participants.
@@ -218,33 +215,40 @@ class IFLTrainer:
                 mod_losses.append(float(ml))
 
         staleness = eng.cache.staleness(eng.round_idx)
-        return eng.end_round({
+        metrics = {
             "base_loss": float(np.mean(losses)) if losses else float("nan"),
             "mod_loss": (float(np.mean(mod_losses)) if mod_losses
                          else float("nan")),
             "participants": [int(k) for k in participants],
             "cache_size": len(entries),
             "max_staleness_seen": max(staleness.values(), default=0),
-        })
+        }
+        if self.exchange.broadcast == "delta":
+            # E in ifl_round_bytes(broadcast='delta', delta_entries=E):
+            # the entries actually shipped this round (fresh + catch-up).
+            metrics["shipped_entries"] = len(shipped)
+        return eng.end_round(metrics)
 
     # ---------------------------------------------------- snapshot/restore
 
     def snapshot(self) -> Tuple[Dict[str, Any], Dict[str, Any]]:
         """(array pytree, JSON-able aux) — the Trainer-protocol state.
 
-        The pytree holds every client's params plus the per-client EF
-        residuals (slot order); the aux dict carries the round counter,
-        the rng bit-generator state, and the ledger totals, so a
-        restored run replays the exact byte/metric trajectory. The
-        server FusionCache is deliberately NOT captured: its variable
-        structure doesn't fit a fixed checkpoint template, and restoring
-        cold only means absent clients drop out of broadcasts until
-        their next upload (graceful under the staleness bound anyway).
-        Persist with ``repro.api.save_trainer`` (repro.checkpoint).
+        The pytree holds every client's params, the per-client EF
+        residuals (slot order), and the server FusionCache as a
+        fixed-shape stacked snapshot (``FusionExchange.cache_tree``:
+        empty slots carry encode(zeros), the per-slot upload rounds ride
+        in the aux) — so a restored run replays the exact byte/metric
+        trajectory INCLUDING mid-staleness broadcasts, instead of
+        cold-starting the cache. The aux carries the round counter, rng
+        bit-generator state, ledger totals, and the plane's delta-mirror
+        versions. Persist with ``repro.api.save_trainer``
+        (repro.checkpoint).
         """
         tree = {
             "clients": [c.params for c in self.clients],
             "ef": [self.ef_state[k] for k in range(len(self.clients))],
+            "cache": self.exchange.cache_tree(),
         }
         return tree, self.engine.aux_state()
 
@@ -253,7 +257,13 @@ class IFLTrainer:
                 zip(self.clients, tree["clients"], tree["ef"])):
             c.params = p
             self.ef_state[k] = e
-        self.engine.restore_aux(aux)
+        self.engine.restore_aux(aux)  # clears the cache (in place) ...
+        # ... then the snapshot refills it. Pre-exchange-plane
+        # checkpoints carry neither part: degrade to the old cold-cache
+        # semantics rather than crashing on the missing keys.
+        cache_rounds = aux.get("exchange", {}).get("cache_rounds")
+        if tree.get("cache") is not None and cache_rounds is not None:
+            self.exchange.restore_cache(tree["cache"], cache_rounds)
 
     # ------------------------------------------------------------ eval
 

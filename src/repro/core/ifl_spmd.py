@@ -50,6 +50,14 @@ on a derived mesh ('client', 'data', 'model'):
     each a sequential SGD step on the modular block — the pseudocode's
     per-i update order, which also microbatches the N× modular compute.
 
+The wire pipeline of phase 2 (encode/EF/cache/all-gather/decode) is the
+exchange plane's SPMD backend
+(``repro.core.exchange.SPMDFusionExchange.wire``); this module composes
+it with the learning phases. The same plane's host-side
+``account_round`` does the analytic byte ledger for the ``repro.api``
+adapter — full or delta-broadcast downlink — so eager and SPMD cannot
+drift on what a round costs.
+
 ``dp_train_step`` is the FL-equivalent dense baseline (same model, plain
 data-parallel step; its grad all-reduce crosses all boundaries) used for
 the communication-efficiency comparison. ``prefill_step``/``serve_step``
@@ -58,15 +66,20 @@ cover the inference shapes.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.config import ModelConfig
-from repro.core.codec import get_codec
+from repro.core.exchange import (  # noqa: F401  (re-exported for callers)
+    SPMDFusionExchange,
+    _NEVER,
+    _tree_where,
+    init_ef_state,
+    init_payload_cache,
+)
 from repro.models import modules as nn
 from repro.models.transformer import (
     base_forward,
@@ -120,19 +133,6 @@ def _full_loss_wrt_base(base, mod, cfg: ModelConfig, batch):
 # ------------------------------------------------------------------ round
 
 
-_NEVER = 2 ** 30  # age of a never-filled cache slot (always invalid)
-
-
-def _tree_where(mask, new, old):
-    """Per-client select over pytrees whose leaves lead with (N, ...)."""
-
-    def pick(n, o):
-        m = mask.reshape(mask.shape + (1,) * (n.ndim - 1))
-        return jnp.where(m, n, o)
-
-    return jax.tree.map(pick, new, old)
-
-
 def make_ifl_round_step(
     cfg: ModelConfig,
     mesh: Mesh,
@@ -142,10 +142,11 @@ def make_ifl_round_step(
     lr_base: float = 1e-3,
     lr_modular: float = 1e-3,
     optimizer: str = "sgd",
-    codec: str = "fp32",
+    codec: Optional[str] = None,
     debug_return_zhat: bool = False,
     partial_participation: bool = False,
     max_staleness: Optional[int] = None,
+    exchange: Optional[SPMDFusionExchange] = None,
 ) -> Callable:
     """Build the jittable one-round IFL step for stacked-client params.
 
@@ -176,64 +177,42 @@ def make_ifl_round_step(
     all-gather unchanged at zero fresh uplink. ``max_staleness`` bounds
     the cache ages admitted to the modular update (None = unbounded;
     matches the eager FusionCache semantics, see repro.core.rounds).
+
+    The wire pipeline itself (encode/EF/cache/gather/decode) is the
+    exchange plane's: pass an ``exchange``
+    (:class:`repro.core.exchange.SPMDFusionExchange`, as the
+    ``repro.api.spmd`` adapter does — its host-side ``account_round``
+    then shares codec and staleness semantics with this program by
+    construction) or let one be built from ``codec``/``max_staleness``.
     """
     opt = make_optimizer(optimizer)
-    wire = get_codec(codec)
-    age_bound = _NEVER - 1 if max_staleness is None else int(max_staleness)
-
-    def repl(spec_tail):
-        return NamedSharding(mesh, P(*spec_tail))
-
-    def gather_payload(enc, z_ndim, d_fusion):
-        """Replicate every payload leaf along 'client' — the all-gather.
-
-        Full-rank leaves (quantized z, top-k values/indices) keep 'data'
-        on the per-client batch axis and 'model' on a full-d_fusion last
-        axis; sidecars (scales, zero points) are tiny and replicate.
-        """
-
-        def spec_of(leaf):
-            if leaf.ndim == z_ndim:
-                tail = [None] * (leaf.ndim - 1)
-                tail[0] = "data"
-                if leaf.shape[-1] == d_fusion:
-                    tail[-1] = "model"
-                return repl((None, *tail))
-            return repl((None,) * leaf.ndim)
-
-        return jax.tree.map(
-            lambda a: jax.lax.with_sharding_constraint(a, spec_of(a)), enc
+    if exchange is None:
+        # codec=None means fp32 here (get_codec's own default).
+        exchange = SPMDFusionExchange(
+            codec, mesh, n_clients=n_clients, max_staleness=max_staleness
         )
+    else:
+        # The plane owns the wire regime; a caller that ALSO passes a
+        # conflicting codec/max_staleness would silently get the
+        # plane's — fail loudly instead (None = inherit from the plane,
+        # so an EXPLICIT codec="fp32" against an int8 plane is caught).
+        from repro.core.codec import get_codec
 
-    def ef_constrain(e):
-        """Keep the EF residual sharded exactly like z: client-private
-        (P leads with 'client'), batch on 'data', features on 'model' —
-        no collective ever touches it."""
-        tail = [None] * (e.ndim - 1)
-        if tail:
-            tail[0] = "data"
-        if len(tail) >= 2:
-            tail[-1] = "model"
-        return jax.lax.with_sharding_constraint(e, repl(("client", *tail)))
-
-    def cache_constrain(enc, z_ndim, d_fusion):
-        """Keep the carried payload cache sharded like the wire format
-        *before* the gather: leading 'client', per-client batch on
-        'data', full-d_fusion last axis on 'model'; sidecars client-
-        sharded only. The all-gather is what replicates it."""
-
-        def spec_of(leaf):
-            if leaf.ndim == z_ndim:
-                tail = [None] * (leaf.ndim - 1)
-                tail[0] = "data"
-                if leaf.shape[-1] == d_fusion:
-                    tail[-1] = "model"
-                return repl(("client", *tail))
-            return repl(("client",) + (None,) * (leaf.ndim - 1))
-
-        return jax.tree.map(
-            lambda a: jax.lax.with_sharding_constraint(a, spec_of(a)), enc
-        )
+        if (codec is not None
+                and get_codec(codec).name != exchange.codec.name):
+            raise ValueError(
+                f"make_ifl_round_step: codec={codec!r} conflicts with the "
+                f"exchange plane's {exchange.codec.name!r}; configure the "
+                "codec on the plane"
+            )
+        if (max_staleness is not None
+                and max_staleness != exchange.max_staleness):
+            raise ValueError(
+                f"make_ifl_round_step: max_staleness={max_staleness!r} "
+                f"conflicts with the exchange plane's "
+                f"{exchange.max_staleness!r}; configure it on the plane"
+            )
+    wire = exchange.codec
 
     def _round_impl(params, opt_state, batch, ef_state, mask, cache):
         base_p, mod_p = params["base"], params["modular"]
@@ -280,58 +259,17 @@ def make_ifl_round_step(
             base_p = _tree_where(mask, base_new, params["base"])
             ost_b = _tree_where(mask, ost_b, opt_state["base"])
 
-        # ---------------- Phase 2: fusion exchange (lines 13-21).
+        # ---------------- Phase 2: fusion exchange (lines 13-21) — the
+        # exchange plane's jit-traceable wire block: EF-threaded masked
+        # encode, carried-cache refresh with the staleness weights, THE
+        # 'client'-axis all-gather on the encoded payload, in-program
+        # decode. See SPMDFusionExchange.wire for the full semantics.
         fusion_mb = jax.tree.map(lambda a: a[:, tau], batch)  # (N, Bc, ...)
         z, _ = jax.vmap(lambda bp_k, mb_k: base_forward(bp_k, cfg, mb_k))(
             base_p, fusion_mb
         )  # (N, Bc, S, d_fusion), sharded P('client','data',...)
-        # Quantize-before-all-gather: encode per client, THEN run THE IFL
-        # collective (all-gather along 'client' = upload+concat+broadcast)
-        # on the encoded payload, so the cross-client hop moves the
-        # codec's wire bytes. d_fusion stays 'model'-sharded to keep the
-        # gathered copy small per device. Decode reconstructs z_hat for
-        # the modular updates — the learning signal sees the wire loss.
-        # EF codecs fold the carried residual into the encode and emit
-        # the next-round residual here, before the gather, so it stays
-        # client-local. Under partial participation the masked encode
-        # refreshes participants' cache slots only; absent clients'
-        # residuals and cache slots pass through untouched.
-        if wire.has_state:
-            enc_new, ef_new = jax.vmap(wire.encode_with_state)(z, ef_state)
-            if mask is not None:
-                ef_new = _tree_where(mask, ef_new, ef_state)
-            ef_state = jax.tree.map(ef_constrain, ef_new)
-        else:
-            enc_new = jax.vmap(wire.encode)(z)
-        if mask is None:
-            enc = enc_new
-            yg_src = fusion_mb["tokens"]
-            new_cache = None
-            valid = None
-        else:
-            enc = _tree_where(mask, enc_new, cache["payload"])
-            yg_src = jnp.where(
-                mask.reshape((-1,) + (1,) * (cache["tokens"].ndim - 1)),
-                fusion_mb["tokens"], cache["tokens"],
-            )
-            age = jnp.where(
-                mask, 0, jnp.minimum(cache["age"], _NEVER - 1) + 1
-            ).astype(cache["age"].dtype)
-            new_cache = cache_constrain(
-                {"payload": enc, "tokens": yg_src, "age": age},
-                z.ndim, z.shape[-1],
-            )
-            enc, yg_src = new_cache["payload"], new_cache["tokens"]
-            # Staleness bound: expired (or never-filled) slots carry
-            # weight 0 in the modular update — the fixed-shape analogue
-            # of the eager FusionCache's eviction.
-            valid = (age <= age_bound).astype(jnp.float32)
-        enc = gather_payload(enc, z.ndim, z.shape[-1])
-        zg = jax.vmap(
-            lambda p: wire.decode(p, shape=z.shape[1:], dtype=z.dtype)
-        )(enc)
-        yg = jax.lax.with_sharding_constraint(
-            yg_src, repl((None, "data", None))
+        zg, yg, valid, new_cache, ef_state = exchange.wire(
+            z, fusion_mb["tokens"], mask, cache, ef_state
         )
 
         # ---------------- Phase 3: modular updates (lines 22-31).
@@ -417,35 +355,6 @@ def make_ifl_round_step(
             return p, o, m
 
     return round_step
-
-
-def init_ef_state(codec, z_shape: Tuple[int, ...]):
-    """Initial carried EF residual for ``make_ifl_round_step``.
-
-    ``z_shape`` is the full stacked fusion-output shape
-    (n_clients, Bc, S, d_fusion). Stateless codecs yield an empty
-    pytree; their round step does not take the argument at all."""
-    return get_codec(codec).init_state(z_shape)
-
-
-def init_payload_cache(codec, z_shape: Tuple[int, ...],
-                       token_shape: Tuple[int, ...], *,
-                       dtype=jnp.float32):
-    """Initial carried payload cache for a partial-participation step.
-
-    ``z_shape`` is the stacked fusion-output shape (N, Bc, S, d_fusion)
-    and ``token_shape`` the stacked fusion-minibatch token shape
-    (N, Bc, S). The payload structure/dtypes come from encoding a zero
-    z with the wire codec (so the carry signature matches the masked
-    encode exactly); every slot starts at age ``_NEVER`` — invalid until
-    its client first uploads, regardless of the staleness bound."""
-    wire = get_codec(codec)
-    payload = jax.vmap(wire.encode)(jnp.zeros(z_shape, dtype))
-    return {
-        "payload": payload,
-        "tokens": jnp.zeros(token_shape, jnp.int32),
-        "age": jnp.full((z_shape[0],), _NEVER, jnp.int32),
-    }
 
 
 def init_ifl_state(key, cfg: ModelConfig, *, n_clients: int,

@@ -16,7 +16,9 @@ module owns everything the three eager trainers used to triplicate:
                                 fraction f of the fleet only uploads
                                 every m-th round
   FusionCache             server-side staleness-bounded payload cache
-  RoundEngine             rng + schedule + ledger + metrics history
+                          (defined on the exchange plane, re-exported)
+  RoundEngine             rng + schedule + metrics history, driving an
+                          exchange plane (repro.core.exchange)
 
 Parse schedules from strings (the benchmarks' ``--participation`` axis):
 ``full`` | ``k2`` | ``bern0.5`` | ``straggle(0.2,3)``.
@@ -35,16 +37,25 @@ fewer pairs rather than learning from arbitrarily old activations
 (``max_staleness=None`` never evicts; ``max_staleness=0`` broadcasts
 fresh uploads only, disabling the cache).  Byte accounting is honest on
 both legs: only participants upload (absent clients' EF residuals stay
-frozen and their bytes never hit the ledger), and the server broadcasts
-the full valid cache to *participants only* — so one round costs
-``K * (z + y)`` up and ``K * M * (z + y)`` down, where M is the number
-of valid cache entries (see ``comm.ifl_round_bytes(participating=,
-broadcast_entries=)``, which stays in exact parity with the ledger).
+frozen and their bytes never hit the ledger), and the downlink goes to
+*participants only* — under the default ``broadcast='full'`` policy
+each receives the full valid cache, so one round costs ``K * (z + y)``
+up and ``K * M * (z + y)`` down, where M is the number of valid cache
+entries; under ``broadcast='delta'`` clients mirror the cache and each
+entry ships at most once (see ``repro.core.exchange``).  Either way
+``comm.ifl_round_bytes(participating=, broadcast_entries=, broadcast=,
+delta_entries=)`` stays in exact parity with the ledger.
 
 The SPMD trainer threads the same semantics through one jitted program:
 the gathered payload becomes carried round state updated by a masked
 encode, with an ``age`` vector enforcing the staleness bound (see
 ``ifl_spmd.make_ifl_round_step(partial_participation=True)``).
+
+The wire pipeline itself — codec, EF residuals, the FusionCache, ledger
+accounting, and the full/delta broadcast policy — lives on the
+*exchange plane* (``repro.core.exchange``); the engine schedules rounds
+against whatever plane it is handed (``FusionCache``/``CacheEntry`` are
+re-exported here for back compat).
 """
 
 from __future__ import annotations
@@ -57,6 +68,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.comm import CommLedger
+from repro.core.exchange import CacheEntry, ExchangePlane, FusionCache  # noqa: F401  (re-export)
 from repro.core.report import RoundReport
 
 __all__ = [
@@ -90,6 +102,12 @@ class ParticipationSchedule:
              rng: np.random.Generator) -> np.ndarray:
         raise NotImplementedError
 
+    def expected_participants(self, n: int) -> float:
+        """E[K] per round for an n-client fleet — what the dry-run's
+        analytic client-boundary accounting plugs into
+        ``ifl_round_bytes(participating=)`` (launch.dryrun)."""
+        raise NotImplementedError
+
     def __repr__(self) -> str:
         return f"{type(self).__name__}({self.name!r})"
 
@@ -102,6 +120,9 @@ class FullParticipation(ParticipationSchedule):
 
     def mask(self, round_idx, n, rng):
         return np.ones(n, bool)
+
+    def expected_participants(self, n):
+        return float(n)
 
 
 @dataclass(frozen=True, repr=False)
@@ -121,6 +142,9 @@ class UniformK(ParticipationSchedule):
         m = np.zeros(n, bool)
         m[rng.choice(n, size=min(self.k, n), replace=False)] = True
         return m
+
+    def expected_participants(self, n):
+        return float(min(self.k, n))
 
 
 @dataclass(frozen=True, repr=False)
@@ -142,6 +166,9 @@ class BernoulliSchedule(ParticipationSchedule):
 
     def mask(self, round_idx, n, rng):
         return rng.random(n) < self.p
+
+    def expected_participants(self, n):
+        return self.p * n
 
 
 @dataclass(frozen=True, repr=False)
@@ -177,6 +204,10 @@ class StragglerSchedule(ParticipationSchedule):
         for i in range(n - n_strag, n):
             m[i] = (round_idx % self.period) == (i % self.period)
         return m
+
+    def expected_participants(self, n):
+        n_strag = int(np.ceil(self.frac * n))
+        return (n - n_strag) + n_strag / self.period
 
 
 _STRAGGLE_RE = re.compile(r"^straggle\(([^,]+),(\d+)\)$")
@@ -217,63 +248,6 @@ def parse_participation(
     )
 
 
-# ----------------------------------------------------------- fusion cache
-
-
-@dataclass
-class CacheEntry:
-    """Last upload of one client slot, as the server decoded it."""
-
-    payload: Any  # the encoded wire payload (what a broadcast re-ships)
-    z_hat: Any  # decoded fusion output — what modular updates train on
-    y: Any  # labels (ride uncompressed)
-    round_idx: int  # round the payload was uploaded (staleness anchor)
-
-
-class FusionCache:
-    """Server-side staleness-bounded cache of decoded fusion payloads.
-
-    One entry per client *slot* (index into the trainer's client list),
-    holding the last (payload, z_hat, y) that slot uploaded and the
-    round it did so.  ``valid_entries`` returns the slots whose entry is
-    at most ``max_staleness`` rounds old — and evicts the rest, so the
-    cache never re-serves an expired payload.  See the module docstring
-    for the full semantics.
-    """
-
-    def __init__(self, max_staleness: Optional[int] = None):
-        if max_staleness is not None and max_staleness < 0:
-            raise ValueError("max_staleness must be >= 0 or None")
-        self.max_staleness = max_staleness
-        self._entries: Dict[int, CacheEntry] = {}
-
-    def put(self, slot: int, *, payload, z_hat, y, round_idx: int) -> None:
-        self._entries[slot] = CacheEntry(payload, z_hat, y, round_idx)
-
-    def valid_entries(self, round_idx: int) -> List[Tuple[int, CacheEntry]]:
-        """(slot, entry) pairs within the staleness bound, slot-ordered;
-        expired entries are evicted as a side effect."""
-        if self.max_staleness is not None:
-            expired = [
-                s for s, e in self._entries.items()
-                if round_idx - e.round_idx > self.max_staleness
-            ]
-            for s in expired:
-                del self._entries[s]
-        return sorted(self._entries.items())
-
-    def staleness(self, round_idx: int) -> Dict[int, int]:
-        """Per-slot age (rounds since upload) of the current entries."""
-        return {s: round_idx - e.round_idx
-                for s, e in sorted(self._entries.items())}
-
-    def __len__(self) -> int:
-        return len(self._entries)
-
-    def __contains__(self, slot: int) -> bool:
-        return slot in self._entries
-
-
 # ------------------------------------------------------------ round engine
 
 
@@ -282,20 +256,35 @@ class RoundEngine:
 
     Owns the pieces every trainer used to hand-roll: the rng (one stream
     for minibatch sampling AND schedule draws, so a seed pins the whole
-    run), the participation schedule, the CommLedger, the FusionCache,
-    the round counter, and a metrics history.  Trainers call
-    ``participants()`` once per round, feed the ledger as they transmit,
-    and finish with ``end_round(metrics)``.
+    run), the participation schedule, the round counter, and a metrics
+    history — scheduled against an *exchange plane*
+    (``repro.core.exchange``) that owns the wire side: the CommLedger,
+    and (for the fusion backends) codec, EF state, FusionCache, and
+    broadcast policy.  Trainers call ``participants()`` once per round,
+    transmit through the plane, and finish with ``end_round(metrics)``.
     """
 
     def __init__(self, n_clients: int,
                  participation: Union[str, ParticipationSchedule, None] = None,
-                 *, seed: int = 0, max_staleness: Optional[int] = None):
+                 *, seed: int = 0, max_staleness: Optional[int] = None,
+                 exchange: Optional[ExchangePlane] = None):
         self.n_clients = n_clients
         self.schedule = parse_participation(participation)
         self.rng = np.random.default_rng(seed)
-        self.ledger = CommLedger()
-        self.cache = FusionCache(max_staleness)
+        if exchange is not None and max_staleness is not None:
+            raise ValueError(
+                "RoundEngine: max_staleness is the exchange plane's "
+                "setting — configure it on the plane, not the engine"
+            )
+        self.exchange = ExchangePlane() if exchange is None else exchange
+        self.ledger = self.exchange.ledger
+        # The fusion cache lives on the plane when the plane carries one
+        # (IFL backends); engine-local otherwise — back compat for
+        # direct constructions and the FL/FSL baselines (which never
+        # touch it).
+        self.cache = getattr(self.exchange, "cache", None)
+        if self.cache is None:
+            self.cache = FusionCache(max_staleness)
         self.round_idx = 0
         self.history: List[Dict[str, Any]] = []
 
@@ -314,28 +303,38 @@ class RoundEngine:
 
     def aux_state(self) -> Dict[str, Any]:
         """JSON-able engine state for checkpoint resume: round counter,
-        rng bit-generator state, ledger totals.  The FusionCache is not
-        captured (variable structure); a restored run starts with a cold
-        cache and absent clients simply drop out of broadcasts until
-        their next upload."""
-        return {
+        rng bit-generator state, ledger totals — plus the exchange
+        plane's host state (``aux["exchange"]``: cache entry rounds and
+        delta-mirror versions for the eager fusion plane, the
+        age-replica for the SPMD one).  The cache's *arrays* ride in the
+        trainer's snapshot tree (``FusionExchange.cache_tree``), so a
+        restored run no longer cold-starts the fusion cache."""
+        aux = {
             "round_idx": self.round_idx,
             "rng": self.rng.bit_generator.state,
             "ledger": {"uplink": self.ledger.uplink,
                        "downlink": self.ledger.downlink},
         }
+        ex = self.exchange.aux_state()
+        if ex:
+            aux["exchange"] = ex
+        return aux
 
     def restore_aux(self, aux: Dict[str, Any]) -> None:
         self.round_idx = int(aux["round_idx"])
         self.rng.bit_generator.state = aux["rng"]
         self.ledger.uplink = int(aux["ledger"]["uplink"])
         self.ledger.downlink = int(aux["ledger"]["downlink"])
-        # Cold-cache semantics must hold for in-place rewinds too: a
-        # used engine may hold payloads uploaded AFTER the snapshot
-        # round, which would look negative-staleness (never expiring)
-        # to the rewound counter. Drop them, and truncate the
-        # history/per-round trails past the restored round.
-        self.cache = FusionCache(self.cache.max_staleness)
+        if "exchange" in aux:
+            self.exchange.restore_aux(aux["exchange"])
+        # Clear the cache in place (the plane and trainer alias it): an
+        # in-place rewind may hold payloads uploaded AFTER the snapshot
+        # round, which would look negative-staleness (never expiring) to
+        # the rewound counter.  A FusionExchange-backed trainer then
+        # repopulates it from the snapshot tree (``restore_cache``);
+        # legacy engine-owned caches stay cold, as before.  Truncate the
+        # history/per-round trails past the restored round either way.
+        self.cache._entries.clear()
         del self.history[self.round_idx:]
         del self.ledger.per_round[self.round_idx:]
 

@@ -19,9 +19,22 @@ Step kinds per shape:
   prefill_32k  -> prefill_step
   decode_32k / long_500k -> serve_step (1 token vs seq_len cache)
 
+The IFL rows also carry a ``client_boundary`` section: the analytic
+per-round bytes crossing the client boundary under the configured
+``--codec`` / ``--participation`` / ``--broadcast`` regime
+(``comm.ifl_round_bytes`` — the same formula the trainers' ledgers are
+pinned to), so 256/512-chip reports reflect the cached-payload and
+delta-downlink reality, not just the full-participation fp32 collective.
+``--participation`` other than ``full`` lowers the
+partial-participation round step (mask + carried payload cache as
+inputs), i.e. the HLO being costed IS the masked cached-payload
+program.
+
 Usage:
   python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k
   python -m repro.launch.dryrun --all [--multi-pod] [--step ifl|dp]
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k \
+      --codec int8_row --participation k2 --broadcast delta
 """
 
 import argparse
@@ -42,12 +55,17 @@ from repro.configs.shapes import (
     prefill_batch_specs,
     train_batch_specs,
 )
+from repro.core.codec import get_codec
+from repro.core.comm import ifl_round_bytes
 from repro.core.ifl_spmd import (
+    init_ef_state,
+    init_payload_cache,
     make_dp_train_step,
     make_ifl_round_step,
     make_prefill_step,
     make_serve_step,
 )
+from repro.core.rounds import FullParticipation, parse_participation
 from repro.launch.mesh import data_axes_of, derive_ifl_mesh, make_production_mesh
 from repro.roofline.analysis import (
     collective_bytes_from_hlo,
@@ -99,9 +117,25 @@ def _active_params(cfg: ModelConfig, p_base: float, p_mod: float):
 def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
             n_clients: int, tau: int, variant: str, out_dir: str,
             force: bool = False, cfg_override=None, overrides=None,
-            fsdp_override=None):
+            fsdp_override=None, codec: str = "fp32",
+            participation: str = "full", broadcast: str = "full"):
+    import re as _re
+
     mesh_name = "2x16x16" if multi_pod else "16x16"
     tag = f"{arch}__{shape_name}__{mesh_name}__{step_kind}"
+    # Non-default exchange axes key their own artifacts (sanitized:
+    # codec strings like ef(int4) are shell-hostile) — but ONLY for the
+    # ifl train step, the one program the axes affect; serve/prefill/dp
+    # rows keep their baseline tags so an --all sweep with --codec
+    # doesn't re-lower byte-identical programs past the existing-file
+    # skip.
+    shape_kind = INPUT_SHAPES[shape_name].kind
+    if shape_kind == "train" and step_kind == "ifl":
+        for prefix, value, default in (("c", codec, "fp32"),
+                                       ("p", participation, "full"),
+                                       ("b", broadcast, "full")):
+            if value != default:
+                tag += "__" + prefix + _re.sub(r"[^\w.]+", "-", str(value))
     if variant:
         tag += f"__{variant}"
     os.makedirs(out_dir, exist_ok=True)
@@ -121,24 +155,50 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
         fsdp = fsdp_override
 
     t0 = time.time()
+    schedule = parse_participation(participation)
     if shape.kind == "train" and step_kind == "ifl":
         ifl_mesh = derive_ifl_mesh(mesh, n_clients)
+        partial = not isinstance(schedule, FullParticipation)
         step = make_ifl_round_step(
-            cfg, ifl_mesh, n_clients=n_clients, tau=tau
+            cfg, ifl_mesh, n_clients=n_clients, tau=tau, codec=codec,
+            partial_participation=partial,
         )
         params = param_specs(cfg, n_clients=n_clients)
         opt_state = {"base": {}, "modular": {}}  # SGD: stateless
         batch = train_batch_specs(cfg, shape, n_clients=n_clients, tau=tau)
         pspecs = param_pspecs(params, fsdp=fsdp, client_axis=True)
-        in_sh = (
+        in_sh = [
             tree_shardings(ifl_mesh, pspecs, params),
             {"base": {}, "modular": {}},
             tree_shardings(ifl_mesh, batch_pspec(batch, client_axis=True),
                            batch),
-        )
+        ]
+        lower_args = [params, opt_state, batch]
+        Bc = shape.global_batch // n_clients
+        z_shape = (n_clients, Bc, shape.seq_len, cfg.d_fusion)
+        if partial:
+            # The masked cached-payload program: a bool (N,) mask plus
+            # the carried payload cache (shape/dtype only — eval_shape
+            # never materializes the production-scale arrays). The cache
+            # sharding is pinned in-program by the exchange plane's
+            # with_sharding_constraint, so 'None' (unspecified) suffices
+            # at the jit boundary.
+            cache = jax.eval_shape(
+                functools.partial(init_payload_cache, codec, z_shape,
+                                  (n_clients, Bc, shape.seq_len))
+            )
+            lower_args += [jax.ShapeDtypeStruct((n_clients,), jnp.bool_),
+                           cache]
+            in_sh += [None, None]
+        if get_codec(codec).has_state:
+            # Stateful ef(...) codecs append the carried EF residual to
+            # the step signature (last, after mask/cache when partial).
+            lower_args += [jax.eval_shape(
+                functools.partial(init_ef_state, codec, z_shape))]
+            in_sh += [None]
         with ifl_mesh:
-            lowered = jax.jit(step, in_shardings=in_sh).lower(
-                params, opt_state, batch
+            lowered = jax.jit(step, in_shardings=tuple(in_sh)).lower(
+                *lower_args
             )
     elif shape.kind == "train":  # dp baseline
         step = make_dp_train_step(cfg)
@@ -203,6 +263,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
 
     mem = compiled.memory_analysis()
     cost_raw = compiled.cost_analysis()
+    if isinstance(cost_raw, list):  # newer jax: one dict per program
+        cost_raw = cost_raw[0] if cost_raw else {}
     hlo_text = compiled.as_text()
     # Trip-count-aware accounting: XLA cost_analysis counts while (scan)
     # bodies once, which undercounts every layer stack here. See
@@ -229,6 +291,45 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
     terms = roofline_terms(cost, coll["total"], n_chips,
                            model_flops_total=mf)
 
+    # Client-boundary accounting for IFL rows: the analytic per-round
+    # bytes under the codec × participation × broadcast regime — the
+    # exact formula the trainers' ledgers are pinned to, so the chip
+    # report and the wire report cannot disagree.
+    client_boundary = None
+    if shape.kind == "train" and step_kind == "ifl":
+        from repro.core.exchange import expected_delta_entries
+
+        rows_per_client = (shape.global_batch // n_clients) * shape.seq_len
+        k_exp = schedule.expected_participants(n_clients)
+        k_int = max(1, int(round(k_exp)))
+        # Delta downlink: mean shipped entries from a mirror-sync replay
+        # of the schedule — NOT the K-fresh best case, which only holds
+        # at full participation (rejoining clients pull catch-up
+        # entries, so partial schedules sit between K and N).
+        e_exp = (expected_delta_entries(schedule, n_clients)
+                 if broadcast == "delta" else None)
+        per_round = ifl_round_bytes(
+            n_clients, rows_per_client, cfg.d_fusion, codec=codec,
+            participating=k_int, broadcast_entries=n_clients,
+            broadcast=broadcast,
+            delta_entries=(max(1, int(round(e_exp)))
+                           if e_exp is not None else None),
+        )
+        full_down = ifl_round_bytes(
+            n_clients, rows_per_client, cfg.d_fusion, codec=codec,
+            participating=k_int, broadcast_entries=n_clients,
+        )["down"]
+        client_boundary = {
+            "codec": get_codec(codec).name,
+            "participation": schedule.name,
+            "broadcast": broadcast,
+            "expected_participants": k_exp,
+            "expected_delta_entries": e_exp,
+            "per_round_bytes": per_round,
+            "full_broadcast_down_bytes": full_down,
+            "downlink_saving_x": full_down / max(per_round["down"], 1),
+        }
+
     result = {
         "arch": arch,
         "shape": shape_name,
@@ -239,6 +340,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
         "fsdp": fsdp,
         "tau": tau if shape.kind == "train" and step_kind == "ifl" else None,
         "n_clients": n_clients if step_kind == "ifl" else None,
+        "client_boundary": client_boundary,
         "memory": {
             "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
             "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
@@ -266,6 +368,15 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
         f"collective {terms['collective_s']*1e3:.2f}ms -> {dom}-bound, "
         f"peak {(result['memory']['peak_bytes'] or 0)/1e9:.2f}GB/chip"
     )
+    if client_boundary:
+        cb = client_boundary
+        print(
+            f"     client boundary [{cb['codec']} / {cb['participation']}"
+            f" / {cb['broadcast']}]: "
+            f"up {cb['per_round_bytes']['up']/1e6:.2f}MB, "
+            f"down {cb['per_round_bytes']['down']/1e6:.2f}MB/round "
+            f"({cb['downlink_saving_x']:.2f}x below full broadcast)"
+        )
     return result
 
 
@@ -281,6 +392,17 @@ def main():
     ap.add_argument("--tau", type=int, default=2,
                     help="local base steps lowered per round (paper: 10; "
                          "2 keeps dry-run HLO small, τ is a scan)")
+    ap.add_argument("--codec", default="fp32",
+                    help="wire codec for the fusion exchange "
+                         "(repro.core.codec), e.g. int8_row, ef(int4)")
+    ap.add_argument("--participation", default="full",
+                    help="client schedule (repro.core.rounds, e.g. k2): "
+                         "non-full lowers the masked cached-payload "
+                         "round step")
+    ap.add_argument("--broadcast", default="full",
+                    choices=["full", "delta"],
+                    help="downlink policy for the client-boundary "
+                         "accounting (repro.core.exchange)")
     ap.add_argument("--variant", default="",
                     help="perf-iteration tag for §Perf experiments")
     ap.add_argument("--out", default="results/dryrun")
@@ -323,7 +445,9 @@ def main():
                         n_clients=args.n_clients, tau=args.tau,
                         variant=args.variant, out_dir=args.out,
                         force=args.force, overrides=overrides,
-                        fsdp_override=fsdp_override)
+                        fsdp_override=fsdp_override, codec=args.codec,
+                        participation=args.participation,
+                        broadcast=args.broadcast)
             except Exception as e:  # noqa: BLE001
                 failures.append((arch, shape, mp, repr(e)))
                 print(f"[FAIL] {arch} {shape} multi_pod={mp}: {e}")

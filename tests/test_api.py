@@ -244,14 +244,21 @@ def test_snapshot_restore_resumes_bitwise(tmp_path):
 
 def test_in_place_restore_rewinds_cleanly(tmp_path):
     """Restoring the SAME instance rewinds history/ledger/cache too —
-    the replay must match a fresh-built restore exactly."""
+    the replay must match a fresh-built restore exactly. The fusion
+    cache rewinds to its snapshot-time entries (payloads uploaded AFTER
+    the snapshot round must not survive the rewind), so the replayed
+    broadcasts are the original ones bit for bit."""
     spec = EAGER_SMOKE.replace(participation="k2", rounds=10)
     tr = build_trainer(spec)
     for _ in range(2):
         tr.run_round()
+    snap_state = {s: e.round_idx
+                  for s, e in tr.engine.cache.valid_entries(2)}
     path = str(tmp_path / "ck")
     save_trainer(path, tr)
     fresh = load_trainer(path, build_trainer(spec))
+    assert {s: e.round_idx
+            for s, e in fresh.engine.cache.valid_entries(2)} == snap_state
     fresh_replay = [fresh.run_round() for _ in range(2)]
 
     for _ in range(3):  # advance past the snapshot, then rewind in place
@@ -260,7 +267,9 @@ def test_in_place_restore_rewinds_cleanly(tmp_path):
     assert tr.engine.round_idx == 2
     assert len(tr.engine.history) == 2
     assert len(tr.ledger.per_round) == 2
-    assert len(tr.engine.cache) == 0  # cold cache: no future payloads
+    # No future payloads: the cache is exactly the snapshot-time one.
+    assert {s: e.round_idx
+            for s, e in tr.engine.cache.valid_entries(2)} == snap_state
     replay = [tr.run_round() for _ in range(2)]
     for a, b in zip(fresh_replay, replay):
         assert a["base_loss"] == b["base_loss"]

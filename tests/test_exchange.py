@@ -1,0 +1,555 @@
+"""Exchange-plane invariants: the refactor is behavior-preserving
+(run_experiment under broadcast='full' reproduces the tracked PR-4
+fixtures bit for bit), delta-broadcast downlink is in exact
+analytic↔ledger parity for every schedule × codec on both backends,
+delta and full broadcast produce identical training (same decoded cache
+state by construction), and the fusion cache now snapshots/restores —
+including mid-staleness entries and delta-mirror state."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import RunConfig
+from repro.core import (
+    DELTA_SIDECAR_BYTES,
+    Client,
+    FusionExchange,
+    IFLTrainer,
+    ifl_round_bytes,
+    parse_broadcast,
+)
+from repro.core.rounds import ParticipationSchedule
+
+D_FUSION = 32
+N_CLIENTS = 4
+BATCH = 4
+
+
+def _tiny_clients(n=N_CLIENTS, d=D_FUSION, samples=64, seed=0):
+    """Linear toy vendors (as in test_rounds): base is an elementwise
+    gain, so d_fusion is satisfied with near-zero compute."""
+    rng = np.random.default_rng(seed)
+    clients = []
+    for k in range(n):
+        x = rng.normal(size=(samples, d)).astype(np.float32)
+        y = rng.integers(0, 10, size=samples).astype(np.int32)
+        params = {
+            "base": jnp.ones((d,)) * (1.0 + 0.1 * k),
+            "modular": jnp.asarray(
+                rng.normal(size=(d, 10)).astype(np.float32) * 0.05),
+        }
+        clients.append(Client(
+            cid=k, params=params,
+            base_apply=lambda p, x: x * p,
+            modular_apply=lambda m, z: z @ m,
+            data_x=x, data_y=y,
+        ))
+    return clients
+
+
+def _leaves_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------------ policy
+
+
+def test_parse_broadcast():
+    assert parse_broadcast(None) == "full"
+    assert parse_broadcast("full") == "full"
+    assert parse_broadcast("delta") == "delta"
+    with pytest.raises(ValueError, match="unknown broadcast"):
+        parse_broadcast("gzip")
+    with pytest.raises(ValueError, match="unknown broadcast"):
+        # Surfaces at trainer construction, through the plane.
+        IFLTrainer(_tiny_clients(), RunConfig(broadcast="multicast"))
+    with pytest.raises(ValueError, match="unknown broadcast"):
+        ifl_round_bytes(4, BATCH, D_FUSION, broadcast="gzip")
+
+
+# --------------------------------------------------- delta ledger parity
+
+SCHEDULES = ["full", "k2", "bern0.5", "straggle(0.5,2)"]
+CODECS = ["fp32", "int8_row", "ef(int4)", "sketch"]
+
+
+@pytest.mark.parametrize("schedule", SCHEDULES)
+@pytest.mark.parametrize("codec", CODECS)
+def test_delta_ledger_parity_under_schedule(schedule, codec):
+    """EXACT analytic↔ledger parity under delta broadcast, every round,
+    for every participation schedule × codec: uplink is unchanged (K
+    fresh payloads), downlink is the shipped-entry count E times
+    (entry + slot-index sidecar) — E rides in the round metrics."""
+    cfg = RunConfig(n_clients=N_CLIENTS, tau=1, batch_size=BATCH,
+                    d_fusion=D_FUSION, codec=codec,
+                    participation=schedule, broadcast="delta")
+    tr = IFLTrainer(_tiny_clients(), cfg, seed=11)
+    full_cfg = RunConfig(n_clients=N_CLIENTS, tau=1, batch_size=BATCH,
+                         d_fusion=D_FUSION, codec=codec,
+                         participation=schedule)
+    tr_full = IFLTrainer(_tiny_clients(), full_cfg, seed=11)
+    for r in range(6):
+        m = tr.run_round()
+        m_full = tr_full.run_round()
+        k = len(m["participants"])
+        exp = ifl_round_bytes(
+            N_CLIENTS, BATCH, D_FUSION, codec=codec,
+            participating=k, broadcast_entries=m["cache_size"],
+            broadcast="delta", delta_entries=m["shipped_entries"],
+        )
+        got = tr.ledger.per_round[r]
+        assert got["up"] == exp["up"], (r, got, exp)
+        assert got["down"] == exp["down"], (r, got, exp)
+        # Same seed => same schedule draws; uplink identical to full.
+        assert m["participants"] == m_full["participants"]
+        assert got["up"] == tr_full.ledger.per_round[r]["up"]
+        # Steady state at full participation: E == K exactly (the
+        # acceptance formula K*(payload) + sidecar).
+        if schedule == "full" and r > 0:
+            assert m["shipped_entries"] == k
+    # Delta never ships more than full unicast pays for.
+    assert tr.ledger.downlink <= tr_full.ledger.downlink
+
+
+def test_delta_steady_state_matches_acceptance_formula():
+    """Full participation, round r>0: per-round downlink == K * (encoded
+    payload + labels) + K * sidecar — the issue's acceptance expression
+    — for every registered codec family."""
+    for codec in ["fp32", "bf16", "int8", "int8_row", "int4", "topk",
+                  "sketch", "ef(int4)", "ef(topk0.25)"]:
+        cfg = RunConfig(n_clients=N_CLIENTS, tau=0, batch_size=BATCH,
+                        d_fusion=D_FUSION, codec=codec, broadcast="delta")
+        tr = IFLTrainer(_tiny_clients(), cfg, seed=0)
+        tr.run_round()
+        m = tr.run_round()
+        k = N_CLIENTS
+        entry = ifl_round_bytes(1, BATCH, D_FUSION, codec=codec,
+                                participating=1, broadcast_entries=0)["up"]
+        assert tr.ledger.per_round[1]["down"] == \
+            k * entry + k * DELTA_SIDECAR_BYTES, codec
+        assert m["shipped_entries"] == k
+
+
+def test_delta_empty_round_ships_nothing():
+    class Nobody(ParticipationSchedule):
+        name = "nobody"
+
+        def mask(self, round_idx, n, rng):
+            return np.zeros(n, bool)
+
+    cfg = RunConfig(n_clients=2, tau=1, batch_size=BATCH,
+                    d_fusion=D_FUSION, participation=Nobody(),
+                    broadcast="delta")
+    tr = IFLTrainer(_tiny_clients(n=2), cfg, seed=0)
+    m = tr.run_round()
+    assert m["shipped_entries"] == 0
+    assert tr.ledger.per_round[0] == {"up": 0, "down": 0}
+
+
+def test_delta_rejoin_ships_catch_up_entries():
+    """A client that missed rounds has a stale mirror: the round it
+    rejoins, the shipped set includes the entries it missed (catch-up),
+    and afterwards its mirror equals the server's valid cache — the
+    construction that makes delta == full training exact."""
+
+    class Absent1(ParticipationSchedule):
+        """Round 0: everyone. Rounds 1-2: all but slot 1. Round 3: all."""
+
+        name = "absent1"
+
+        def mask(self, round_idx, n, rng):
+            m = np.ones(n, bool)
+            if round_idx in (1, 2):
+                m[1] = False
+            return m
+
+    cfg = RunConfig(n_clients=3, tau=0, batch_size=BATCH,
+                    d_fusion=D_FUSION, participation=Absent1(),
+                    broadcast="delta")
+    tr = IFLTrainer(_tiny_clients(n=3), cfg, seed=0)
+    ship = [tr.run_round()["shipped_entries"] for _ in range(4)]
+    # r0: 3 fresh. r1/r2: 2 fresh only (slot 1 offline; its stale entry
+    # is already mirrored by the others). r3: slot 1 rejoins, but the
+    # other slots re-upload fresh this round, so the 3 fresh entries
+    # already cover its catch-up — no extra shipping.
+    assert ship == [3, 2, 2, 3]
+    # The invariant behind delta == full: after every sync, each
+    # participant's mirror equals the server's valid cache.
+    for p in range(3):
+        assert tr.exchange.mirrors.versions[p] == {
+            s: e.round_idx
+            for s, e in tr.engine.cache.valid_entries(tr.engine.round_idx)
+        }
+
+
+def test_delta_rejoin_catch_up_exceeds_fresh_set():
+    """Force a genuine catch-up: the rejoining client needs an entry
+    that did NOT refresh this round, so E > K_fresh-entries-only."""
+
+    class Trace(ParticipationSchedule):
+        """r0: all. r1: slots {0,1} (2 uploads). r2: slot 2 rejoins with
+        slot 0; slot 1 absent. Slot 2's mirror misses slot 1's round-1
+        payload -> it must ship as catch-up although it is not fresh."""
+
+        name = "trace"
+
+        def mask(self, round_idx, n, rng):
+            rows = {0: [1, 1, 1], 1: [1, 1, 0], 2: [1, 0, 1]}
+            m = np.array(rows.get(round_idx, [1, 1, 1]), bool)
+            return m
+
+    cfg = RunConfig(n_clients=3, tau=0, batch_size=BATCH,
+                    d_fusion=D_FUSION, participation=Trace(),
+                    broadcast="delta")
+    tr = IFLTrainer(_tiny_clients(n=3), cfg, seed=0)
+    ships = [tr.run_round() for _ in range(3)]
+    assert [m["shipped_entries"] for m in ships] == [3, 2, 3]
+    # Round 2: fresh = {0, 2}; catch-up = slot 1's round-1 entry.
+    m2 = ships[2]
+    assert len(m2["participants"]) == 2 and m2["shipped_entries"] == 3
+    exp = ifl_round_bytes(3, BATCH, D_FUSION, participating=2,
+                          broadcast="delta", delta_entries=3)
+    assert tr.ledger.per_round[2] == exp
+
+
+def test_delta_k1_eager_spmd_accounting_agree():
+    """Regression: K=1 rounds must not re-ship the sole fresh entry to
+    its own producer, on EITHER backend — the SPMD host accounting used
+    to skip note_upload and overcount exactly there. Feed the SPMD
+    plane the eager trainer's participant trace; the ledgers must agree
+    round for round."""
+    from repro.core import SPMDFusionExchange
+
+    cfg = RunConfig(n_clients=2, tau=0, batch_size=BATCH,
+                    d_fusion=D_FUSION, participation="k1",
+                    broadcast="delta")
+    tr = IFLTrainer(_tiny_clients(n=2), cfg, seed=2)
+    ex = SPMDFusionExchange("fp32", None, n_clients=2, broadcast="delta")
+    entry = ifl_round_bytes(1, BATCH, D_FUSION, participating=1,
+                            broadcast_entries=0)["up"]
+    for r in range(6):
+        m = tr.run_round()
+        valid, shipped = ex.account_round(m["participants"], r, entry)
+        ex.ledger.end_round()
+        assert valid == m["cache_size"]
+        assert shipped == m["shipped_entries"], r
+        assert ex.ledger.per_round[r] == tr.ledger.per_round[r], r
+    # And the K=1 base case explicitly: a repeat participant with a
+    # current mirror ships nothing at all.
+    ex2 = SPMDFusionExchange("fp32", None, n_clients=2, broadcast="delta")
+    assert ex2.account_round([0], 0, entry) == (1, 0)  # own entry only
+    assert ex2.account_round([0], 1, entry) == (1, 0)  # nothing new
+    assert ex2.account_round([1], 2, entry) == (2, 1)  # needs slot 0's
+
+
+def test_expected_delta_entries_matches_measured():
+    """The dry-run's analytic mean shipped-entry count: exactly N at
+    full participation, strictly above the K-fresh best case under
+    partial schedules (rejoin catch-up), and — for a deterministic
+    schedule — EQUAL to a real trainer's measured mean."""
+    from repro.core.exchange import expected_delta_entries
+    from repro.core.rounds import parse_participation
+
+    n, R = 4, 8
+    assert expected_delta_entries(parse_participation("full"), n) == n
+    k2 = expected_delta_entries(parse_participation("k2"), n)
+    assert 2.0 < k2 <= n  # catch-up makes it > K
+    sched = "straggle(0.5,2)"
+    exp = expected_delta_entries(parse_participation(sched), n, rounds=R)
+    cfg = RunConfig(n_clients=n, tau=0, batch_size=BATCH,
+                    d_fusion=D_FUSION, participation=sched,
+                    broadcast="delta")
+    tr = IFLTrainer(_tiny_clients(), cfg, seed=0)
+    shipped = [tr.run_round()["shipped_entries"] for _ in range(R)]
+    assert exp == sum(shipped) / R
+
+
+# --------------------------------------------- delta == full convergence
+
+
+def test_delta_equals_full_training_bitwise():
+    """The convergence smoke: delta and full broadcast produce the SAME
+    decoded cache state by construction, hence bitwise-identical params
+    and identical accuracy — only the downlink bytes differ."""
+    accs = {}
+    params = {}
+    ex = np.random.default_rng(3).normal(
+        size=(64, D_FUSION)).astype(np.float32)
+    ey = np.random.default_rng(4).integers(
+        0, 10, size=64).astype(np.int32)
+    down = {}
+    for policy in ("full", "delta"):
+        cfg = RunConfig(n_clients=N_CLIENTS, tau=2, batch_size=BATCH,
+                        d_fusion=D_FUSION, codec="ef(int4)",
+                        participation="k2", broadcast=policy)
+        tr = IFLTrainer(_tiny_clients(), cfg, seed=7)
+        for _ in range(8):
+            tr.run_round()
+        accs[policy] = tr.evaluate(ex, ey)
+        params[policy] = [c.params for c in tr.clients]
+        down[policy] = tr.ledger.downlink
+    assert accs["delta"] == accs["full"]
+    _leaves_equal(params["delta"], params["full"])
+    assert down["delta"] < down["full"]
+
+
+# ------------------------------------------- PR-4 fixture bit-parity
+
+_FIXTURES = os.path.join(os.path.dirname(__file__), "..",
+                         "results", "paper")
+
+_PR4_CASES = [
+    ("ifl", "full", "fp32"),
+    ("ifl", "k2", "fp32"),
+    ("ifl", "full", "ef(int4)"),
+    ("fsl", "full", "fp32"),
+    ("fsl", "k2", "fp32"),
+    ("fl1", "full", "fp32"),
+    ("fl1", "k2", "fp32"),
+    ("fl2", "full", "fp32"),
+    ("fl2", "k2", "fp32"),
+]
+
+
+def _legacy_name(scheme, participation, codec):
+    tag = f"{scheme}_r4_n800_tau2_s0_lr0.05"
+    if codec != "fp32":
+        tag += f"_c{codec}"
+    if participation != "full":
+        tag += f"_p{participation}"
+    return tag + ".json"
+
+
+@pytest.mark.parametrize("scheme,participation,codec", _PR4_CASES)
+def test_run_experiment_reproduces_pr4_fixtures(scheme, participation,
+                                                codec):
+    """THE refactor acceptance: under broadcast='full' (the default —
+    note the spec hash is unchanged, so these fixtures stay
+    addressable), a live run_experiment reproduces the tracked PR-4
+    fixture records bit for bit on every scheme × schedule × ef(int4)
+    smoke combination."""
+    from repro.api import DataSpec, ExperimentSpec, run_experiment
+
+    path = os.path.join(_FIXTURES, _legacy_name(scheme, participation,
+                                                codec))
+    with open(path) as f:
+        fixture = json.load(f)
+    spec = ExperimentSpec(scheme=scheme, rounds=4, tau=2, eval_every=1,
+                          participation=participation, codec=codec,
+                          data=DataSpec(n_train=800, n_test=200))
+    res = run_experiment(spec)  # no cache_dir: always a live run
+    assert res.records == fixture["records"]
+
+
+# ------------------------------------- cache snapshot / restore (bitwise)
+
+
+@pytest.mark.parametrize("broadcast", ["full", "delta"])
+def test_snapshot_restore_covers_mid_staleness_cache(tmp_path, broadcast):
+    """Snapshot at a point where the cache holds MID-STALENESS entries
+    (slot 3 uploaded two rounds ago under straggle(0.25,4) with
+    max_staleness=2): the restored trainer replays the continuation bit
+    for bit — cache contents, ages, downlink bytes, delta mirrors and
+    all. A cold-started cache would broadcast fewer entries and diverge
+    immediately."""
+    from repro.api import load_trainer, save_trainer
+
+    def build():
+        cfg = RunConfig(n_clients=4, tau=1, batch_size=BATCH,
+                        d_fusion=D_FUSION, codec="ef(int8_row)",
+                        participation="straggle(0.25,4)",
+                        max_staleness=2, broadcast=broadcast)
+        return IFLTrainer(_tiny_clients(), cfg, seed=5)
+
+    tr = build()
+    for _ in range(5):  # slot 3 uploads at t=3 -> age 1 at snapshot
+        tr.run_round()
+    stale = tr.engine.cache.staleness(tr.engine.round_idx)
+    assert max(stale.values()) >= 1, stale  # genuinely mid-staleness
+    path = str(tmp_path / "ck")
+    save_trainer(path, tr)
+    cont = [tr.run_round() for _ in range(4)]
+
+    tr2 = load_trainer(path, build())
+    # The cache came back: same slots, same ages.
+    assert tr2.engine.cache.staleness(tr2.engine.round_idx) == stale
+    replay = [tr2.run_round() for _ in range(4)]
+    for a, b in zip(cont, replay):
+        assert a["base_loss"] == b["base_loss"]
+        assert a["mod_loss"] == b["mod_loss"]
+        assert a["participants"] == b["participants"]
+        assert a["cache_size"] == b["cache_size"]
+        assert a["uplink_mb"] == b["uplink_mb"]
+        assert a["downlink_mb"] == b["downlink_mb"]  # cache+mirrors back
+        if broadcast == "delta":
+            assert a["shipped_entries"] == b["shipped_entries"]
+    _leaves_equal([c.params for c in tr.clients],
+                  [c.params for c in tr2.clients])
+    _leaves_equal(tr.snapshot()[0], tr2.snapshot()[0])
+
+
+def test_restored_cache_entries_bitwise(tmp_path):
+    """The restored entries decode to exactly the snapshot's z_hat/y
+    (not just matching metadata)."""
+    from repro.api import load_trainer, save_trainer
+
+    def build():
+        cfg = RunConfig(n_clients=3, tau=0, batch_size=BATCH,
+                        d_fusion=D_FUSION, codec="int8_row",
+                        participation="k2")
+        return IFLTrainer(_tiny_clients(n=3), cfg, seed=9)
+
+    tr = build()
+    for _ in range(3):
+        tr.run_round()
+    before = {s: (np.asarray(e.z_hat), np.asarray(e.y), e.round_idx)
+              for s, e in tr.engine.cache.valid_entries(3)}
+    assert before  # something to restore
+    path = str(tmp_path / "ck")
+    save_trainer(path, tr)
+    tr2 = load_trainer(path, build())
+    after = {s: (np.asarray(e.z_hat), np.asarray(e.y), e.round_idx)
+             for s, e in tr2.engine.cache.valid_entries(3)}
+    assert before.keys() == after.keys()
+    for s in before:
+        np.testing.assert_array_equal(before[s][0], after[s][0])
+        np.testing.assert_array_equal(before[s][1], after[s][1])
+        assert before[s][2] == after[s][2]
+
+
+# ------------------------------------------------------- SPMD delta parity
+
+
+@pytest.mark.parametrize("codec", ["int8_row", "ef(int4)"])
+def test_spmd_adapter_delta_ledger_parity(codec):
+    """The SPMD front-door adapter under broadcast='delta': per-round
+    ledger == ifl_round_bytes(broadcast='delta', delta_entries=E) with
+    the plane's host accounting, E and the valid-entry count riding in
+    the report metrics — and the host cache_valid replay agrees with the
+    jitted program's (same mask stream by construction)."""
+    from repro.api import DataSpec, ExperimentSpec, run_experiment
+
+    B, S, dF = 2, 32, 32
+    spec = ExperimentSpec(
+        scheme="ifl_spmd", rounds=4, tau=1, batch_size=B, d_fusion=dF,
+        lr=0.05, eval_every=0, seed=0, participation="k2", codec=codec,
+        broadcast="delta",
+        data=DataSpec(dataset="synth_tokens", n_test=8))
+    res = run_experiment(spec, keep_trainer=True)
+    tr = res.trainer
+    for r, rep in enumerate(tr.engine.history):
+        exp = ifl_round_bytes(
+            4, B * S, dF, codec=codec,
+            participating=len(rep["participants"]),
+            broadcast_entries=rep["cache_size"],
+            broadcast="delta", delta_entries=rep["shipped_entries"])
+        assert tr.ledger.per_round[r] == exp, (r, exp)
+    # Identical training to the full-broadcast run, cheaper downlink.
+    full = run_experiment(spec.replace(broadcast="full"),
+                          keep_trainer=True)
+    _leaves_equal(tr.params, full.trainer.params)
+    assert res.downlink_mb < full.downlink_mb
+    assert res.uplink_mb == full.uplink_mb
+    # Host staleness replay == in-program cache_valid metric.
+    for a, b in zip(tr.engine.history, full.trainer.engine.history):
+        assert a["cache_size"] == b["cache_size"]
+
+
+def test_spmd_snapshot_restores_delta_mirrors(tmp_path):
+    """SPMD resume under delta: the plane's host state (last-upload
+    replica + mirrors) checkpoints, so the replayed rounds ledger the
+    same delta bytes."""
+    from repro.api import (DataSpec, ExperimentSpec, build_trainer,
+                           load_trainer, save_trainer)
+
+    spec = ExperimentSpec(
+        scheme="ifl_spmd", rounds=8, tau=1, batch_size=2, d_fusion=32,
+        lr=0.05, eval_every=0, seed=1, participation="k2",
+        codec="int8_row", broadcast="delta",
+        data=DataSpec(dataset="synth_tokens", n_test=8))
+    tr = build_trainer(spec)
+    for _ in range(2):
+        tr.run_round()
+    path = str(tmp_path / "ck")
+    save_trainer(path, tr)
+    cont = [tr.run_round() for _ in range(2)]
+    tr2 = load_trainer(path, build_trainer(spec))
+    replay = [tr2.run_round() for _ in range(2)]
+    for a, b in zip(cont, replay):
+        assert a["participants"] == b["participants"]
+        assert a["shipped_entries"] == b["shipped_entries"]
+        assert a["uplink_mb"] == b["uplink_mb"]
+        assert a["downlink_mb"] == b["downlink_mb"]
+        assert a["base_loss"] == b["base_loss"]
+
+
+def test_legacy_tag_cache_never_serves_a_delta_spec(tmp_path):
+    """Regression: legacy filename tags predate the broadcast axis, so
+    a delta spec must NOT be served the (full-broadcast) legacy fixture
+    its tag would collide with — while the full spec still reads it."""
+    from repro.api import DataSpec, ExperimentSpec, run_experiment
+
+    spec = ExperimentSpec(rounds=1, tau=1, batch_size=8, lr=0.05,
+                          eval_every=0, broadcast="delta",
+                          data=DataSpec(n_train=256, n_test=64))
+    legacy = tmp_path / "ifl_r1_n256_tau1_s0_lr0.05.json"
+    legacy.write_text(json.dumps(
+        {"scheme": "ifl", "records": [{"round": 0, "acc_mean": -1.0}]}))
+    res = run_experiment(spec, cache_dir=str(tmp_path))
+    assert res.records[0]["acc_mean"] != -1.0  # a live run, not the fixture
+    full = run_experiment(spec.replace(broadcast="full"),
+                          cache_dir=str(tmp_path))
+    assert full.records[0]["acc_mean"] == -1.0  # legacy path still serves
+
+
+def test_spmd_legacy_aux_restore_rebuilds_age_replica():
+    """Regression: restoring a pre-exchange-plane SPMD checkpoint (aux
+    without the 'exchange' key) brings the carried cache back warm —
+    the host accounting must rebuild its age replica from the restored
+    ages rather than under-ledger the broadcasts the program runs."""
+    from repro.api import DataSpec, ExperimentSpec, build_trainer
+
+    spec = ExperimentSpec(
+        scheme="ifl_spmd", rounds=8, tau=1, batch_size=2, d_fusion=32,
+        lr=0.05, eval_every=0, seed=3, participation="k2",
+        data=DataSpec(dataset="synth_tokens", n_test=8))
+    tr = build_trainer(spec)
+    for _ in range(3):
+        tr.run_round()
+    tree, aux = tr.snapshot()
+    assert "exchange" in aux
+    legacy_aux = {k: v for k, v in aux.items() if k != "exchange"}
+    tr2 = build_trainer(spec)
+    tr2.restore(tree, legacy_aux)
+    assert tr2.exchange._last_upload == tr.exchange._last_upload
+    a, b = tr.run_round(), tr2.run_round()
+    assert a["cache_size"] == b["cache_size"]
+    assert a["downlink_mb"] == b["downlink_mb"]
+
+
+# --------------------------------------------------- spec hash stability
+
+
+def test_broadcast_axis_preserves_default_spec_hash():
+    """broadcast='full' is elided from the canonical dict, so every
+    pre-existing spec hash — and the tracked results/paper fixtures —
+    stays addressable; only non-default values hash as new experiments."""
+    from repro.api import ExperimentSpec
+
+    base = ExperimentSpec()
+    assert base.spec_hash() == "07ebadbcf790"  # the PR-4 pin, unmoved
+    assert "broadcast" not in base.to_dict()
+    delta = base.replace(broadcast="delta")
+    assert delta.to_dict()["broadcast"] == "delta"
+    assert delta.spec_hash() != base.spec_hash()
+    # Round trips, both through dicts missing and carrying the field.
+    assert ExperimentSpec.from_dict(base.to_dict()) == base
+    assert ExperimentSpec.from_dict(delta.to_dict()) == delta
+    assert base.run_config().broadcast == "full"
+    assert delta.run_config().broadcast == "delta"

@@ -177,14 +177,14 @@ def test_ef_spmd_residual_decays_topk(setup):
     assert float(jnp.linalg.norm(ef)) > 0.0  # topk really drops mass
 
 
-def _eager_codec_rig(codec):
+def _eager_codec_rig(codec, broadcast="full"):
     """The eager trainer's exact jitted encode/decode machinery, as in
     test_ef_round_state_eager_spmd_parity."""
     from repro.config import RunConfig
     from repro.core import Client, IFLTrainer
 
     eager_cfg = RunConfig(n_clients=N, batch_size=B * S,
-                          d_fusion=32, codec=codec)
+                          d_fusion=32, codec=codec, broadcast=broadcast)
     dummy = np.zeros((4, 28, 28, 1), np.float32)
     clients = [Client(cid=k, params={},
                       base_apply=lambda p, x: x,
@@ -194,23 +194,29 @@ def _eager_codec_rig(codec):
     return IFLTrainer(clients, eager_cfg, seed=0)
 
 
+@pytest.mark.parametrize("broadcast", ["full", "delta"])
 @pytest.mark.parametrize("codec", ["int8_row", "ef(int8_row)"])
-def test_masked_round_eager_spmd_parity(setup, codec):
+def test_masked_round_eager_spmd_parity(setup, codec, broadcast):
     """Bitwise eager↔SPMD parity for a PARTIAL round, one stateless and
-    one ef(...) codec: round 1 runs with everyone up (fills the payload
+    one ef(...) codec, under BOTH broadcast policies (delta changes the
+    ledger, never the decoded training signal — asserted here at the
+    bit level): round 1 runs with everyone up (fills the payload
     cache), round 2 masks client 1 out. The SPMD program's decoded
     z_hat must equal — bit for bit — what the eager engine's jitted
     encode/decode produces for the participant's fresh z plus the
     cached round-1 payload for the absent client, the absent client's
     EF residual must stay frozen, and its params must not move."""
+    from repro.core.exchange import SPMDFusionExchange
     from repro.core.ifl_spmd import init_ef_state, init_payload_cache
 
     cfg, mesh, params, opt_state, _, batch = setup
     has_state = codec.startswith("ef(")
+    exchange = SPMDFusionExchange(codec, mesh, n_clients=N,
+                                  max_staleness=2, broadcast=broadcast)
     step = jax.jit(make_ifl_round_step(
         cfg, mesh, n_clients=N, tau=TAU, lr_base=1e-2, lr_modular=1e-2,
-        codec=codec, debug_return_zhat=True,
-        partial_participation=True, max_staleness=2,
+        debug_return_zhat=True,
+        partial_participation=True, exchange=exchange,
     ))
     cache = init_payload_cache(codec, (N, B, S, cfg.d_fusion), (N, B, S))
     full = jnp.ones((N,), bool)
@@ -229,7 +235,7 @@ def test_masked_round_eager_spmd_parity(setup, codec):
     np.testing.assert_array_equal(np.asarray(c2["age"]), [0, 1])
 
     # Eager replay on the SPMD program's own z tensors.
-    tr = _eager_codec_rig(codec)
+    tr = _eager_codec_rig(codec, broadcast)
     z1 = np.asarray(m1["z"])
     z2 = np.asarray(m2["z"])
     dF = cfg.d_fusion
