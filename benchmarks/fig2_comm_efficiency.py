@@ -20,6 +20,12 @@ N pairs while the ledger only pays for the K fresh uploads.
 delta-shipping policy (repro.core.exchange) — identical accuracy curve
 (same decoded cache state by construction), so the figure's
 total-MB variant shows the downlink saving directly.
+``--mode async`` swaps the IFL curves onto the event-driven engine
+(repro.core.rounds.AsyncRoundEngine): vendors upload on ``--trace``
+arrival clocks, the server fuses every ``--tick`` simulated seconds.
+FL/FSL keep the barrier — they have no fusion cache to fuse from, which
+is the comparison the figure then makes.
+
 ``--smoke`` shrinks data/rounds to a seconds-long CI check of the full
 axis grid. Prints CSV: scheme,round,uplink_mb,accuracy.
 """
@@ -27,13 +33,18 @@ axis grid. Prints CSV: scheme,round,uplink_mb,accuracy.
 from __future__ import annotations
 
 import argparse
+import json
+import os
 
 from repro.api import DataSpec, ExperimentSpec, PAPER_RESULTS, run_experiment
 
 
 def run(rounds: int = 60, force: bool = False, quiet: bool = False,
         codec: str = "fp32", participation: str = "full",
-        smoke: bool = False, broadcast: str = "full"):
+        smoke: bool = False, broadcast: str = "full", mode: str = "sync",
+        trace: str = "", tick: float = 1.0):
+    if mode == "async" and not trace:
+        trace = "pareto(1.2,0.5)"
     rows = []
     schemes = ["ifl", "fsl", "fl1", "fl2"]
     if codec != "fp32":
@@ -46,12 +57,19 @@ def run(rounds: int = 60, force: bool = False, quiet: bool = False,
     )
     for scheme in schemes:
         base, _, cdc = scheme.partition("+")
-        # The broadcast axis only exists for fusion downlinks; keeping
-        # FL/FSL at 'full' keeps their spec hashes (and cached curves)
-        # untouched.
+        # The broadcast/mode axes only exist for fusion downlinks /
+        # the fusion cache; keeping FL/FSL at the sync-full defaults
+        # keeps their spec hashes (and cached curves) untouched.
+        ifl = base.startswith("ifl")
         spec = base_spec.replace(
             scheme=base, codec=cdc or "fp32",
-            broadcast=broadcast if base.startswith("ifl") else "full",
+            broadcast=broadcast if ifl else "full",
+            mode=mode if ifl else "sync",
+            trace=trace if (ifl and mode == "async") else "",
+            tick=tick if (ifl and mode == "async") else 1.0,
+            # Async draws participants from the trace, not a schedule.
+            participation=("full" if (ifl and mode == "async")
+                           else participation),
         )
         out = run_experiment(spec, cache_dir=PAPER_RESULTS, force=force)
         for rec in out.records:
@@ -103,8 +121,20 @@ if __name__ == "__main__":
                     help="downlink policy for the IFL curves "
                          "(repro.core.exchange): full cache per "
                          "participant, or delta mirror-sync")
+    ap.add_argument("--mode", default="sync", choices=["sync", "async"],
+                    help="round clocking for the IFL curves "
+                         "(repro.core.rounds): sync barrier, or async "
+                         "arrival-driven server ticks")
+    ap.add_argument("--trace", default="",
+                    help="async arrival trace, e.g. pareto(1.2,0.5) "
+                         "(default under --mode async)")
+    ap.add_argument("--tick", type=float, default=1.0,
+                    help="async server fuse period in simulated seconds")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-long CI mode: tiny data, few rounds")
+    ap.add_argument("--out-json", default="",
+                    help="also write the rows + headline to this JSON "
+                         "(the nightly workflow's BENCH_* artifact)")
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
     if args.smoke:
@@ -112,7 +142,8 @@ if __name__ == "__main__":
         args.force = True  # never serve a smoke run from the full cache
     rows = run(args.rounds, args.force, codec=args.codec,
                participation=args.participation, smoke=args.smoke,
-               broadcast=args.broadcast)
+               broadcast=args.broadcast, mode=args.mode, trace=args.trace,
+               tick=args.tick)
     budget, hl = headline(rows)
     print(f"# at IFL-90% uplink budget {budget:.2f} MB: {hl}")
     if args.codec != "fp32":
@@ -120,3 +151,17 @@ if __name__ == "__main__":
         print(f"# ifl+{args.codec} @ round {last}: {ratio:.2f}x lower "
               f"cumulative uplink than fp32 IFL, "
               f"final acc delta {dacc*100:+.2f} pts")
+    if args.out_json:
+        os.makedirs(os.path.dirname(args.out_json) or ".", exist_ok=True)
+        with open(args.out_json, "w") as f:
+            json.dump({
+                "axes": {"codec": args.codec, "broadcast": args.broadcast,
+                         "mode": args.mode, "trace": args.trace,
+                         "tick": args.tick,
+                         "participation": args.participation,
+                         "rounds": args.rounds, "smoke": args.smoke},
+                "rows": [list(r) for r in rows],
+                "ifl90_budget_mb": budget,
+                "acc_at_budget": hl,
+            }, f, indent=1)
+        print(f"# wrote {args.out_json}")

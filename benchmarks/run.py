@@ -42,6 +42,14 @@ def main() -> None:
                          "participant, or delta mirror-sync — the "
                          "spec-hash cache keys the variant "
                          "automatically")
+    ap.add_argument("--mode", default="sync", choices=["sync", "async"],
+                    help="round clocking for the IFL Fig.-2 curves "
+                         "(repro.core.rounds): sync barrier or async "
+                         "arrival-driven ticks")
+    ap.add_argument("--trace", default="",
+                    help="async arrival trace, e.g. pareto(1.2,0.5)")
+    ap.add_argument("--tick", type=float, default=1.0,
+                    help="async server fuse period in simulated seconds")
     args = ap.parse_args()
     t0 = time.time()
 
@@ -61,7 +69,9 @@ def main() -> None:
 
         rows = fig2_comm_efficiency.run(args.rounds, codec=args.codec,
                                         participation=args.participation,
-                                        broadcast=args.broadcast)
+                                        broadcast=args.broadcast,
+                                        mode=args.mode, trace=args.trace,
+                                        tick=args.tick)
         budget, hl = fig2_comm_efficiency.headline(rows)
         print(f"# at IFL-90% uplink budget {budget:.2f} MB: "
               + ", ".join(f"{k}={v:.3f}" for k, v in hl.items()))

@@ -33,6 +33,13 @@ ledger pays only for the fresh uploads.
 mirror the server cache, so the server ships each entry at most once
 per round — identical training signal, far fewer downlink bytes).
 
+``--mode async`` retires the round barrier: vendors upload on their own
+clocks drawn from ``--trace`` (periodic(<T>) | poisson(<rate>) |
+pareto(<alpha>,<scale>) | replay:<path> — repro.core.rounds), and the
+server fuses whatever arrived every ``--tick`` simulated seconds on the
+staleness-bounded cache. The run reports simulated wall-clock and
+uploads/sec absorbed alongside the ledger totals.
+
 ``--scheme`` swaps the whole algorithm (anything in
 ``repro.api.available_schemes()``: ifl | fsl | fl1 | fl2 | ifl_spmd) —
 the point of the registry is that baselines are a flag, not a fork.
@@ -53,16 +60,22 @@ from repro.core import ifl_round_bytes
 
 def main(scheme: str = "ifl", codec: str = "fp32",
          participation: str = "full", max_staleness=None, rounds: int = 20,
-         broadcast: str = "full"):
+         broadcast: str = "full", mode: str = "sync", trace: str = "",
+         tick: float = 1.0):
+    if mode == "async" and not trace:
+        trace = "pareto(1.2,0.5)"  # heavy-tail default: infinite-mean gaps
     data_name = ("synthetic LM tokens" if scheme == "ifl_spmd"
                  else "synthetic KMNIST")
+    clock = (f"async trace {trace} tick {tick}" if mode == "async"
+             else f"participation {participation}")
     print(f"== {scheme} quickstart: 4 vendors, {data_name}, "
-          f"wire codec {codec}, participation {participation}, "
+          f"wire codec {codec}, {clock}, "
           f"broadcast {broadcast} ==")
     spmd = scheme == "ifl_spmd"
     spec = ExperimentSpec(
         scheme=scheme, rounds=rounds, tau=10, lr=0.05, batch_size=32,
         codec=codec, participation=participation, broadcast=broadcast,
+        mode=mode, trace=trace, tick=tick,
         max_staleness=max_staleness, eval_every=5, seed=0,
         # The SPMD demo runs the smoke LM: match its 32-dim fusion cut
         # (the spec's d_fusion is authoritative over the model config).
@@ -77,7 +90,8 @@ def main(scheme: str = "ifl", codec: str = "fp32",
         parts = report.participants
         extra = (f"base_loss {report['base_loss']:.3f}, "
                  if "base_loss" in report.metrics else "")
-        print(f"round {rec['round']:3d}: {extra}"
+        clock = (f"t={rec['sim_time']:.1f}s, " if "sim_time" in rec else "")
+        print(f"round {rec['round']:3d}: {clock}{extra}"
               f"uplink {rec['uplink_mb']:.2f} MB, "
               f"up {len(parts)}/{spec.fleet.n_clients} vendors "
               f"(cache {report.metrics.get('cache_size', '-')}), "
@@ -85,6 +99,16 @@ def main(scheme: str = "ifl", codec: str = "fp32",
 
     result = run_experiment(spec, keep_trainer=True, on_record=progress)
     trainer = result.trainer
+
+    if mode == "async":
+        eng = trainer.engine
+        print(f"\nasync summary: {eng.total_uploads} uploads "
+              f"({eng.total_arrivals} arrivals, coalesced per tick) "
+              f"absorbed over {eng.sim_time:.1f} simulated s "
+              f"= {eng.total_uploads / eng.sim_time:.2f} uploads/sec")
+        print(f"ledger totals: uplink {trainer.ledger.uplink_mb:.3f} MB, "
+              f"downlink {trainer.ledger.downlink_mb:.3f} MB, "
+              f"total {trainer.ledger.total_mb:.3f} MB")
 
     if hasattr(trainer, "accuracy_matrix"):
         print("\ncross-vendor composition matrix (eq. 11):")
@@ -142,7 +166,17 @@ if __name__ == "__main__":
                     help="downlink policy (repro.core.exchange): full "
                          "cache to every participant, or delta "
                          "mirror-sync (each entry ships once)")
+    ap.add_argument("--mode", default="sync", choices=["sync", "async"],
+                    help="round clocking: sync barrier, or async "
+                         "arrival-driven server ticks")
+    ap.add_argument("--trace", default="",
+                    help="async arrival trace (repro.core.rounds): "
+                         "periodic(<T>) | poisson(<rate>) | "
+                         "pareto(<alpha>,<scale>) | replay:<path> "
+                         "(default under --mode async: pareto(1.2,0.5))")
+    ap.add_argument("--tick", type=float, default=1.0,
+                    help="async server fuse period in simulated seconds")
     ap.add_argument("--rounds", type=int, default=20)
     args = ap.parse_args()
     main(args.scheme, args.codec, args.participation, args.max_staleness,
-         args.rounds, args.broadcast)
+         args.rounds, args.broadcast, args.mode, args.trace, args.tick)

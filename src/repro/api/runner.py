@@ -49,6 +49,12 @@ def _eval_record(trainer, data, report: RoundReport) -> Dict[str, Any]:
         "uplink_mb": trainer.ledger.uplink_mb,
         "total_mb": trainer.ledger.total_mb,
     }
+    # Async runs carry the event clock: simulated seconds at this tick
+    # and cumulative uploads/sec absorbed (the AsyncRoundEngine injects
+    # both into every report; sync reports have neither).
+    for key in ("sim_time", "uploads_per_sec"):
+        if key in report.metrics:
+            rec[key] = report.metrics[key]
     accs = trainer.evaluate(data.test_x, data.test_y)
     if isinstance(accs, (list, tuple)):
         rec["acc_mean"] = float(np.mean(accs))
@@ -105,11 +111,12 @@ def run_experiment(
                             f"{spec.scheme}_{spec.spec_hash()}.json")
         if os.path.exists(path):
             cached = RunResult.from_json(path)
-        elif spec.broadcast == "full":
-            # The legacy tags predate the broadcast axis (every legacy
-            # fixture is a full-broadcast run), so a non-default policy
-            # must never match one — a delta spec served the tracked
-            # full-broadcast file would silently report zero saving.
+        elif spec.broadcast == "full" and spec.mode == "sync":
+            # The legacy tags predate the broadcast and mode axes (every
+            # legacy fixture is a sync full-broadcast run), so a
+            # non-default policy must never match one — a delta or async
+            # spec served the tracked sync file would silently report
+            # the wrong bytes and clock.
             legacy = os.path.join(cache_dir, _legacy_tag(spec))
             if os.path.exists(legacy):
                 with open(legacy) as f:

@@ -131,9 +131,23 @@ def build_ifl(spec: ExperimentSpec, data: DataBundle) -> IFLTrainer:
                       seed=spec.seed)
 
 
+def _require_sync(spec: ExperimentSpec, scheme: str) -> None:
+    # FedAvg and split learning aggregate a *shared* block, which is
+    # only well-defined at a round barrier; the staleness-bounded
+    # fusion cache that makes async fusion sound (ISSUE 6) has no
+    # analogue there. Fail at build time, not mid-run.
+    if spec.mode != "sync":
+        raise ValueError(
+            f"scheme {scheme!r} only supports mode='sync' — async "
+            "arrival-driven rounds need the IFL fusion cache "
+            "(use scheme='ifl' or 'ifl_spmd')"
+        )
+
+
 @register_scheme("fsl", summary="federated split learning baseline "
                                 "(SplitFed-style shared server block)")
 def build_fsl(spec: ExperimentSpec, data: DataBundle) -> FSLTrainer:
+    _require_sync(spec, "fsl")
     clients = build_fleet(spec, data)
     server = init_client_model(jax.random.PRNGKey(999), 1)["modular"]
     _, server_apply = apply_fns(1)
@@ -142,6 +156,7 @@ def build_fsl(spec: ExperimentSpec, data: DataBundle) -> FSLTrainer:
 
 
 def _build_fl(spec: ExperimentSpec, data: DataBundle, arch: int) -> FLTrainer:
+    _require_sync(spec, f"fl{arch}")
     clients = build_fleet(spec, data, heterogeneous=False, arch=arch)
     return FLTrainer(clients, spec.run_config(), seed=spec.seed)
 

@@ -85,6 +85,14 @@ class ExperimentSpec:
     # (repro.core.exchange). Ignored by schemes without a fusion
     # downlink (FL/FSL).
     broadcast: str = "full"
+    # Round clocking: 'sync' is the paper's barriered loop; 'async'
+    # drives the engine from an ArrivalTrace (``trace``, e.g.
+    # 'pareto(1.2,0.5)' or 'replay:<path>') with a server fuse every
+    # ``tick`` simulated seconds (repro.core.rounds.AsyncRoundEngine).
+    # Only the IFL schemes support async — FedAvg/FSL need the barrier.
+    mode: str = "sync"
+    trace: str = ""
+    tick: float = 1.0
     eval_every: int = 5  # <=0: evaluate on the final round only
     seed: int = 0
     model: str = ""
@@ -95,7 +103,39 @@ class ExperimentSpec:
     # ``to_dict`` at their compat default: every pre-existing spec hash
     # (including the tracked results/paper fixtures) stays addressable,
     # and only a non-default value hashes as a new experiment.
-    _ELIDE_AT_DEFAULT = (("broadcast", "full"),)
+    _ELIDE_AT_DEFAULT = (
+        ("broadcast", "full"),
+        ("mode", "sync"),
+        ("trace", ""),
+        ("tick", 1.0),
+    )
+
+    def __post_init__(self):
+        if self.mode not in ("sync", "async"):
+            raise ValueError(
+                f"mode={self.mode!r}: expected 'sync' or 'async'"
+            )
+        if self.mode == "async":
+            if not self.trace:
+                raise ValueError(
+                    "mode='async' needs an arrival trace — e.g. "
+                    "trace='poisson(0.5)', 'pareto(1.2,0.5)', or "
+                    "'replay:<path>' (see repro.core.rounds.parse_trace)"
+                )
+            if self.participation != "full":
+                raise ValueError(
+                    "mode='async' draws participants from the arrival "
+                    "trace; participation schedules only apply to sync "
+                    f"mode (got participation={self.participation!r})"
+                )
+            if self.tick <= 0:
+                raise ValueError(f"tick={self.tick}: must be > 0")
+        elif self.trace:
+            raise ValueError(
+                f"trace={self.trace!r} set but mode='sync' — arrival "
+                "traces only drive async mode (use participation= for "
+                "sync schedules)"
+            )
 
     # ------------------------------------------------------- conversions
 
@@ -141,6 +181,9 @@ class ExperimentSpec:
             participation=self.participation,
             max_staleness=self.max_staleness,
             broadcast=self.broadcast,
+            mode=self.mode,
+            trace=self.trace,
+            tick=self.tick,
         )
 
     # ------------------------------------------------------------ hashing

@@ -45,7 +45,7 @@ from repro.core.ifl_spmd import (
     make_ifl_round_step,
 )
 from repro.core.report import RoundReport
-from repro.core.rounds import FullParticipation, RoundEngine
+from repro.core.rounds import AsyncRoundEngine, FullParticipation, RoundEngine
 from repro.data.synthetic import SyntheticLM
 from repro.models.transformer import base_forward, modular_forward
 
@@ -101,13 +101,25 @@ class SPMDIFLTrainer:
             spec.codec, self.mesh, n_clients=self.n_clients,
             max_staleness=spec.max_staleness, broadcast=spec.broadcast,
         )
-        self.engine = RoundEngine(
-            self.n_clients, spec.participation, seed=spec.seed,
-            exchange=self.exchange,
-        )
+        # spec.mode='async': one engine round == one server tick; the
+        # participant set is whoever's trace arrivals landed in the tick
+        # (coalesced), which the jitted step sees as an ordinary partial-
+        # participation mask — so the SPMD program itself is mode-blind.
+        if spec.mode == "async":
+            self.engine = AsyncRoundEngine(
+                self.n_clients, spec.trace, tick=spec.tick,
+                seed=spec.seed, exchange=self.exchange,
+            )
+        else:
+            self.engine = RoundEngine(
+                self.n_clients, spec.participation, seed=spec.seed,
+                exchange=self.exchange,
+            )
         self.ledger = self.engine.ledger
         self.codec = self.exchange.codec
-        self.partial = not isinstance(self.engine.schedule, FullParticipation)
+        self.partial = (spec.mode == "async" or
+                        not isinstance(self.engine.schedule,
+                                       FullParticipation))
 
         self.params, self.opt_state = init_ifl_state(
             jax.random.PRNGKey(spec.seed), self.model_cfg,

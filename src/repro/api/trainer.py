@@ -15,7 +15,10 @@ stores it: the *tree* is arrays only (flattened into the .npz), the
 *aux* is small JSON (round counter, rng bit-generator state, ledger
 totals — written into the manifest's ``extra``).  ``save_trainer`` /
 ``load_trainer`` wire the two together so any Trainer resumes
-bit-for-bit mid-run.
+bit-for-bit mid-run.  Async-mode trainers (spec.mode='async') ride
+their event clock in the same aux — the arrival-trace cursor and
+upload counters live under ``aux['async']`` — so an async run resumes
+on the exact same arrival stream, not a reseeded one.
 """
 
 from __future__ import annotations

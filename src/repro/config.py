@@ -307,6 +307,15 @@ class RunConfig:
     # ships each entry once — clients mirror the server cache, so the
     # decoded training signal is identical at a fraction of the bytes.
     broadcast: str = "full"
+    # Round clocking (repro.core.rounds). 'sync' is the paper's barriered
+    # round loop; 'async' drives the engine from an ArrivalTrace: clients
+    # upload on their own clocks, the server fuses whatever arrived each
+    # fixed ``tick`` of simulated time. Async requires ``trace`` (e.g.
+    # 'poisson(0.5)', 'pareto(1.2,0.5)', 'replay:<path>') and uses the
+    # trace — not ``participation`` — to decide who shows up.
+    mode: str = "sync"
+    trace: str = ""
+    tick: float = 1.0
 
 
 def __getattr__(name: str):

@@ -9,8 +9,10 @@ Submodules:
   exchange    — the exchange plane: ONE uplink/downlink wire pipeline
                 (codec + EF state + FusionCache + ledger + full/delta
                 broadcast policy) with an eager and an SPMD backend
-  rounds      — participation schedules (full/k-of-N/Bernoulli/straggler)
-                and the RoundEngine shared by all three eager trainers
+  rounds      — participation schedules (full/k-of-N/Bernoulli/straggler),
+                arrival traces (periodic/poisson/pareto/replayed logs),
+                and the sync RoundEngine / event-driven AsyncRoundEngine
+                shared by all trainers
   ifl         — the two-stage IFL algorithm (eager, heterogeneous clients)
   ifl_spmd    — IFL as a single SPMD train_step on the production mesh
   fl          — FedAvg baseline (paper's FL-1/FL-2)
@@ -33,14 +35,23 @@ from repro.core.exchange import (  # noqa: F401
 )
 from repro.core.report import RoundReport  # noqa: F401
 from repro.core.rounds import (  # noqa: F401
+    ArrivalTrace,
+    AsyncRoundEngine,
     BernoulliSchedule,
     FullParticipation,
     FusionCache,
+    ParetoTrace,
     ParticipationSchedule,
+    PeriodicTrace,
+    PoissonTrace,
+    ReplayTrace,
     RoundEngine,
     StragglerSchedule,
     UniformK,
+    expected_async_participants,
     parse_participation,
+    parse_trace,
+    simulate_sync_wall_clock,
 )
 from repro.core.codec import (  # noqa: F401
     Codec,

@@ -164,16 +164,28 @@ class FusionCache:
     def put(self, slot: int, *, payload, z_hat, y, round_idx: int) -> None:
         self._entries[slot] = CacheEntry(payload, z_hat, y, round_idx)
 
+    def prune(self, round_idx: int) -> List[int]:
+        """Evict entries older than ``max_staleness`` from server MEMORY
+        (payload + decoded arrays freed, not merely masked out of the
+        broadcast) and return the evicted slots.  The broadcast path
+        prunes as it reads (:meth:`valid_entries`); the round engine
+        also prunes at every ``end_round`` so a long event-driven run
+        with idle ticks cannot retain expired payloads just because no
+        broadcast consulted the cache."""
+        if self.max_staleness is None:
+            return []
+        expired = [
+            s for s, e in self._entries.items()
+            if round_idx - e.round_idx > self.max_staleness
+        ]
+        for s in expired:
+            del self._entries[s]
+        return expired
+
     def valid_entries(self, round_idx: int) -> List[Tuple[int, CacheEntry]]:
         """(slot, entry) pairs within the staleness bound, slot-ordered;
         expired entries are evicted as a side effect."""
-        if self.max_staleness is not None:
-            expired = [
-                s for s, e in self._entries.items()
-                if round_idx - e.round_idx > self.max_staleness
-            ]
-            for s in expired:
-                del self._entries[s]
+        self.prune(round_idx)
         return sorted(self._entries.items())
 
     def staleness(self, round_idx: int) -> Dict[int, int]:

@@ -54,7 +54,7 @@ import numpy as np
 from repro.config import RunConfig
 from repro.core.exchange import FusionExchange
 from repro.core.report import RoundReport
-from repro.core.rounds import RoundEngine
+from repro.core.rounds import AsyncRoundEngine, RoundEngine
 
 
 def softmax_xent(logits, labels):
@@ -93,10 +93,19 @@ class IFLTrainer:
             (cfg.batch_size, cfg.d_fusion),
             max_staleness=cfg.max_staleness, broadcast=cfg.broadcast,
         )
-        self.engine = RoundEngine(
-            len(self.clients), cfg.participation, seed=seed,
-            exchange=self.exchange,
-        )
+        # cfg.mode='async' swaps the engine — participants come from an
+        # arrival trace coalesced per server tick instead of a schedule
+        # draw; run_round() below is clock-agnostic and stays shared.
+        if getattr(cfg, "mode", "sync") == "async":
+            self.engine = AsyncRoundEngine(
+                len(self.clients), cfg.trace, tick=cfg.tick, seed=seed,
+                exchange=self.exchange,
+            )
+        else:
+            self.engine = RoundEngine(
+                len(self.clients), cfg.participation, seed=seed,
+                exchange=self.exchange,
+            )
         self.ledger = self.engine.ledger
         self.rng = self.engine.rng
         self.codec = self.exchange.codec

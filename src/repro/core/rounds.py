@@ -23,6 +23,42 @@ module owns everything the three eager trainers used to triplicate:
 Parse schedules from strings (the benchmarks' ``--participation`` axis):
 ``full`` | ``k2`` | ``bern0.5`` | ``straggle(0.2,3)``.
 
+Event-driven (async) mode
+-------------------------
+The synchronous engine is a barrier: a round closes when every scheduled
+participant has uploaded, so wall-clock is pinned to the slowest
+straggler.  The staleness-bounded :class:`FusionCache` is already the
+data structure of *asynchronous* FL — a server that fuses whatever
+payloads have arrived — so this module also owns the event-driven mode:
+
+  ArrivalTrace            each client's upload clock on a simulated
+                          timeline — synthetic samplers
+                          (``periodic(<p>)`` | ``poisson(<rate>)`` |
+                          heavy-tail ``pareto(<alpha>,<scale>)``) or a
+                          replayed real log (``replay:<path>``, the
+                          PR-3 remnant of extending ``straggle(...)``
+                          parsing), via :func:`parse_trace`.
+  AsyncRoundEngine        clients upload on their own clocks into the
+                          exchange plane; the server runs one modular
+                          update pass on the current valid cache at a
+                          fixed ``tick`` interval.  One engine round ==
+                          one server tick: the participants are the
+                          clients with >= 1 arrival in the tick window
+                          (multiple arrivals coalesce — the client
+                          uploads its freshest state once), so byte
+                          accounting reuses the synchronous
+                          ``ifl_round_bytes(participating=K)`` parity
+                          exactly.  Empty ticks are legal (the server
+                          ticks, nothing moves).  Reports gain
+                          ``sim_time`` / ``arrivals`` /
+                          ``uploads_per_sec`` — throughput measured in
+                          uploads/sec absorbed, not rounds.
+  simulate_sync_wall_clock  what the SAME trace costs a barrier run:
+                          per-round duration = waiting for the slowest
+                          scheduled participant's next arrival — the
+                          baseline the async-vs-sync benchmark compares
+                          wall-clock against.
+
 Cache-staleness semantics
 -------------------------
 IFL's modular update (Algorithm 1 lines 24-28) wants N ``(z_hat, y)``
@@ -60,9 +96,11 @@ re-exported here for back compat).
 
 from __future__ import annotations
 
+import json
+import math
 import re
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -78,9 +116,18 @@ __all__ = [
     "BernoulliSchedule",
     "StragglerSchedule",
     "parse_participation",
+    "ArrivalTrace",
+    "PeriodicTrace",
+    "PoissonTrace",
+    "ParetoTrace",
+    "ReplayTrace",
+    "parse_trace",
     "FusionCache",
     "CacheEntry",
     "RoundEngine",
+    "AsyncRoundEngine",
+    "simulate_sync_wall_clock",
+    "expected_async_participants",
 ]
 
 
@@ -248,6 +295,345 @@ def parse_participation(
     )
 
 
+# ---------------------------------------------------------- arrival traces
+
+
+class TraceCursor:
+    """Consumable view of one fleet's arrival stream.
+
+    Two consumers share this interface: the async engine pops every
+    event up to its next tick boundary (:meth:`pop_until`), and the
+    sync-barrier wall-clock simulation asks for one client's next
+    arrival after a round starts (:meth:`next_after`).  ``state()`` /
+    ``restore()`` make the cursor checkpointable — together with the
+    engine's rng bit-generator state, an async run resumes bitwise.
+    """
+
+    def pop_until(self, t_end: float,
+                  rng: np.random.Generator) -> List[Tuple[float, int]]:
+        """Consume and return every (time, slot) event with
+        ``time <= t_end``, sorted by (time, slot)."""
+        raise NotImplementedError
+
+    def next_after(self, slot: int, t: float,
+                   rng: np.random.Generator) -> float:
+        """Consume ``slot``'s arrivals through its first one strictly
+        after ``t`` and return that time (``inf`` if the trace is
+        exhausted — a replayed log where the client never returns)."""
+        raise NotImplementedError
+
+    def state(self) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def restore(self, state: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+
+class _SamplerCursor(TraceCursor):
+    """Cursor over per-client renewal processes (``trace.gap`` draws).
+
+    Holds each slot's next pending arrival; gaps are drawn lazily from
+    the generator it is handed (the engine's single rng stream), slot-
+    order deterministic, so a seed pins the whole event sequence."""
+
+    def __init__(self, trace: "ArrivalTrace", n: int,
+                 rng: np.random.Generator):
+        self.trace = trace
+        self.next = [trace.first(k, n, rng) for k in range(n)]
+
+    def pop_until(self, t_end, rng):
+        events: List[Tuple[float, int]] = []
+        for k in range(len(self.next)):
+            while self.next[k] <= t_end:
+                events.append((self.next[k], k))
+                self.next[k] += self.trace.gap(k, rng)
+        return sorted(events)
+
+    def next_after(self, slot, t, rng):
+        while self.next[slot] <= t:
+            self.next[slot] += self.trace.gap(slot, rng)
+        arrival = self.next[slot]
+        self.next[slot] += self.trace.gap(slot, rng)
+        return arrival
+
+    def state(self):
+        return {"next": [float(t) for t in self.next]}
+
+    def restore(self, state):
+        self.next = [float(t) for t in state["next"]]
+
+
+class _ReplayCursor(TraceCursor):
+    """Cursor over a recorded event list (per-slot position indices)."""
+
+    def __init__(self, times_by_slot: List[List[float]]):
+        self.times = times_by_slot
+        self.pos = [0] * len(times_by_slot)
+
+    def pop_until(self, t_end, rng):
+        events: List[Tuple[float, int]] = []
+        for k, ts in enumerate(self.times):
+            p = self.pos[k]
+            while p < len(ts) and ts[p] <= t_end:
+                events.append((ts[p], k))
+                p += 1
+            self.pos[k] = p
+        return sorted(events)
+
+    def next_after(self, slot, t, rng):
+        ts, p = self.times[slot], self.pos[slot]
+        while p < len(ts) and ts[p] <= t:
+            p += 1
+        if p >= len(ts):
+            self.pos[slot] = p
+            return math.inf
+        self.pos[slot] = p + 1
+        return ts[p]
+
+    def state(self):
+        return {"pos": [int(p) for p in self.pos]}
+
+    def restore(self, state):
+        self.pos = [int(p) for p in state["pos"]]
+
+
+class ArrivalTrace:
+    """Each client's upload clock on the simulated timeline.
+
+    Sampler traces are per-client renewal processes: override ``gap``
+    (inter-arrival time after an upload) and optionally ``first`` (time
+    of the first upload; defaults to one gap from t=0).  Replayed real
+    logs override ``cursor`` wholesale.  ``name`` round-trips through
+    :func:`parse_trace` (the benchmarks' ``--trace`` axis), exactly like
+    the participation schedules' ``name``.
+    """
+
+    name: str = "abstract"
+
+    def first(self, slot: int, n: int, rng: np.random.Generator) -> float:
+        return self.gap(slot, rng)
+
+    def gap(self, slot: int, rng: np.random.Generator) -> float:
+        raise NotImplementedError
+
+    def cursor(self, n: int, rng: np.random.Generator) -> TraceCursor:
+        return _SamplerCursor(self, n, rng)
+
+    def mean_gap(self) -> float:
+        """Analytic E[inter-arrival] (``inf`` when the mean diverges) —
+        what matched-uplink planning sizes tick counts with."""
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}({self.name!r})"
+
+
+@dataclass(frozen=True, repr=False)
+class PeriodicTrace(ArrivalTrace):
+    """Deterministic clocks: client k uploads every ``period`` seconds,
+    phase-staggered by slot (k's first upload at ``(k+1)/n * period``)
+    so the fleet's uploads spread across the period instead of arriving
+    as a thundering herd.  Draws no rng at all."""
+
+    period: float = 1.0
+    name: str = ""
+
+    def __post_init__(self):
+        if not self.period > 0:
+            raise ValueError(f"period must be > 0, got {self.period}")
+        if not self.name:
+            object.__setattr__(self, "name", f"periodic({self.period:g})")
+
+    def first(self, slot, n, rng):
+        return self.period * (slot + 1) / max(n, 1)
+
+    def gap(self, slot, rng):
+        return self.period
+
+    def mean_gap(self):
+        return self.period
+
+
+@dataclass(frozen=True, repr=False)
+class PoissonTrace(ArrivalTrace):
+    """Memoryless clocks: exponential inter-arrivals at ``rate``
+    uploads/sec per client (a Poisson process per client)."""
+
+    rate: float = 1.0
+    name: str = ""
+
+    def __post_init__(self):
+        if not self.rate > 0:
+            raise ValueError(f"rate must be > 0, got {self.rate}")
+        if not self.name:
+            object.__setattr__(self, "name", f"poisson({self.rate:g})")
+
+    def gap(self, slot, rng):
+        return float(rng.exponential(1.0 / self.rate))
+
+    def mean_gap(self):
+        return 1.0 / self.rate
+
+
+@dataclass(frozen=True, repr=False)
+class ParetoTrace(ArrivalTrace):
+    """Heavy-tailed clocks — the regime HeteroFL/FedMD-style populations
+    live in: inter-arrival = ``scale * U^(-1/alpha)`` (Pareto with
+    minimum ``scale`` and tail index ``alpha``).  Small ``alpha`` makes
+    stragglers arbitrarily late (``alpha <= 1`` has infinite mean), so a
+    synchronous barrier's round time — the MAX over clients — is pinned
+    by the tail while the async tick keeps absorbing the fast majority.
+    """
+
+    alpha: float = 1.5
+    scale: float = 0.5
+    name: str = ""
+
+    def __post_init__(self):
+        if not self.alpha > 0:
+            raise ValueError(f"alpha must be > 0, got {self.alpha}")
+        if not self.scale > 0:
+            raise ValueError(f"scale must be > 0, got {self.scale}")
+        if not self.name:
+            object.__setattr__(
+                self, "name", f"pareto({self.alpha:g},{self.scale:g})"
+            )
+
+    def gap(self, slot, rng):
+        u = 1.0 - rng.random()  # (0, 1]: bounds the draw away from inf
+        return float(self.scale * u ** (-1.0 / self.alpha))
+
+    def mean_gap(self):
+        if self.alpha <= 1.0:
+            return math.inf
+        return self.alpha * self.scale / (self.alpha - 1.0)
+
+
+class ReplayTrace(ArrivalTrace):
+    """A replayed real upload log: explicit (time, slot) events.
+
+    ``events`` may arrive unsorted; they are ordered by (time, slot) —
+    duplicate timestamps are legal (two clients at the same instant, or
+    one client's back-to-back uploads) and keep a stable order.  An
+    empty log is legal too: every tick is simply empty.  ``from_file``
+    parses the on-disk formats a deployment postmortem would export:
+    JSON lines (``{"t": 3.2, "client": 1}``) or CSV (``time,slot``),
+    ``#`` comments and blank lines skipped.
+    """
+
+    def __init__(self, events: Sequence[Tuple[float, int]],
+                 n_clients: Optional[int] = None, *, path: str = ""):
+        evs = []
+        for i, (t, s) in enumerate(events):
+            t, s = float(t), int(s)
+            if not math.isfinite(t) or t < 0:
+                raise ValueError(
+                    f"replay trace event {i}: time must be finite and "
+                    f">= 0, got {t}"
+                )
+            if s < 0:
+                raise ValueError(
+                    f"replay trace event {i}: client slot must be >= 0, "
+                    f"got {s}"
+                )
+            evs.append((t, s))
+        self.events = sorted(evs)
+        self.n_slots = max((s for _, s in self.events), default=-1) + 1
+        if n_clients is not None and self.n_slots > n_clients:
+            raise ValueError(
+                f"replay trace names client slot {self.n_slots - 1} but "
+                f"the fleet has only {n_clients} clients"
+            )
+        self.name = f"replay:{path}" if path else "replay"
+
+    @classmethod
+    def from_file(cls, path: str,
+                  n_clients: Optional[int] = None) -> "ReplayTrace":
+        events = []
+        with open(path) as f:
+            for lineno, line in enumerate(f, 1):
+                line = line.strip()
+                if not line or line.startswith("#"):
+                    continue
+                try:
+                    if line.startswith("{"):
+                        rec = json.loads(line)
+                        events.append((rec["t"], rec["client"]))
+                    else:
+                        t_s, s_s = line.split(",")
+                        events.append((float(t_s), int(s_s)))
+                except (ValueError, KeyError, TypeError) as e:
+                    raise ValueError(
+                        f"{path}:{lineno}: malformed arrival-log line "
+                        f"{line!r} (expected JSON {{'t':..,'client':..}} "
+                        f"or CSV 'time,slot'): {e}"
+                    ) from None
+        return cls(events, n_clients, path=path)
+
+    def cursor(self, n, rng):
+        times: List[List[float]] = [[] for _ in range(n)]
+        for t, s in self.events:
+            if s < n:
+                times[s].append(t)
+        return _ReplayCursor(times)
+
+    def mean_gap(self):
+        """Empirical mean inter-arrival across the log's clients."""
+        gaps = []
+        by_slot: Dict[int, List[float]] = {}
+        for t, s in self.events:
+            by_slot.setdefault(s, []).append(t)
+        for ts in by_slot.values():
+            gaps.extend(b - a for a, b in zip(ts, ts[1:]))
+        return float(np.mean(gaps)) if gaps else math.inf
+
+    def __repr__(self) -> str:
+        return f"ReplayTrace({len(self.events)} events, {self.name!r})"
+
+
+_TRACE_RES = {
+    re.compile(r"^periodic\(([^,)]+)\)$"):
+        lambda m: PeriodicTrace(float(m.group(1))),
+    re.compile(r"^poisson\(([^,)]+)\)$"):
+        lambda m: PoissonTrace(float(m.group(1))),
+    re.compile(r"^pareto\(([^,)]+),([^,)]+)\)$"):
+        lambda m: ParetoTrace(float(m.group(1)), float(m.group(2))),
+}
+
+
+def parse_trace(spec: Union[str, ArrivalTrace],
+                n_clients: Optional[int] = None) -> ArrivalTrace:
+    """Resolve an arrival-trace spec — ``periodic(<period>)`` |
+    ``poisson(<rate>)`` | ``pareto(<alpha>,<scale>)`` |
+    ``replay:<path>`` — or pass a trace through.  The spec strings are
+    the traces' own ``name``s, so parsing round-trips."""
+    if isinstance(spec, ArrivalTrace):
+        return spec
+    if not spec:
+        raise ValueError(
+            "async mode needs an arrival trace: 'periodic(<period>)', "
+            "'poisson(<rate>)', 'pareto(<alpha>,<scale>)', or "
+            "'replay:<path>'"
+        )
+    if spec.startswith("replay:"):
+        return ReplayTrace.from_file(spec[len("replay:"):], n_clients)
+    for pat, build in _TRACE_RES.items():
+        m = pat.match(spec)
+        if m:
+            try:
+                return build(m)  # range errors (rate<=0, ...) propagate
+            except ValueError as e:
+                if "could not convert" not in str(e):
+                    raise
+                break
+    raise ValueError(
+        f"unknown arrival-trace spec {spec!r}; expected "
+        "'periodic(<period>)' (e.g. periodic(1)), 'poisson(<rate>)' "
+        "(e.g. poisson(0.5)), 'pareto(<alpha>,<scale>)' (e.g. "
+        "pareto(1.5,0.5)), or 'replay:<path>'"
+    )
+
+
 # ------------------------------------------------------------ round engine
 
 
@@ -349,6 +735,13 @@ class RoundEngine:
         of the old ad-hoc metrics keep working unchanged.
         """
         self.ledger.end_round()
+        # Age expired cache entries out of server MEMORY every round —
+        # not just out of the broadcast. ``valid_entries`` already
+        # evicts when the broadcast path consults it, so this is a
+        # no-op for the synchronous trainers (bit-for-bit preserved);
+        # it is what bounds the cache on long event-driven runs, where
+        # eviction must not be contingent on a tick having traffic.
+        self.cache.prune(self.round_idx)
         metrics = dict(metrics)
         metrics.pop("uplink_mb", None)  # a ledger fact, not a metric
         report = RoundReport(
@@ -361,3 +754,152 @@ class RoundEngine:
         self.history.append(report)
         self.round_idx += 1
         return report
+
+
+class AsyncRoundEngine(RoundEngine):
+    """Event-driven scheduling: arrivals on client clocks, server ticks.
+
+    One engine round == one server tick of ``tick`` simulated seconds.
+    Clients upload whenever their :class:`ArrivalTrace` clock fires;
+    the server collects everything that arrived in the tick window and
+    runs the round's fusion/modular pass on the current valid cache.
+    ``participants()`` therefore returns the clients with >= 1 arrival
+    in ``(round_idx * tick, (round_idx + 1) * tick]`` — multiple
+    arrivals from one client coalesce into one upload of its freshest
+    state (the raw event count rides in the report's ``arrivals``), so
+    a tick prices exactly like a synchronous round with K participants
+    and every analytic↔ledger parity carries over unchanged.
+
+    Stragglers simply miss ticks: the staleness-bounded fusion cache
+    (and, under ``broadcast='delta'``, the mirror catch-up machinery)
+    already owns absence and rejoin — asynchrony is a schedule, not a
+    new wire protocol.  Empty ticks are legal and cost nothing.
+
+    The participation axis is owned by the trace (a schedule on top of
+    arrivals would double-count availability), so the engine pins the
+    schedule to ``full`` internally.
+    """
+
+    def __init__(self, n_clients: int, trace: Union[str, ArrivalTrace],
+                 *, tick: float = 1.0, seed: int = 0,
+                 max_staleness: Optional[int] = None,
+                 exchange: Optional[ExchangePlane] = None):
+        super().__init__(n_clients, "full", seed=seed,
+                         max_staleness=max_staleness, exchange=exchange)
+        if not tick > 0:
+            raise ValueError(f"tick must be > 0, got {tick}")
+        self.trace = parse_trace(trace, n_clients)
+        self.tick = float(tick)
+        # The cursor draws its gaps from the engine's single rng stream,
+        # interleaved with minibatch draws — one seed pins the run.
+        self.cursor = self.trace.cursor(n_clients, self.rng)
+        self.total_uploads = 0
+        self.total_arrivals = 0
+        self._pending: Optional[Tuple[np.ndarray, int]] = None
+
+    @property
+    def sim_time(self) -> float:
+        """Simulated seconds elapsed through the last closed tick."""
+        return self.round_idx * self.tick
+
+    def participants(self) -> np.ndarray:
+        """Clients with >= 1 arrival in the current tick window
+        (coalesced; idempotent until ``end_round`` advances the tick)."""
+        if self._pending is None:
+            t_end = (self.round_idx + 1) * self.tick
+            events = self.cursor.pop_until(t_end, self.rng)
+            slots = sorted({s for _, s in events})
+            self._pending = (np.asarray(slots, dtype=np.int64),
+                             len(events))
+        return self._pending[0]
+
+    def end_round(self, metrics: Dict[str, Any]) -> RoundReport:
+        parts, arrivals = (self._pending if self._pending is not None
+                           else (np.zeros(0, np.int64), 0))
+        self._pending = None
+        self.total_uploads += len(parts)
+        self.total_arrivals += arrivals
+        t_end = (self.round_idx + 1) * self.tick
+        metrics = dict(metrics)
+        metrics["sim_time"] = t_end
+        metrics["arrivals"] = int(arrivals)
+        metrics["uploads_per_sec"] = self.total_uploads / t_end
+        return super().end_round(metrics)
+
+    # -- checkpoint resume (bitwise: rng state rides in the base aux,
+    # -- the trace cursor and throughput counters ride here) ------------
+
+    def aux_state(self) -> Dict[str, Any]:
+        aux = super().aux_state()
+        aux["async"] = {
+            "cursor": self.cursor.state(),
+            "uploads": int(self.total_uploads),
+            "arrivals": int(self.total_arrivals),
+        }
+        return aux
+
+    def restore_aux(self, aux: Dict[str, Any]) -> None:
+        super().restore_aux(aux)
+        a = aux["async"]
+        self.cursor.restore(a["cursor"])
+        self.total_uploads = int(a["uploads"])
+        self.total_arrivals = int(a["arrivals"])
+        self._pending = None
+
+
+# ------------------------------------------------------ wall-clock models
+
+
+def simulate_sync_wall_clock(
+    trace: Union[str, ArrivalTrace], n_clients: int, rounds: int, *,
+    participation: Union[str, ParticipationSchedule, None] = None,
+    seed: int = 0,
+) -> List[float]:
+    """Per-round barrier durations of a SYNCHRONOUS run under ``trace``.
+
+    The synchronous trainers have no clock (a round is a round), so the
+    async-vs-sync comparison prices their barrier from the same arrival
+    model: round r starts when round r-1's slowest participant landed,
+    and closes at ``max`` over this round's scheduled participants of
+    each one's next arrival — wall-clock pinned to the straggler tail,
+    which is exactly what the event-driven engine retires.  Uses its own
+    rng stream (seeded) so the simulation never perturbs a training
+    run's draws; rounds whose barrier never closes (a replayed log that
+    ends) report ``inf``, and empty-participant rounds cost 0.
+    """
+    trace = parse_trace(trace, n_clients)
+    schedule = parse_participation(participation)
+    rng = np.random.default_rng(seed)
+    cursor = trace.cursor(n_clients, rng)
+    t = 0.0
+    durations: List[float] = []
+    for r in range(rounds):
+        parts = np.flatnonzero(schedule.mask(r, n_clients, rng))
+        if len(parts) == 0:
+            durations.append(0.0)
+            continue
+        landing = max(cursor.next_after(int(p), t, rng) for p in parts)
+        durations.append(landing - t)
+        if math.isfinite(landing):
+            t = landing
+    return durations
+
+
+def expected_async_participants(
+    trace: Union[str, ArrivalTrace], n_clients: int, tick: float, *,
+    ticks: int = 256, seed: int = 0,
+) -> Tuple[float, float]:
+    """(mean coalesced uploads, mean raw arrivals) per tick.
+
+    Replays the trace through the exact tick-coalescing the engine runs,
+    so analytic reports (the dry-run's ``client_boundary`` section)
+    price the async uplink with the same bookkeeping the ledger uses —
+    the async analogue of ``expected_delta_entries``."""
+    rng = np.random.default_rng(seed)
+    cursor = parse_trace(trace, n_clients).cursor(n_clients, rng)
+    uploads = arrivals = 0
+    for t in range(ticks):
+        events = cursor.pop_until((t + 1) * tick, rng)
+        uploads += len({s for _, s in events})
+        arrivals += len(events)
+    return uploads / max(ticks, 1), arrivals / max(ticks, 1)

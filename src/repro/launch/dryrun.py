@@ -65,7 +65,12 @@ from repro.core.ifl_spmd import (
     make_prefill_step,
     make_serve_step,
 )
-from repro.core.rounds import FullParticipation, parse_participation
+from repro.core.rounds import (
+    FullParticipation,
+    expected_async_participants,
+    parse_participation,
+    parse_trace,
+)
 from repro.launch.mesh import data_axes_of, derive_ifl_mesh, make_production_mesh
 from repro.roofline.analysis import (
     collective_bytes_from_hlo,
@@ -114,11 +119,38 @@ def _active_params(cfg: ModelConfig, p_base: float, p_mod: float):
     return p_base - dead_b, p_mod - dead_m
 
 
+def _expected_async_delta_entries(trace: str, n_clients: int, tick: float,
+                                  *, ticks: int = 256,
+                                  seed: int = 0) -> float:
+    """Mean delta-broadcast entries per server tick under ``trace``.
+
+    The async analogue of ``expected_delta_entries``: replay the
+    coalesced per-tick participant stream through a real
+    ``SPMDFusionExchange.account_round`` so the dry-run prices rejoin
+    catch-up shipping with the trainers' exact mirror bookkeeping.
+    """
+    import numpy as np
+
+    from repro.core.exchange import SPMDFusionExchange
+
+    rng = np.random.default_rng(seed)
+    cursor = parse_trace(trace, n_clients).cursor(n_clients, rng)
+    plane = SPMDFusionExchange(None, None, n_clients=n_clients,
+                               broadcast="delta")
+    total = 0
+    for t in range(ticks):
+        events = cursor.pop_until((t + 1) * tick, rng)
+        parts = sorted({slot for _, slot in events})
+        total += plane.account_round(parts, t, entry_bytes=0)[1]
+    return total / max(ticks, 1)
+
+
 def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
             n_clients: int, tau: int, variant: str, out_dir: str,
             force: bool = False, cfg_override=None, overrides=None,
             fsdp_override=None, codec: str = "fp32",
-            participation: str = "full", broadcast: str = "full"):
+            participation: str = "full", broadcast: str = "full",
+            mode: str = "sync", trace: str = "", tick: float = 1.0):
     import re as _re
 
     mesh_name = "2x16x16" if multi_pod else "16x16"
@@ -133,7 +165,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
     if shape_kind == "train" and step_kind == "ifl":
         for prefix, value, default in (("c", codec, "fp32"),
                                        ("p", participation, "full"),
-                                       ("b", broadcast, "full")):
+                                       ("b", broadcast, "full"),
+                                       ("m", mode, "sync"),
+                                       ("t", trace, "")):
             if value != default:
                 tag += "__" + prefix + _re.sub(r"[^\w.]+", "-", str(value))
     if variant:
@@ -158,7 +192,11 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
     schedule = parse_participation(participation)
     if shape.kind == "train" and step_kind == "ifl":
         ifl_mesh = derive_ifl_mesh(mesh, n_clients)
-        partial = not isinstance(schedule, FullParticipation)
+        # Async mode is arrival-driven, so the lowered program is always
+        # the masked cached-payload variant — the tick's participant set
+        # is a runtime mask, never a recompile.
+        partial = (mode == "async" or
+                   not isinstance(schedule, FullParticipation))
         step = make_ifl_round_step(
             cfg, ifl_mesh, n_clients=n_clients, tau=tau, codec=codec,
             partial_participation=partial,
@@ -300,14 +338,26 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
         from repro.core.exchange import expected_delta_entries
 
         rows_per_client = (shape.global_batch // n_clients) * shape.seq_len
-        k_exp = schedule.expected_participants(n_clients)
+        arrivals_exp = None
+        if mode == "async":
+            # Per-tick expectations come from the arrival trace, not the
+            # participation schedule: mean coalesced uploads (= mask
+            # popcount the lowered program sees) and raw arrival rate.
+            k_exp, arrivals_exp = expected_async_participants(
+                trace, n_clients, tick)
+        else:
+            k_exp = schedule.expected_participants(n_clients)
         k_int = max(1, int(round(k_exp)))
         # Delta downlink: mean shipped entries from a mirror-sync replay
         # of the schedule — NOT the K-fresh best case, which only holds
         # at full participation (rejoining clients pull catch-up
         # entries, so partial schedules sit between K and N).
-        e_exp = (expected_delta_entries(schedule, n_clients)
-                 if broadcast == "delta" else None)
+        if broadcast != "delta":
+            e_exp = None
+        elif mode == "async":
+            e_exp = _expected_async_delta_entries(trace, n_clients, tick)
+        else:
+            e_exp = expected_delta_entries(schedule, n_clients)
         per_round = ifl_round_bytes(
             n_clients, rows_per_client, cfg.d_fusion, codec=codec,
             participating=k_int, broadcast_entries=n_clients,
@@ -323,7 +373,12 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
             "codec": get_codec(codec).name,
             "participation": schedule.name,
             "broadcast": broadcast,
+            "mode": mode,
+            "trace": (parse_trace(trace, n_clients).name
+                      if mode == "async" else None),
+            "tick": tick if mode == "async" else None,
             "expected_participants": k_exp,
+            "expected_arrivals_per_tick": arrivals_exp,
             "expected_delta_entries": e_exp,
             "per_round_bytes": per_round,
             "full_broadcast_down_bytes": full_down,
@@ -370,8 +425,10 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
     )
     if client_boundary:
         cb = client_boundary
+        regime = (f"async {cb['trace']} @tick {cb['tick']}"
+                  if cb["mode"] == "async" else cb["participation"])
         print(
-            f"     client boundary [{cb['codec']} / {cb['participation']}"
+            f"     client boundary [{cb['codec']} / {regime}"
             f" / {cb['broadcast']}]: "
             f"up {cb['per_round_bytes']['up']/1e6:.2f}MB, "
             f"down {cb['per_round_bytes']['down']/1e6:.2f}MB/round "
@@ -403,6 +460,15 @@ def main():
                     choices=["full", "delta"],
                     help="downlink policy for the client-boundary "
                          "accounting (repro.core.exchange)")
+    ap.add_argument("--mode", default="sync", choices=["sync", "async"],
+                    help="round clocking: async lowers the masked "
+                         "cached-payload step and prices the boundary "
+                         "per server tick from --trace")
+    ap.add_argument("--trace", default="",
+                    help="async arrival trace (repro.core.rounds), e.g. "
+                         "pareto(1.2,0.5) — required with --mode async")
+    ap.add_argument("--tick", type=float, default=1.0,
+                    help="async server fuse period in simulated seconds")
     ap.add_argument("--variant", default="",
                     help="perf-iteration tag for §Perf experiments")
     ap.add_argument("--out", default="results/dryrun")
@@ -422,6 +488,8 @@ def main():
             pass
         overrides[k] = v
     fsdp_override = {"on": True, "off": False, "auto": None}[args.fsdp]
+    if args.mode == "async" and not args.trace:
+        ap.error("--mode async requires --trace (e.g. pareto(1.2,0.5))")
 
     combos = []
     if args.all:
@@ -447,7 +515,8 @@ def main():
                         force=args.force, overrides=overrides,
                         fsdp_override=fsdp_override, codec=args.codec,
                         participation=args.participation,
-                        broadcast=args.broadcast)
+                        broadcast=args.broadcast, mode=args.mode,
+                        trace=args.trace, tick=args.tick)
             except Exception as e:  # noqa: BLE001
                 failures.append((arch, shape, mp, repr(e)))
                 print(f"[FAIL] {arch} {shape} multi_pod={mp}: {e}")
