@@ -52,6 +52,7 @@ import numpy as np
 from repro.api import (
     DataSpec,
     ExperimentSpec,
+    FleetSpec,
     available_schemes,
     run_experiment,
 )
@@ -61,21 +62,24 @@ from repro.core import ifl_round_bytes
 def main(scheme: str = "ifl", codec: str = "fp32",
          participation: str = "full", max_staleness=None, rounds: int = 20,
          broadcast: str = "full", mode: str = "sync", trace: str = "",
-         tick: float = 1.0):
+         tick: float = 1.0, n_population: int = 0, cohort: int = 0):
     if mode == "async" and not trace:
         trace = "pareto(1.2,0.5)"  # heavy-tail default: infinite-mean gaps
     data_name = ("synthetic LM tokens" if scheme == "ifl_spmd"
                  else "synthetic KMNIST")
     clock = (f"async trace {trace} tick {tick}" if mode == "async"
              else f"participation {participation}")
-    print(f"== {scheme} quickstart: 4 vendors, {data_name}, "
+    fleet = FleetSpec(n_population=n_population, cohort=cohort)
+    vendors = (f"{fleet.population} vendors, cohort {cohort}/round"
+               if cohort else "4 vendors")
+    print(f"== {scheme} quickstart: {vendors}, {data_name}, "
           f"wire codec {codec}, {clock}, "
           f"broadcast {broadcast} ==")
     spmd = scheme == "ifl_spmd"
     spec = ExperimentSpec(
         scheme=scheme, rounds=rounds, tau=10, lr=0.05, batch_size=32,
         codec=codec, participation=participation, broadcast=broadcast,
-        mode=mode, trace=trace, tick=tick,
+        mode=mode, trace=trace, tick=tick, fleet=fleet,
         max_staleness=max_staleness, eval_every=5, seed=0,
         # The SPMD demo runs the smoke LM: match its 32-dim fusion cut
         # (the spec's d_fusion is authoritative over the model config).
@@ -93,7 +97,7 @@ def main(scheme: str = "ifl", codec: str = "fp32",
         clock = (f"t={rec['sim_time']:.1f}s, " if "sim_time" in rec else "")
         print(f"round {rec['round']:3d}: {clock}{extra}"
               f"uplink {rec['uplink_mb']:.2f} MB, "
-              f"up {len(parts)}/{spec.fleet.n_clients} vendors "
+              f"up {len(parts)}/{spec.fleet.population} vendors "
               f"(cache {report.metrics.get('cache_size', '-')}), "
               f"accs {[f'{a:.2f}' for a in accs]}")
 
@@ -110,14 +114,16 @@ def main(scheme: str = "ifl", codec: str = "fp32",
               f"downlink {trainer.ledger.downlink_mb:.3f} MB, "
               f"total {trainer.ledger.total_mb:.3f} MB")
 
-    if hasattr(trainer, "accuracy_matrix"):
+    if "matrix" in result.records[-1]:
+        # Population fleets skip the N x N composition sweep
+        # (trainer.eval_matrix is False there).
         print("\ncross-vendor composition matrix (eq. 11):")
         mat = np.asarray(result.records[-1]["matrix"])
         print(np.round(mat, 3))
 
     if scheme == "ifl":
         m0 = trainer.engine.history[0]
-        exp = ifl_round_bytes(spec.fleet.n_clients, spec.batch_size,
+        exp = ifl_round_bytes(spec.fleet.population, spec.batch_size,
                               spec.d_fusion, codec=codec,
                               participating=len(m0["participants"]),
                               broadcast_entries=m0["cache_size"],
@@ -129,21 +135,23 @@ def main(scheme: str = "ifl", codec: str = "fp32",
               f"{got['up'] == exp['up'] and got['down'] == exp['down']}")
         if spec.broadcast == "delta":
             full_down = ifl_round_bytes(
-                spec.fleet.n_clients, spec.batch_size, spec.d_fusion,
+                spec.fleet.population, spec.batch_size, spec.d_fusion,
                 codec=codec, participating=len(m0["participants"]),
                 broadcast_entries=m0["cache_size"])["down"]
             if got["down"]:
                 print(f"delta downlink saving vs full broadcast: "
                       f"{full_down / got['down']:.2f}x this round")
         if codec != "fp32" and exp["up"]:  # an empty round 0 has no uplink
-            fp32 = ifl_round_bytes(spec.fleet.n_clients, spec.batch_size,
+            fp32 = ifl_round_bytes(spec.fleet.population, spec.batch_size,
                                    spec.d_fusion,
                                    participating=len(m0["participants"]),
                                    broadcast_entries=m0["cache_size"])
             print(f"wire saving vs fp32: {fp32['up'] / exp['up']:.2f}x uplink")
         if trainer.codec.has_state:
+            # sorted(): population EF state is a lazy dict in touch
+            # order — slot order keeps the print stable across draws.
             norms = {trainer.clients[k].cid: float(np.linalg.norm(np.asarray(e)))
-                     for k, e in trainer.ef_state.items()}
+                     for k, e in sorted(trainer.ef_state.items())}
             print("EF residual norms (client-private, 0 wire bytes): "
                   + ", ".join(f"{c}: {n:.1f}" for c, n in norms.items()))
 
@@ -177,6 +185,14 @@ if __name__ == "__main__":
     ap.add_argument("--tick", type=float, default=1.0,
                     help="async server fuse period in simulated seconds")
     ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--n-population", type=int, default=0,
+                    help="fleet size N in the population regime "
+                         "(requires --cohort; 0 = the 4-vendor fleet)")
+    ap.add_argument("--cohort", type=int, default=0,
+                    help="cohort width C: each round trains a C-of-N "
+                         "draw; per-round bytes and clock scale in C, "
+                         "not N (0 = every vendor every round)")
     args = ap.parse_args()
     main(args.scheme, args.codec, args.participation, args.max_staleness,
-         args.rounds, args.broadcast, args.mode, args.trace, args.tick)
+         args.rounds, args.broadcast, args.mode, args.trace, args.tick,
+         args.n_population, args.cohort)

@@ -61,7 +61,10 @@ def _eval_record(trainer, data, report: RoundReport) -> Dict[str, Any]:
         rec["accs"] = list(accs)
     else:
         rec["acc_mean"] = float(accs)
-    if hasattr(trainer, "accuracy_matrix"):
+    if hasattr(trainer, "accuracy_matrix") and getattr(
+            trainer, "eval_matrix", True):
+        # ``eval_matrix=False`` (population fleets): the N x N
+        # cross-composition sweep is unaffordable and off-thesis there.
         mat = trainer.accuracy_matrix(data.test_x[:2000], data.test_y[:2000])
         rec["matrix"] = mat.tolist()
         # Fig 3: per-base-block SD across modular compositions.
@@ -111,12 +114,14 @@ def run_experiment(
                             f"{spec.scheme}_{spec.spec_hash()}.json")
         if os.path.exists(path):
             cached = RunResult.from_json(path)
-        elif spec.broadcast == "full" and spec.mode == "sync":
-            # The legacy tags predate the broadcast and mode axes (every
-            # legacy fixture is a sync full-broadcast run), so a
-            # non-default policy must never match one — a delta or async
-            # spec served the tracked sync file would silently report
-            # the wrong bytes and clock.
+        elif (spec.broadcast == "full" and spec.mode == "sync"
+              and not spec.fleet.n_population and not spec.fleet.cohort):
+            # The legacy tags predate the broadcast, mode, and
+            # population axes (every legacy fixture is a sync
+            # full-broadcast fixed-fleet run), so a non-default policy
+            # must never match one — a delta, async, or cohort spec
+            # served the tracked sync file would silently report the
+            # wrong bytes and clock.
             legacy = os.path.join(cache_dir, _legacy_tag(spec))
             if os.path.exists(legacy):
                 with open(legacy) as f:

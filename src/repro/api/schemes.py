@@ -22,7 +22,7 @@ codecs inherit ``ef(...)`` and the property suite.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, List, NamedTuple, Optional
+from typing import Callable, Dict, NamedTuple, Optional
 
 import jax
 import numpy as np
@@ -30,6 +30,7 @@ import numpy as np
 from repro.api.registry import register_scheme
 from repro.api.spec import ExperimentSpec
 from repro.core import Client, FLTrainer, FSLTrainer, IFLTrainer
+from repro.core.population import LazyFleet
 from repro.data import dirichlet_partition, make_synth_kmnist
 from repro.models.small import (
     client_base_apply,
@@ -94,31 +95,41 @@ def apply_fns(cid: int):
 
 def build_fleet(spec: ExperimentSpec, data: DataBundle, *,
                 heterogeneous: Optional[bool] = None,
-                arch: Optional[int] = None) -> List[Client]:
+                arch: Optional[int] = None):
     """Dirichlet-shard the data and build the Client list.
 
     Reproduces the original harness draw-for-draw: shard seed =
     ``spec.seed``, param init key = ``PRNGKey(100 + k)`` for slot k.
     Heterogeneous fleets cycle the paper's four Table-II architectures;
     homogeneous ones (the FL regime) clone ``arch`` everywhere.
+    Population specs (``fleet.n_population`` set) return a
+    :class:`repro.core.population.LazyFleet` of N clients built on
+    first touch instead of an eager list.
     """
     fleet = spec.fleet
     if heterogeneous is None:
         heterogeneous = fleet.heterogeneous
     arch = fleet.arch if arch is None else arch
-    shards = dirichlet_partition(data.train_y, fleet.n_clients,
+    n = fleet.population
+    shards = dirichlet_partition(data.train_y, n,
                                  alpha=fleet.alpha, seed=spec.seed)
-    clients = []
-    for k in range(fleet.n_clients):
+
+    def build_client(k: int) -> Client:
         cid = (k % 4 + 1) if heterogeneous else arch
         base_fn, mod_fn = apply_fns(cid)
-        clients.append(Client(
+        return Client(
             cid=cid,
             params=init_client_model(jax.random.PRNGKey(100 + k), cid),
             base_apply=base_fn, modular_apply=mod_fn,
             data_x=data.train_x[shards[k]], data_y=data.train_y[shards[k]],
-        ))
-    return clients
+        )
+
+    if fleet.n_population:
+        # Population fleet: shards are cheap index views, but N model
+        # inits are not — materialize client k on first cohort touch
+        # (deterministic in k, so lazy == eager bitwise).
+        return LazyFleet(n, build_client)
+    return [build_client(k) for k in range(n)]
 
 
 # ----------------------------------------------------------------- schemes
@@ -144,10 +155,23 @@ def _require_sync(spec: ExperimentSpec, scheme: str) -> None:
         )
 
 
+def _require_no_population(spec: ExperimentSpec, scheme: str) -> None:
+    # The cohort-shaped path pages per-slot carried state through the
+    # population store, which only the IFL fusion planes implement;
+    # FedAvg/FSL cohort baselines are future work (ROADMAP).
+    if spec.fleet.n_population or spec.fleet.cohort:
+        raise ValueError(
+            f"scheme {scheme!r} has no cohort-shaped path yet — "
+            "population fleets (n_population/cohort) need the IFL "
+            "fusion cache (use scheme='ifl' or 'ifl_spmd')"
+        )
+
+
 @register_scheme("fsl", summary="federated split learning baseline "
                                 "(SplitFed-style shared server block)")
 def build_fsl(spec: ExperimentSpec, data: DataBundle) -> FSLTrainer:
     _require_sync(spec, "fsl")
+    _require_no_population(spec, "fsl")
     clients = build_fleet(spec, data)
     server = init_client_model(jax.random.PRNGKey(999), 1)["modular"]
     _, server_apply = apply_fns(1)
@@ -157,6 +181,7 @@ def build_fsl(spec: ExperimentSpec, data: DataBundle) -> FSLTrainer:
 
 def _build_fl(spec: ExperimentSpec, data: DataBundle, arch: int) -> FLTrainer:
     _require_sync(spec, f"fl{arch}")
+    _require_no_population(spec, f"fl{arch}")
     clients = build_fleet(spec, data, heterogeneous=False, arch=arch)
     return FLTrainer(clients, spec.run_config(), seed=spec.seed)
 

@@ -54,12 +54,52 @@ class FleetSpec:
     ``arch`` everywhere (the FL-1/FL-2 regime — FedAvg cannot serve a
     heterogeneous fleet, which is the limitation the paper targets).
     ``alpha`` is the Dirichlet non-IID concentration of the shards.
+
+    Population regime (the FedAvg/HeteroFL deployment shape): setting
+    ``n_population=N`` with ``cohort=C`` sizes the fleet at N clients of
+    which at most C are admitted per round — device state stays
+    C-shaped, per-slot carried state lives in the host-side population
+    store, and the downlink serves the cohort's fresh uploads only.
+    Both default to 0 (off: the fleet is ``n_clients`` and every
+    pre-population spec hash is unchanged — the fields are elided from
+    the canonical dict at their defaults).
     """
 
     n_clients: int = 4
     heterogeneous: bool = True
     arch: int = 1
     alpha: float = 0.5
+    n_population: int = 0
+    cohort: int = 0
+
+    def __post_init__(self):
+        if self.n_population < 0 or self.cohort < 0:
+            raise ValueError(
+                f"n_population/cohort must be >= 0, got "
+                f"{self.n_population}/{self.cohort}"
+            )
+        if self.n_population and not self.cohort:
+            raise ValueError(
+                f"n_population={self.n_population} needs a cohort size "
+                "(cohort=C, the per-round admission cap)"
+            )
+        pop = self.n_population or self.n_clients
+        if self.cohort > pop:
+            raise ValueError(
+                f"cohort ({self.cohort}) cannot exceed the population "
+                f"({pop} clients)"
+            )
+
+    @property
+    def population(self) -> int:
+        """The actual fleet size: ``n_population`` when set, else
+        ``n_clients``."""
+        return self.n_population or self.n_clients
+
+    @property
+    def cohort_size(self) -> Optional[int]:
+        """The per-round admission cap (None when uncapped)."""
+        return self.cohort or None
 
 
 @dataclass(frozen=True)
@@ -109,6 +149,11 @@ class ExperimentSpec:
         ("trace", ""),
         ("tick", 1.0),
     )
+    # Same compat contract for axes nested under the fleet dict.
+    _ELIDE_FLEET_AT_DEFAULT = (
+        ("n_population", 0),
+        ("cohort", 0),
+    )
 
     def __post_init__(self):
         if self.mode not in ("sync", "async"):
@@ -144,6 +189,9 @@ class ExperimentSpec:
         for name, default in self._ELIDE_AT_DEFAULT:
             if d[name] == default:
                 del d[name]
+        for name, default in self._ELIDE_FLEET_AT_DEFAULT:
+            if d["fleet"][name] == default:
+                del d["fleet"][name]
         return d
 
     @classmethod
@@ -169,7 +217,9 @@ class ExperimentSpec:
     def run_config(self) -> RunConfig:
         """Lower onto the trainers' RunConfig (lr drives both blocks)."""
         return RunConfig(
-            n_clients=self.fleet.n_clients,
+            n_clients=self.fleet.population,
+            n_population=self.fleet.n_population,
+            cohort=self.fleet.cohort,
             tau=self.tau,
             rounds=self.rounds,
             batch_size=self.batch_size,

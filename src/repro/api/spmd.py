@@ -40,10 +40,12 @@ from repro.config import ModelConfig
 from repro.core.exchange import SPMDFusionExchange
 from repro.core.ifl_spmd import (
     init_ef_state,
+    init_ifl_slot_state,
     init_ifl_state,
     init_payload_cache,
     make_ifl_round_step,
 )
+from repro.core.population import PopulationStore
 from repro.core.report import RoundReport
 from repro.core.rounds import AsyncRoundEngine, FullParticipation, RoundEngine
 from repro.data.synthetic import SyntheticLM
@@ -92,50 +94,94 @@ class SPMDIFLTrainer:
         self.spec = spec
         self.seq = seq
         self.mesh = mesh or _one_device_mesh()
-        self.n_clients = spec.fleet.n_clients
+        # Population (cohort) regime: the fleet is N = fleet.population
+        # slots, the device program is C-shaped (C = fleet.cohort), and
+        # per-slot params/opt/EF page through host-side population
+        # stores around each round.  Legacy (cohort=0): device width ==
+        # fleet size, everything carried on-device as before.
+        self._population = bool(spec.fleet.cohort)
+        self.n_clients = spec.fleet.population
+        self.width = (spec.fleet.cohort if self._population
+                      else spec.fleet.n_clients)
         # The exchange plane owns both halves of the wire: the
         # jit-traceable pipeline the round step runs, and the host-side
         # analytic ledger (same codec, staleness, and broadcast policy
-        # by construction).
+        # by construction).  Sized at N — accounting tracks population
+        # slots, only the device program is cohort-shaped.
         self.exchange = SPMDFusionExchange(
             spec.codec, self.mesh, n_clients=self.n_clients,
             max_staleness=spec.max_staleness, broadcast=spec.broadcast,
+            population=self._population,
         )
         # spec.mode='async': one engine round == one server tick; the
         # participant set is whoever's trace arrivals landed in the tick
         # (coalesced), which the jitted step sees as an ordinary partial-
         # participation mask — so the SPMD program itself is mode-blind.
+        cohort = spec.fleet.cohort_size
         if spec.mode == "async":
             self.engine = AsyncRoundEngine(
                 self.n_clients, spec.trace, tick=spec.tick,
-                seed=spec.seed, exchange=self.exchange,
+                seed=spec.seed, exchange=self.exchange, cohort=cohort,
             )
         else:
             self.engine = RoundEngine(
                 self.n_clients, spec.participation, seed=spec.seed,
-                exchange=self.exchange,
+                exchange=self.exchange, cohort=cohort,
             )
         self.ledger = self.engine.ledger
         self.codec = self.exchange.codec
-        self.partial = (spec.mode == "async" or
+        self.partial = (self._population or spec.mode == "async" or
                         not isinstance(self.engine.schedule,
                                        FullParticipation))
 
-        self.params, self.opt_state = init_ifl_state(
-            jax.random.PRNGKey(spec.seed), self.model_cfg,
-            n_clients=self.n_clients,
-        )
+        z_shape = (self.width, spec.batch_size, seq,
+                   self.model_cfg.d_fusion)
+        tok_shape = (self.width, spec.batch_size, seq)
+        if self._population:
+            # Host-side stores, paged per round.  Params/opt never age
+            # (a real client holds its own model on-device; the
+            # simulation's analogue is lazy materialization); EF
+            # residuals — payload-sized client state the *protocol*
+            # carries — age by max_staleness, re-initializing to zeros
+            # on rejoin exactly like a fresh slot.
+            init_key = jax.random.PRNGKey(spec.seed)
+            model_cfg = self.model_cfg
+
+            def init_slot(slot: int):
+                params, opt = init_ifl_slot_state(
+                    init_key, model_cfg, slot=slot)
+                return {"params": params, "opt": opt}
+
+            self.store = PopulationStore(self.n_clients, init_slot)
+            slot_z = z_shape[1:]
+            self.ef_store = (
+                PopulationStore(
+                    self.n_clients,
+                    lambda slot: self.codec.init_state(slot_z),
+                    max_staleness=spec.max_staleness,
+                )
+                if self.codec.has_state else None
+            )
+            self.params = self.opt_state = self.ef_state = None
+            self._last_cohort: List[int] = []
+        else:
+            self.store = self.ef_store = None
+            self.params, self.opt_state = init_ifl_state(
+                jax.random.PRNGKey(spec.seed), self.model_cfg,
+                n_clients=self.n_clients,
+            )
+            self.ef_state = (init_ef_state(spec.codec, z_shape)
+                             if self.codec.has_state else None)
         self._step = jax.jit(make_ifl_round_step(
-            self.model_cfg, self.mesh, n_clients=self.n_clients,
+            self.model_cfg, self.mesh, n_clients=self.width,
             tau=spec.tau, lr_base=spec.lr, lr_modular=spec.lr,
             partial_participation=self.partial,
             exchange=self.exchange,
         ))
-        z_shape = (self.n_clients, spec.batch_size, seq,
-                   self.model_cfg.d_fusion)
-        tok_shape = (self.n_clients, spec.batch_size, seq)
-        self.ef_state = (init_ef_state(spec.codec, z_shape)
-                         if self.codec.has_state else None)
+        # In population mode the carried payload cache is rebuilt fresh
+        # (all ages _NEVER) every round: cohort positions are re-bound
+        # to different slots each round, so carrying a previous cohort's
+        # payloads would misattribute them.
         self.cache = (init_payload_cache(spec.codec, z_shape, tok_shape)
                       if self.partial else None)
         self._stream = SyntheticLM(self.model_cfg.vocab_size, seed=spec.seed)
@@ -151,8 +197,14 @@ class SPMDIFLTrainer:
 
     # ------------------------------------------------------------- data
 
-    def _round_batch(self, round_idx: int) -> Dict[str, jnp.ndarray]:
+    def _round_batch(self, round_idx: int,
+                     slots: Optional[List[int]] = None
+                     ) -> Dict[str, jnp.ndarray]:
         spec = self.spec
+        # ``slots`` (population mode) names the cohort's population slot
+        # ids — data identity follows the slot, not the cohort position,
+        # so a client sees its own stream whichever position it lands in.
+        ids = slots if slots is not None else list(range(self.n_clients))
         toks = np.stack([
             np.stack([
                 self._stream.sample(spec.batch_size, self.seq,
@@ -160,13 +212,15 @@ class SPMDIFLTrainer:
                                     client=k)
                 for t in range(spec.tau + 1)
             ])
-            for k in range(self.n_clients)
-        ])  # (N, tau+1, Bc, S)
+            for k in ids
+        ])  # (width, tau+1, Bc, S)
         return {"tokens": jnp.asarray(toks)}
 
     # ------------------------------------------------------------ round
 
     def run_round(self) -> RoundReport:
+        if self._population:
+            return self._run_round_population()
         eng = self.engine
         participants = eng.participants()
         batch = self._round_batch(eng.round_idx)
@@ -211,6 +265,53 @@ class SPMDIFLTrainer:
             metrics["shipped_entries"] = shipped
         return eng.end_round(metrics)
 
+    def _run_round_population(self) -> RoundReport:
+        """One cohort-shaped round: draw <=C slots, page their state
+        into the fixed C-wide device cohort, run the masked step, page
+        the trained positions back out.  Device arrays never see N."""
+        eng = self.engine
+        slots = [int(s) for s in eng.participants()]
+        base_loss = mod_loss = float("nan")
+        if slots:
+            # Pad the cohort to the fixed device width by repeating a
+            # real slot under a False mask: the padded positions pass
+            # through the masked step untouched and are never paged out.
+            pad = self.width - len(slots)
+            cohort = slots + [slots[0]] * pad
+            mask = jnp.asarray(np.arange(self.width) < len(slots))
+            state = self.store.page_in(cohort)
+            batch = self._round_batch(eng.round_idx, cohort)
+            with self.mesh:
+                if self.codec.has_state:
+                    ef_in = self.ef_store.page_in(cohort)
+                    params, opt, m, _, ef_out = self._step(
+                        state["params"], state["opt"], batch, mask,
+                        self.cache, ef_in)
+                else:
+                    params, opt, m, _ = self._step(
+                        state["params"], state["opt"], batch, mask,
+                        self.cache)
+            self.store.page_out(
+                slots, {"params": params, "opt": opt}, eng.round_idx)
+            if self.codec.has_state:
+                self.ef_store.page_out(slots, ef_out, eng.round_idx)
+                self.ef_store.prune(eng.round_idx)
+            base_loss = float(m["base_loss"])
+            mod_loss = float(m["mod_loss"])
+            self._last_cohort = slots
+
+        entries, shipped = self.exchange.account_round(
+            slots, eng.round_idx, self._entry_bytes)
+        metrics = {
+            "base_loss": base_loss,
+            "mod_loss": mod_loss,
+            "participants": slots,
+            "cache_size": entries,
+        }
+        if self.exchange.broadcast == "delta":
+            metrics["shipped_entries"] = shipped
+        return eng.end_round(metrics)
+
     # ------------------------------------------------------------- eval
 
     def _eval_acc_impl(self, params, toks):
@@ -242,8 +343,16 @@ class SPMDIFLTrainer:
             test_x = self._stream.sample(n, self.seq, step=_EVAL_STEP,
                                          client=0)
         toks = jnp.asarray(np.asarray(test_x), jnp.int32)
+        if self._population:
+            # Probe the last cohort's freshly-trained slots (first
+            # min(width, N) slots before any round has run).
+            slots = (self._last_cohort
+                     or list(range(min(self.width, self.n_clients))))
+            params = self.store.page_in(slots)["params"]
+        else:
+            params = self.params
         with self.mesh:
-            accs = self._eval_acc(self.params, toks)
+            accs = self._eval_acc(params, toks)
         return [float(a) for a in accs]
 
     # ------------------------------------------------- snapshot/restore
@@ -254,6 +363,13 @@ class SPMDIFLTrainer:
         Unlike the eager IFL trainer, the payload cache here is
         fixed-shape carried state, so it checkpoints exactly; resume is
         bitwise even mid-partial-participation."""
+        if self._population:
+            raise NotImplementedError(
+                "population-scale checkpointing (sparse slot snapshots) "
+                "is not implemented yet — see the ROADMAP's serving/"
+                "checkpoint tier; cohort runs currently restart from "
+                "round 0"
+            )
         tree = {"params": self.params, "opt": self.opt_state}
         if self.ef_state is not None:
             tree["ef"] = self.ef_state

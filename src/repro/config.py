@@ -316,6 +316,15 @@ class RunConfig:
     mode: str = "sync"
     trace: str = ""
     tick: float = 1.0
+    # Population regime (repro.core.population): n_population sizes the
+    # fleet at N (0 = off, fleet is n_clients) and cohort caps per-round
+    # admission at C — device state stays C-shaped, per-slot carried
+    # state pages through the host-side population store.  When
+    # n_population is set, n_clients is lowered to N by the spec front
+    # door (the trainers still size everything off the clients handed
+    # to them).
+    n_population: int = 0
+    cohort: int = 0
 
 
 def __getattr__(name: str):

@@ -130,6 +130,15 @@ class ExchangePlane:
     def restore_aux(self, aux: Dict[str, Any]) -> None:
         pass
 
+    # -- aging hook (population-regime planes override) ------------------
+
+    def prune(self, round_idx: int) -> None:
+        """Age per-client carried state out of memory.  The round engine
+        calls this every ``end_round``; a no-op except for population-
+        regime fusion planes (which bound EF residuals and delta mirrors
+        by ``max_staleness``)."""
+        return None
+
 
 # ----------------------------------------------------------- fusion cache
 
@@ -253,6 +262,24 @@ class _DeltaMirrors:
 # ------------------------------------------------------------ eager backend
 
 
+class _LazySlotState(dict):
+    """slot -> state dict that materializes entries on first access.
+
+    Population fleets cannot afford N eager ``codec.init_state`` calls
+    when only the cohort's slots ever carry a residual; ``init_fn`` must
+    be deterministic in the slot (EF init is zeros), so lazy vs eager
+    materialization is bitwise-indistinguishable."""
+
+    def __init__(self, init_fn):
+        super().__init__()
+        self._init = init_fn
+
+    def __missing__(self, slot):
+        state = self._init(slot)
+        self[slot] = state
+        return state
+
+
 class FusionExchange(ExchangePlane):
     """Eager IFL wire pipeline: codec + EF residuals + cache + policy.
 
@@ -270,14 +297,22 @@ class FusionExchange(ExchangePlane):
                  z_shape: Tuple[int, ...], *,
                  max_staleness: Optional[int] = None,
                  broadcast: str = "full",
-                 ledger: Optional[CommLedger] = None):
+                 ledger: Optional[CommLedger] = None,
+                 population: bool = False):
         super().__init__(ledger)
         self.codec = get_codec(codec)
         self.n_clients = n_clients
         self.z_shape = tuple(z_shape)
         self.broadcast = parse_broadcast(broadcast)
+        # Population (cohort) regime: the broadcast serves the round's
+        # FRESH cohort uploads only (the device cohort is C-shaped, not
+        # N-shaped), and ``prune`` ages EF residuals and delta mirrors
+        # out of host memory by ``max_staleness`` — the knobs that keep
+        # server AND client memory bounded by the working set at N >> C.
+        self.population = bool(population)
         self.cache = FusionCache(max_staleness)
         self.mirrors = _DeltaMirrors(n_clients)
+        self._last_upload: Dict[int, int] = {}
         # encode_with_state is a stateless passthrough for plain codecs,
         # so ONE jitted encode path serves the whole registry.
         self._encode_state = jax.jit(self.codec.encode_with_state)
@@ -290,11 +325,12 @@ class FusionExchange(ExchangePlane):
         # Client-private, never transmitted, never counted by the ledger.
         # Keyed by client *slot*, not cid: cids name architectures and
         # repeat when a fleet larger than the four Table-II archs cycles
-        # them — each client still owns its own residual.
-        self.ef_state = {
-            k: self.codec.init_state(self.z_shape)
-            for k in range(n_clients)
-        }
+        # them — each client still owns its own residual.  Materialized
+        # lazily (init is zeros, so lazy == eager bitwise): a population
+        # fleet only ever pays for the slots that actually upload.
+        self.ef_state: Dict[int, Any] = _LazySlotState(
+            lambda slot: self.codec.init_state(self.z_shape)
+        )
 
     # ------------------------------------------------------------ uplink
 
@@ -311,6 +347,7 @@ class FusionExchange(ExchangePlane):
         self.cache.put(slot, payload=payload, z_hat=self._decode(payload),
                        y=y, round_idx=round_idx)
         self.mirrors.note_upload(slot, round_idx)
+        self._last_upload[slot] = int(round_idx)
 
     # ---------------------------------------------------------- downlink
 
@@ -322,6 +359,12 @@ class FusionExchange(ExchangePlane):
         list behind them, and the slots the delta policy actually
         shipped (empty under ``full``)."""
         entries = self.cache.valid_entries(round_idx)
+        if self.population:
+            # Cohort-fresh semantics: the device cohort is C-shaped, so
+            # a round trains on (and ships) the cohort's fresh uploads
+            # only — the downlink scales in C, never in N.
+            entries = [(s, e) for s, e in entries
+                       if e.round_idx == round_idx]
         Z = [e.z_hat for _, e in entries]
         Y = [e.y for _, e in entries]
         shipped: List[int] = []
@@ -339,6 +382,26 @@ class FusionExchange(ExchangePlane):
                            [by_slot[s].y for s in shipped]))
                 self.down_bytes(len(shipped) * DELTA_SIDECAR_BYTES)
         return Z, Y, entries, shipped
+
+    # ----------------------------------------------------------- aging
+
+    def prune(self, round_idx: int) -> None:
+        """Population regime only: age EF residuals and delta mirrors of
+        clients whose last upload is older than ``max_staleness`` out of
+        host memory.  A re-joining client re-inits its residual to zeros
+        (exactly the never-seen state) and its cleared mirror triggers
+        the normal delta catch-up, so aging changes memory, not
+        semantics.  Legacy (non-population) planes keep every residual
+        frozen across absences — bit-for-bit preserved."""
+        if not self.population or self.cache.max_staleness is None:
+            return
+        bound = self.cache.max_staleness
+        stale = [s for s, r in self._last_upload.items()
+                 if round_idx - r > bound]
+        for s in stale:
+            del self._last_upload[s]
+            self.ef_state.pop(s, None)
+            self.mirrors.versions[s].clear()
 
     # ------------------------------------------------- snapshot / restore
 
@@ -433,13 +496,18 @@ class SPMDFusionExchange(ExchangePlane):
     def __init__(self, codec: Union[str, Codec, None], mesh, *,
                  n_clients: int, max_staleness: Optional[int] = None,
                  broadcast: str = "full",
-                 ledger: Optional[CommLedger] = None):
+                 ledger: Optional[CommLedger] = None,
+                 population: bool = False):
         super().__init__(ledger)
         self.codec = get_codec(codec)
         self.mesh = mesh
         self.n_clients = n_clients
         self.max_staleness = max_staleness
         self.broadcast = parse_broadcast(broadcast)
+        # Population (cohort) regime: accounting serves the round's
+        # fresh cohort only (valid == participants — the device cohort
+        # is C-shaped), and ``prune`` bounds mirror memory by aging.
+        self.population = bool(population)
         self.age_bound = (_NEVER - 1 if max_staleness is None
                           else int(max_staleness))
         self.mirrors = _DeltaMirrors(n_clients)
@@ -590,8 +658,9 @@ class SPMDFusionExchange(ExchangePlane):
             # without any downlink (matters for K=1 rounds, where the
             # sole fresh entry must not be shipped back to its producer).
             self.mirrors.note_upload(k, round_idx)
+        bound = 0 if self.population else self.age_bound
         valid = [(s, r) for s, r in enumerate(self._last_upload)
-                 if r is not None and round_idx - r <= self.age_bound]
+                 if r is not None and round_idx - r <= bound]
         self.up_bytes(len(parts) * entry_bytes)
         shipped: List[int] = []
         if self.broadcast == "full":
@@ -602,6 +671,21 @@ class SPMDFusionExchange(ExchangePlane):
                 len(shipped) * (entry_bytes + DELTA_SIDECAR_BYTES)
             )
         return len(valid), len(shipped)
+
+    # ----------------------------------------------------------- aging
+
+    def prune(self, round_idx: int) -> None:
+        """Population regime only: forget the mirrors (and upload
+        stamps) of clients whose last upload is older than
+        ``max_staleness`` — mirror memory stays bounded by the working
+        set, and a re-joining client's cleared mirror just triggers the
+        normal delta catch-up."""
+        if not self.population or self.max_staleness is None:
+            return
+        for s, r in enumerate(self._last_upload):
+            if r is not None and round_idx - r > self.max_staleness:
+                self._last_upload[s] = None
+                self.mirrors.versions[s].clear()
 
     # ------------------------------------------------- snapshot / restore
 
@@ -623,6 +707,7 @@ class SPMDFusionExchange(ExchangePlane):
 
 def expected_delta_entries(schedule, n_clients: int, *,
                            max_staleness: Optional[int] = None,
+                           cohort: Optional[int] = None,
                            rounds: int = 256, seed: int = 0) -> float:
     """Mean entries shipped per delta-broadcast round under ``schedule``.
 
@@ -634,15 +719,23 @@ def expected_delta_entries(schedule, n_clients: int, *,
     the trainers ledger with — so analytic reports (e.g. the dry-run's
     ``client_boundary`` section) price the delta downlink honestly and
     cannot drift from the implementation.
+
+    With ``cohort=C`` the replay applies the engine's exact cohort draw
+    (uniform C-of-available) and accounts through a *population-regime*
+    plane, pricing the fresh-cohort downlink the cohort trainers ship.
     """
     rng = np.random.default_rng(seed)
     plane = SPMDFusionExchange(None, None, n_clients=n_clients,
                                max_staleness=max_staleness,
-                               broadcast="delta")
+                               broadcast="delta",
+                               population=cohort is not None)
     total = 0
     for t in range(rounds):
         parts = np.flatnonzero(schedule.mask(t, n_clients, rng))
+        if cohort is not None and len(parts) > cohort:
+            parts = np.sort(rng.choice(parts, size=cohort, replace=False))
         total += plane.account_round(parts, t, entry_bytes=0)[1]
+        plane.prune(t)
     return total / max(rounds, 1)
 
 

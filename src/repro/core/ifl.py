@@ -53,6 +53,7 @@ import numpy as np
 
 from repro.config import RunConfig
 from repro.core.exchange import FusionExchange
+from repro.core.population import LazyFleet
 from repro.core.report import RoundReport
 from repro.core.rounds import AsyncRoundEngine, RoundEngine
 
@@ -82,8 +83,17 @@ class Client:
 class IFLTrainer:
     def __init__(self, clients: Sequence[Client], cfg: RunConfig,
                  seed: int = 0):
-        self.clients = list(clients)
+        # A LazyFleet stays lazy (population fleets must never pay N
+        # model inits up front); concrete sequences are copied as before.
+        self.clients = (clients if isinstance(clients, LazyFleet)
+                        else list(clients))
         self.cfg = cfg
+        # Population (cohort) regime: cfg.cohort > 0 caps per-round
+        # admission at C of the N-client fleet; the plane serves the
+        # cohort's fresh uploads only and ages EF residuals/mirrors by
+        # max_staleness, so memory follows the working set, not N.
+        cohort = getattr(cfg, "cohort", 0) or None
+        self._population = cohort is not None
         # The exchange plane owns the wire side (codec + per-client EF
         # residuals + FusionCache + ledger + broadcast policy); the
         # engine owns scheduling (one rng stream for minibatch sampling
@@ -92,6 +102,7 @@ class IFLTrainer:
             cfg.codec, len(self.clients),
             (cfg.batch_size, cfg.d_fusion),
             max_staleness=cfg.max_staleness, broadcast=cfg.broadcast,
+            population=self._population,
         )
         # cfg.mode='async' swaps the engine — participants come from an
         # arrival trace coalesced per server tick instead of a schedule
@@ -99,29 +110,36 @@ class IFLTrainer:
         if getattr(cfg, "mode", "sync") == "async":
             self.engine = AsyncRoundEngine(
                 len(self.clients), cfg.trace, tick=cfg.tick, seed=seed,
-                exchange=self.exchange,
+                exchange=self.exchange, cohort=cohort,
             )
         else:
             self.engine = RoundEngine(
                 len(self.clients), cfg.participation, seed=seed,
-                exchange=self.exchange,
+                exchange=self.exchange, cohort=cohort,
             )
         self.ledger = self.engine.ledger
         self.rng = self.engine.rng
         self.codec = self.exchange.codec
+        # Jitted per-arch steps, built on a client's first participation
+        # (keyed by cid: clients sharing an arch share the jit cache) —
+        # a population fleet only ever compiles the archs its cohorts
+        # actually draw.
         self._base_step = {}
         self._mod_step = {}
         self._fwd_z = {}
-        for c in self.clients:
-            self._base_step[c.cid] = jax.jit(
-                functools.partial(self._base_step_impl, c.base_apply,
-                                  c.modular_apply, c.loss_fn)
-            )
-            self._mod_step[c.cid] = jax.jit(
-                functools.partial(self._mod_step_impl, c.modular_apply,
-                                  c.loss_fn)
-            )
-            self._fwd_z[c.cid] = jax.jit(c.base_apply)
+
+    def _ensure_steps(self, c: Client) -> None:
+        if c.cid in self._base_step:
+            return
+        self._base_step[c.cid] = jax.jit(
+            functools.partial(self._base_step_impl, c.base_apply,
+                              c.modular_apply, c.loss_fn)
+        )
+        self._mod_step[c.cid] = jax.jit(
+            functools.partial(self._mod_step_impl, c.modular_apply,
+                              c.loss_fn)
+        )
+        self._fwd_z[c.cid] = jax.jit(c.base_apply)
 
     # -- wire-pipeline views (the plane owns them; parity tests and the
     # -- quickstart's EF forensics read them here) ----------------------
@@ -176,6 +194,7 @@ class IFLTrainer:
         # convention). Absent clients are offline: no compute, no bytes.
         for k in participants:
             c = self.clients[k]
+            self._ensure_steps(c)
             step_losses = []
             for _ in range(cfg.tau):
                 x, y = self._sample(c)
@@ -254,6 +273,13 @@ class IFLTrainer:
         versions. Persist with ``repro.api.save_trainer``
         (repro.checkpoint).
         """
+        if self._population:
+            raise NotImplementedError(
+                "population-scale checkpointing (sparse slot snapshots) "
+                "is not implemented yet — see the ROADMAP's serving/"
+                "checkpoint tier; cohort runs currently restart from "
+                "round 0"
+            )
         tree = {
             "clients": [c.params for c in self.clients],
             "ef": [self.ef_state[k] for k in range(len(self.clients))],
@@ -276,22 +302,45 @@ class IFLTrainer:
 
     # ------------------------------------------------------------ eval
 
+    def _eval_slots(self, cap: int = 16) -> List[int]:
+        """Which clients to evaluate: everyone for a concrete fleet;
+        for a population fleet, a bounded probe of the touched working
+        set (evaluating 10^4 lazily-built clients would materialize
+        them all)."""
+        n = len(self.clients)
+        if not self._population:
+            return list(range(n))
+        touched = (self.clients.materialized
+                   if isinstance(self.clients, LazyFleet) else [])
+        slots = touched[:cap]
+        return slots if slots else list(range(min(cap, n)))
+
+    @property
+    def eval_matrix(self) -> bool:
+        """Whether the N x N cross-composition matrix is affordable —
+        the runner skips Fig-4 matrices for population fleets."""
+        return not self._population
+
     def evaluate(self, test_x, test_y, batch: int = 512) -> List[float]:
-        """Local end-to-end accuracy per client (eq. 10)."""
-        accs = []
-        for c in self.clients:
-            accs.append(
-                composition_accuracy(c, c, test_x, test_y, batch)
-            )
-        return accs
+        """Local end-to-end accuracy per client (eq. 10).  Population
+        fleets evaluate a bounded probe of touched slots (_eval_slots)."""
+        return [
+            composition_accuracy(self.clients[k], self.clients[k],
+                                 test_x, test_y, batch)
+            for k in self._eval_slots()
+        ]
 
     def accuracy_matrix(self, test_x, test_y, batch: int = 512) -> np.ndarray:
-        """Fig. 4: entry [k, i] = acc of base_k composed with modular_i."""
-        n = len(self.clients)
-        out = np.zeros((n, n))
-        for a, ck in enumerate(self.clients):
-            for b, ci in enumerate(self.clients):
-                out[a, b] = composition_accuracy(ck, ci, test_x, test_y, batch)
+        """Fig. 4: entry [k, i] = acc of base_k composed with modular_i.
+        Population fleets probe the bounded ``_eval_slots`` subset."""
+        slots = self._eval_slots()
+        out = np.zeros((len(slots), len(slots)))
+        for a, ka in enumerate(slots):
+            for b, kb in enumerate(slots):
+                out[a, b] = composition_accuracy(
+                    self.clients[ka], self.clients[kb], test_x, test_y,
+                    batch,
+                )
         return out
 
 

@@ -376,6 +376,28 @@ def init_ifl_state(key, cfg: ModelConfig, *, n_clients: int,
     return params, opt_state
 
 
+def init_ifl_slot_state(key, cfg: ModelConfig, *, slot: int,
+                        optimizer: str = "sgd"):
+    """ONE population slot's unstacked params + optimizer state.
+
+    The per-slot init the host-side population store
+    (``repro.core.population.PopulationStore``) pages cohorts from:
+    ``fold_in(key, slot)`` makes it a pure function of (key, slot) —
+    independent of fleet size and of every other slot — so lazy
+    materialization and post-aging re-init both reproduce exactly the
+    state a fresh slot would get.  The cohort gather stacks C of these
+    into the (C, ...) leaves the round step carries."""
+    opt = make_optimizer(optimizer)
+    params = init_lm(jax.random.fold_in(key, slot), cfg)
+    pdt = nn.dtype_of(cfg.param_dtype)
+    params = jax.tree.map(lambda a: a.astype(pdt), params)
+    opt_state = {
+        "base": opt.init(params["base"]),
+        "modular": opt.init(params["modular"]),
+    }
+    return params, opt_state
+
+
 # ------------------------------------------------------------------ dense
 
 

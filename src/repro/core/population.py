@@ -1,0 +1,196 @@
+"""Host-side population store — paged per-slot state behind fixed-shape cohorts.
+
+The device side of a population-scale run must never see N: every SPMD
+array stays cohort-shaped (``P('client', ...)`` sized C), and the eager
+trainers must never materialize N clients up front.  This module owns
+the two host-side pieces that make that possible:
+
+  PopulationStore   slot -> pytree mapping with lazy deterministic init,
+                    a gather (``page_in``: stack C slots into one
+                    cohort-shaped device tree) and a scatter
+                    (``page_out``: unstack the cohort back into exactly
+                    the slots that ran — untouched slots are bitwise
+                    untouched), plus ``max_staleness`` aging so memory
+                    is bounded by the working set, not the population.
+  LazyFleet         a Sequence of clients materialized on first touch —
+                    the eager trainers' population fleet (N=10^4 cannot
+                    afford N param inits when only C slots train/round).
+
+Determinism contract: ``init_fn(slot)`` must be a pure function of the
+slot index (e.g. ``fold_in(key, slot)``), so an entry evicted by aging
+re-initializes to exactly the state a never-seen slot would get — a
+client that ages out and rejoins is indistinguishable from a fresh one.
+
+The trainers keep *model parameters* un-aged (a real deployment holds
+them on-device at the client; the simulation's analogue is the lazy
+fleet) and age the *exchange-plane* carried state — EF residuals, delta
+mirrors, fusion-cache entries — which is what actually scales with the
+payload size (see ``repro.core.exchange``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PopulationStore", "LazyFleet"]
+
+
+class PopulationStore:
+    """Slot-indexed host store of per-slot pytrees with paged cohorts.
+
+    ``init_fn(slot)`` materializes a slot's state on first access and
+    after aging eviction; it must be deterministic in ``slot``.  Leaves
+    are stored as host numpy arrays (decoupled copies — paging out a
+    cohort never pins the cohort-shaped device buffer in memory).
+    """
+
+    def __init__(self, n_population: int,
+                 init_fn: Callable[[int], Any], *,
+                 max_staleness: Optional[int] = None):
+        if n_population < 1:
+            raise ValueError(
+                f"n_population must be >= 1, got {n_population}"
+            )
+        if max_staleness is not None and max_staleness < 0:
+            raise ValueError(
+                f"max_staleness must be >= 0, got {max_staleness}"
+            )
+        self.n_population = int(n_population)
+        self.init_fn = init_fn
+        self.max_staleness = max_staleness
+        self._state: Dict[int, Any] = {}
+        self._last_seen: Dict[int, int] = {}
+
+    # -- dict-ish surface ------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._state)
+
+    def __contains__(self, slot: int) -> bool:
+        return int(slot) in self._state
+
+    def slots(self) -> List[int]:
+        """Sorted slot indices currently materialized."""
+        return sorted(self._state)
+
+    def get(self, slot: int) -> Any:
+        """This slot's state, materializing it on first access."""
+        slot = self._check(slot)
+        if slot not in self._state:
+            self._state[slot] = jax.tree.map(
+                np.asarray, self.init_fn(slot)
+            )
+        return self._state[slot]
+
+    def put(self, slot: int, state: Any,
+            round_idx: Optional[int] = None) -> None:
+        slot = self._check(slot)
+        self._state[slot] = jax.tree.map(np.asarray, state)
+        if round_idx is not None:
+            self._last_seen[slot] = int(round_idx)
+
+    def _check(self, slot: int) -> int:
+        slot = int(slot)
+        if not 0 <= slot < self.n_population:
+            raise IndexError(
+                f"slot {slot} out of range for a population of "
+                f"{self.n_population}"
+            )
+        return slot
+
+    # -- gather / scatter ------------------------------------------------
+
+    def page_in(self, slots: Sequence[int]) -> Any:
+        """Gather: stack the given slots' trees into one cohort-shaped
+        tree with leading axis ``len(slots)`` (position i <- slots[i]).
+        Repeated slots are legal — cohort padding repeats a slot under a
+        False mask."""
+        trees = [self.get(s) for s in slots]
+        if not trees:
+            raise ValueError("page_in needs at least one slot")
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+    def page_out(self, slots: Sequence[int], cohort_tree: Any,
+                 round_idx: Optional[int] = None) -> None:
+        """Scatter: unstack cohort positions back into the store —
+        position i -> slots[i], for exactly ``len(slots)`` leading
+        positions.  Trailing cohort padding (positions beyond
+        ``len(slots)``) is dropped; slots not named are untouched.
+        Leaves are copied so no slot's state aliases the (C, ...)
+        cohort buffer."""
+        host = jax.tree.map(np.asarray, cohort_tree)
+        for i, s in enumerate(slots):
+            self.put(s, jax.tree.map(lambda a, i=i: np.array(a[i]), host),
+                     round_idx)
+
+    # -- aging -----------------------------------------------------------
+
+    def touch(self, slot: int, round_idx: int) -> None:
+        self._last_seen[self._check(slot)] = int(round_idx)
+
+    def prune(self, round_idx: int) -> List[int]:
+        """Evict slots not seen within ``max_staleness`` rounds; returns
+        the evicted slot indices.  Evicted slots re-materialize through
+        ``init_fn`` on next access (deterministic, so rejoin == fresh).
+        Slots never stamped with a round are kept — aging only applies
+        to paged traffic."""
+        if self.max_staleness is None:
+            return []
+        stale = [s for s, r in self._last_seen.items()
+                 if round_idx - r > self.max_staleness]
+        for s in stale:
+            del self._last_seen[s]
+            self._state.pop(s, None)
+        return sorted(stale)
+
+    def memory_bytes(self) -> int:
+        """Total bytes of materialized leaf arrays — what the bounded-
+        memory acceptance tests measure."""
+        total = 0
+        for tree in self._state.values():
+            total += sum(int(leaf.nbytes)
+                         for leaf in jax.tree.leaves(tree))
+        return total
+
+
+class LazyFleet(Sequence):
+    """A client list materialized on first touch.
+
+    ``build_fn(slot)`` constructs client ``slot`` (deterministic in the
+    slot index); ``len()`` reports the full population so every
+    engine/plane sized off the fleet sees N, while only the slots a
+    cohort actually draws ever pay model init.
+    """
+
+    def __init__(self, n: int, build_fn: Callable[[int], Any]):
+        if n < 1:
+            raise ValueError(f"fleet size must be >= 1, got {n}")
+        self._n = int(n)
+        self._build = build_fn
+        self._cache: Dict[int, Any] = {}
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __getitem__(self, k):
+        if isinstance(k, slice):
+            return [self[i] for i in range(*k.indices(self._n))]
+        k = int(k)
+        if k < 0:
+            k += self._n
+        if not 0 <= k < self._n:
+            raise IndexError(
+                f"client {k} out of range for a fleet of {self._n}"
+            )
+        if k not in self._cache:
+            self._cache[k] = self._build(k)
+        return self._cache[k]
+
+    @property
+    def materialized(self) -> List[int]:
+        """Sorted slot indices built so far (the touched working set)."""
+        return sorted(self._cache)

@@ -21,7 +21,23 @@ module owns everything the three eager trainers used to triplicate:
                           exchange plane (repro.core.exchange)
 
 Parse schedules from strings (the benchmarks' ``--participation`` axis):
-``full`` | ``k2`` | ``bern0.5`` | ``straggle(0.2,3)``.
+``full`` | ``k2`` | ``bern0.5`` | ``straggle(0.2,3)`` | ``zipf(1.1)`` |
+``diurnal(24,4)``.
+
+Population regime (cohort draws)
+--------------------------------
+Real deployments sample a *cohort* of C from a population of N >> C per
+round (the FedAvg/HeteroFL regime).  Both engines take a ``cohort=C``
+cap: the schedule (or arrival trace) decides who is AVAILABLE, and the
+engine admits at most C of them — a uniform draw from the available set
+in the sync engine, the C earliest distinct arrivals in the async one.
+``cohort=None`` (the default) draws nothing extra from the rng stream,
+so every pre-cohort run stays bitwise reproducible.  The population-
+scale availability schedules live here too: ``zipf(<a>)`` (popularity-
+skewed: slot k is up with probability ``(k+1)^-a``) and
+``diurnal(<period>[,<zones>])`` (deterministic time-zone waves: the
+fleet splits into equal zones, each awake for half of every
+``period``-round day, phase-shifted by zone).
 
 Event-driven (async) mode
 -------------------------
@@ -115,7 +131,10 @@ __all__ = [
     "UniformK",
     "BernoulliSchedule",
     "StragglerSchedule",
+    "ZipfSchedule",
+    "DiurnalSchedule",
     "parse_participation",
+    "expected_cohort_participants",
     "ArrivalTrace",
     "PeriodicTrace",
     "PoissonTrace",
@@ -257,42 +276,152 @@ class StragglerSchedule(ParticipationSchedule):
         return (n - n_strag) + n_strag / self.period
 
 
-_STRAGGLE_RE = re.compile(r"^straggle\(([^,]+),(\d+)\)$")
+@dataclass(frozen=True, repr=False)
+class ZipfSchedule(ParticipationSchedule):
+    """Popularity-skewed availability — the population regime's shape:
+    slot k is up independently with probability ``(k+1)^-a``, so slot 0
+    is (almost) always available and the long tail almost never is.
+    ``a=0`` degenerates to full participation; larger ``a`` thins the
+    tail faster.  Rounds with zero participants are legal."""
+
+    a: float = 1.0
+    name: str = ""
+
+    def __post_init__(self):
+        if not self.a >= 0.0:
+            raise ValueError(f"a must be >= 0, got {self.a}")
+        if not self.name:
+            object.__setattr__(self, "name", f"zipf({self.a:g})")
+
+    def mask(self, round_idx, n, rng):
+        p = (np.arange(n) + 1.0) ** (-self.a)
+        return rng.random(n) < p
+
+    def expected_participants(self, n):
+        return float(((np.arange(n) + 1.0) ** (-self.a)).sum())
+
+
+@dataclass(frozen=True, repr=False)
+class DiurnalSchedule(ParticipationSchedule):
+    """Deterministic time-zone waves (no rng draws at all): the fleet
+    splits into ``zones`` equal contiguous slices; zone z is awake for
+    the first ``ceil(period/2)`` rounds of every ``period``-round day,
+    phase-shifted by ``z * period / zones`` rounds — availability
+    sweeps around the fleet the way daylight sweeps time zones.
+    Reproducible from (round_idx, n) alone."""
+
+    period: int = 24
+    zones: int = 4
+    name: str = ""
+
+    def __post_init__(self):
+        if self.period < 2:
+            raise ValueError(f"period must be >= 2, got {self.period}")
+        if self.zones < 1:
+            raise ValueError(f"zones must be >= 1, got {self.zones}")
+        if not self.name:
+            object.__setattr__(
+                self, "name", f"diurnal({self.period},{self.zones})"
+            )
+
+    def mask(self, round_idx, n, rng):
+        zone = (np.arange(n) * self.zones) // max(n, 1)
+        phase = (round_idx - zone * self.period // self.zones) % self.period
+        return phase < (self.period + 1) // 2
+
+    def expected_participants(self, n):
+        return n * ((self.period + 1) // 2) / self.period
+
+
+# One normalization point for every ``--participation`` surface (CLI,
+# spec strings, engine constructors): strip padding once, then match
+# each family with a strict pattern so near-misses fail loudly instead
+# of int()/float() quietly accepting signs and inner whitespace
+# ('k+2' used to parse as UniformK(2) while 'k0' raised).
+_K_RE = re.compile(r"^k(\d+)$")
+_BERN_RE = re.compile(r"^bern(\d+(?:\.\d*)?(?:[eE][-+]?\d+)?)$")
+_STRAGGLE_RE = re.compile(r"^straggle\(\s*([^,\s]+)\s*,\s*(\d+)\s*\)$")
+_ZIPF_RE = re.compile(r"^zipf\(\s*([^,\s)]+)\s*\)$")
+_DIURNAL_RE = re.compile(r"^diurnal\(\s*(\d+)\s*(?:,\s*(\d+)\s*)?\)$")
 
 
 def parse_participation(
     spec: Union[str, ParticipationSchedule, None],
 ) -> ParticipationSchedule:
     """Resolve a schedule spec: ``full`` | ``k<K>`` | ``bern<p>`` |
-    ``straggle(<frac>,<period>)`` — or pass a schedule through."""
+    ``straggle(<frac>,<period>)`` | ``zipf(<a>)`` |
+    ``diurnal(<period>[,<zones>])`` — or pass a schedule through.
+    Surrounding whitespace is stripped; anything else malformed raises
+    with the exact offending spec."""
     if spec is None:
         return FullParticipation()
     if isinstance(spec, ParticipationSchedule):
         return spec
+    spec = spec.strip()
     if spec == "full":
         return FullParticipation()
+    m = _K_RE.match(spec)
+    if m:
+        return UniformK(int(m.group(1)))  # constructor errors (k<1) propagate
     if spec.startswith("k"):
         try:
-            k = int(spec[1:])
+            int(spec[1:])
         except ValueError:
-            k = None
-        if k is not None:
-            return UniformK(k)  # constructor errors (k<1) propagate
+            pass  # not int-like at all: fall through to the unknown error
+        else:
+            raise ValueError(
+                f"participation spec {spec!r}: K must be a plain positive "
+                "integer with no sign or padding (e.g. 'k2')"
+            )
+    m = _BERN_RE.match(spec)
+    if m:
+        return BernoulliSchedule(float(m.group(1)))  # p-range errors propagate
     if spec.startswith("bern"):
         try:
-            p = float(spec[len("bern"):])
+            float(spec[len("bern"):])
         except ValueError:
-            p = None
-        if p is not None:
-            return BernoulliSchedule(p)  # p-range errors propagate
+            pass
+        else:
+            raise ValueError(
+                f"participation spec {spec!r}: p must be a plain decimal "
+                "with no sign or padding (e.g. 'bern0.5')"
+            )
     m = _STRAGGLE_RE.match(spec)
     if m:
         return StragglerSchedule(float(m.group(1)), int(m.group(2)))
+    m = _ZIPF_RE.match(spec)
+    if m:
+        return ZipfSchedule(float(m.group(1)))
+    m = _DIURNAL_RE.match(spec)
+    if m:
+        return DiurnalSchedule(
+            int(m.group(1)), int(m.group(2)) if m.group(2) else 4
+        )
     raise ValueError(
         f"unknown participation spec {spec!r}; expected 'full', 'k<K>' "
-        "(e.g. k2), 'bern<p>' (e.g. bern0.5), or "
-        "'straggle(<frac>,<period>)' (e.g. straggle(0.2,3))"
+        "(e.g. k2), 'bern<p>' (e.g. bern0.5), "
+        "'straggle(<frac>,<period>)' (e.g. straggle(0.2,3)), "
+        "'zipf(<a>)' (e.g. zipf(1.1)), or "
+        "'diurnal(<period>[,<zones>])' (e.g. diurnal(24,4))"
     )
+
+
+def expected_cohort_participants(
+    schedule: Union[str, ParticipationSchedule, None], n_clients: int,
+    cohort: Optional[int] = None, *, rounds: int = 256, seed: int = 0,
+) -> float:
+    """E[participants/round] under a cohort cap, by replaying the
+    schedule's own mask draws — the population analogue of
+    ``ParticipationSchedule.expected_participants`` for the dry-run's
+    analytic client-boundary accounting (``min(K_avail, C)`` has no
+    clean closed form for the random schedules)."""
+    schedule = parse_participation(schedule)
+    rng = np.random.default_rng(seed)
+    total = 0
+    for t in range(max(rounds, 1)):
+        k = int(schedule.mask(t, n_clients, rng).sum())
+        total += min(k, cohort) if cohort is not None else k
+    return total / max(rounds, 1)
 
 
 # ---------------------------------------------------------- arrival traces
@@ -571,10 +700,18 @@ class ReplayTrace(ArrivalTrace):
         return cls(events, n_clients, path=path)
 
     def cursor(self, n, rng):
+        # A trace built without n_clients skipped the constructor's
+        # slot-range check; enforce it here instead of silently dropping
+        # the out-of-range slots' arrivals (which made a mis-sized fleet
+        # look like a quiet one).
+        if self.n_slots > n:
+            raise ValueError(
+                f"replay trace names client slot {self.n_slots - 1} but "
+                f"the fleet has only {n} clients"
+            )
         times: List[List[float]] = [[] for _ in range(n)]
         for t, s in self.events:
-            if s < n:
-                times[s].append(t)
+            times[s].append(t)
         return _ReplayCursor(times)
 
     def mean_gap(self):
@@ -653,10 +790,21 @@ class RoundEngine:
     def __init__(self, n_clients: int,
                  participation: Union[str, ParticipationSchedule, None] = None,
                  *, seed: int = 0, max_staleness: Optional[int] = None,
-                 exchange: Optional[ExchangePlane] = None):
+                 exchange: Optional[ExchangePlane] = None,
+                 cohort: Optional[int] = None):
         self.n_clients = n_clients
         self.schedule = parse_participation(participation)
         self.rng = np.random.default_rng(seed)
+        if cohort is not None:
+            cohort = int(cohort)
+            if cohort < 1:
+                raise ValueError(f"cohort must be >= 1, got {cohort}")
+            if cohort > n_clients:
+                raise ValueError(
+                    f"cohort ({cohort}) cannot exceed the population "
+                    f"({n_clients} clients)"
+                )
+        self.cohort = cohort
         if exchange is not None and max_staleness is not None:
             raise ValueError(
                 "RoundEngine: max_staleness is the exchange plane's "
@@ -677,9 +825,20 @@ class RoundEngine:
     # -- per-round API ---------------------------------------------------
 
     def participants(self) -> np.ndarray:
-        """Sorted slot indices participating in the current round."""
+        """Sorted slot indices participating in the current round.
+
+        With a ``cohort`` cap, the schedule decides who is *available*
+        and the engine admits a uniform C-of-available draw (the FedAvg
+        cohort regime).  ``cohort=None`` draws nothing extra from the
+        rng stream, so pre-cohort runs stay bitwise reproducible.
+        """
         mask = self.schedule.mask(self.round_idx, self.n_clients, self.rng)
-        return np.flatnonzero(mask)
+        avail = np.flatnonzero(mask)
+        if self.cohort is not None and len(avail) > self.cohort:
+            avail = np.sort(
+                self.rng.choice(avail, size=self.cohort, replace=False)
+            )
+        return avail
 
     def sample(self, client, batch_size: int):
         """One private minibatch from ``client`` (needs .data_x/.data_y
@@ -742,6 +901,10 @@ class RoundEngine:
         # it is what bounds the cache on long event-driven runs, where
         # eviction must not be contingent on a tick having traffic.
         self.cache.prune(self.round_idx)
+        # Population-regime planes also age per-client carried state
+        # (EF residuals, delta mirrors) out of memory; a no-op on every
+        # legacy plane.
+        self.exchange.prune(self.round_idx)
         metrics = dict(metrics)
         metrics.pop("uplink_mb", None)  # a ledger fact, not a metric
         report = RoundReport(
@@ -783,9 +946,11 @@ class AsyncRoundEngine(RoundEngine):
     def __init__(self, n_clients: int, trace: Union[str, ArrivalTrace],
                  *, tick: float = 1.0, seed: int = 0,
                  max_staleness: Optional[int] = None,
-                 exchange: Optional[ExchangePlane] = None):
+                 exchange: Optional[ExchangePlane] = None,
+                 cohort: Optional[int] = None):
         super().__init__(n_clients, "full", seed=seed,
-                         max_staleness=max_staleness, exchange=exchange)
+                         max_staleness=max_staleness, exchange=exchange,
+                         cohort=cohort)
         if not tick > 0:
             raise ValueError(f"tick must be > 0, got {tick}")
         self.trace = parse_trace(trace, n_clients)
@@ -808,7 +973,21 @@ class AsyncRoundEngine(RoundEngine):
         if self._pending is None:
             t_end = (self.round_idx + 1) * self.tick
             events = self.cursor.pop_until(t_end, self.rng)
-            slots = sorted({s for _, s in events})
+            if self.cohort is None:
+                slots = sorted({s for _, s in events})
+            else:
+                # Server at capacity: the C earliest distinct arrivals
+                # win the tick; later arrivals are turned away (their
+                # raw events still count in ``arrivals``).  Events come
+                # (time, slot)-sorted, so first-seen order IS arrival
+                # order.
+                admitted: List[int] = []
+                seen = set()
+                for _, s in events:
+                    if s not in seen:
+                        seen.add(s)
+                        admitted.append(s)
+                slots = sorted(admitted[:self.cohort])
             self._pending = (np.asarray(slots, dtype=np.int64),
                              len(events))
         return self._pending[0]
@@ -879,9 +1058,15 @@ def simulate_sync_wall_clock(
             durations.append(0.0)
             continue
         landing = max(cursor.next_after(int(p), t, rng) for p in parts)
+        if not math.isfinite(landing):
+            # The barrier never closes (e.g. a replayed log that ends
+            # mid-run): every subsequent round is stuck behind it, so
+            # the whole tail is inf — leaving t unadvanced used to make
+            # later rounds with livelier participants look finite.
+            durations.extend([math.inf] * (rounds - r))
+            break
         durations.append(landing - t)
-        if math.isfinite(landing):
-            t = landing
+        t = landing
     return durations
 
 

@@ -68,6 +68,7 @@ from repro.core.ifl_spmd import (
 from repro.core.rounds import (
     FullParticipation,
     expected_async_participants,
+    expected_cohort_participants,
     parse_participation,
     parse_trace,
 )
@@ -145,12 +146,95 @@ def _expected_async_delta_entries(trace: str, n_clients: int, tick: float,
     return total / max(ticks, 1)
 
 
+def client_boundary_section(cfg: ModelConfig, shape, *, n_clients: int,
+                            schedule, codec: str, broadcast: str,
+                            mode: str, trace: str, tick: float,
+                            n_population: int = 0, cohort: int = 0):
+    """The analytic per-round client-boundary bytes — the exact formula
+    the trainers' ledgers are pinned to.
+
+    With ``cohort=C`` (population regime) the fleet is
+    ``n_population or n_clients`` clients of which at most C
+    participate per round, the lowered program is C-shaped, and the
+    downlink serves only the round's fresh cohort uploads — so every
+    byte here scales in C, never in N.  That flatness IS the scale-out
+    claim, and this section is where the 10^4-client report states it.
+    """
+    from repro.core.exchange import expected_delta_entries
+
+    fleet_n = (n_population or n_clients) if cohort else n_clients
+    width = cohort or n_clients
+    rows_per_client = (shape.global_batch // width) * shape.seq_len
+    arrivals_exp = None
+    if mode == "async":
+        # Per-tick expectations come from the arrival trace, not the
+        # participation schedule: mean coalesced uploads (= mask
+        # popcount the lowered program sees) and raw arrival rate.
+        k_exp, arrivals_exp = expected_async_participants(
+            trace, fleet_n, tick)
+        if cohort:
+            # The engine admits the C earliest distinct arrivals;
+            # min(E[k], C) upper-bounds E[min(k, C)] — close whenever
+            # the trace is not straddling the cap.
+            k_exp = min(k_exp, float(cohort))
+    elif cohort:
+        k_exp = expected_cohort_participants(schedule, fleet_n, cohort)
+    else:
+        k_exp = schedule.expected_participants(fleet_n)
+    k_int = max(1, int(round(k_exp)))
+    # Delta downlink: mean shipped entries from a mirror-sync replay
+    # of the schedule — NOT the K-fresh best case, which only holds
+    # at full participation (rejoining clients pull catch-up
+    # entries, so partial schedules sit between K and N).
+    if broadcast != "delta":
+        e_exp = None
+    elif mode == "async":
+        e_exp = _expected_async_delta_entries(trace, fleet_n, tick)
+    else:
+        e_exp = expected_delta_entries(schedule, fleet_n,
+                                       cohort=cohort or None)
+    # Population downlink is cohort-fresh: the server broadcasts only
+    # this round's K uploads (positions re-bind every round, so there
+    # is no N-sized steady-state cache to re-ship).
+    bcast_entries = k_int if cohort else fleet_n
+    per_round = ifl_round_bytes(
+        fleet_n, rows_per_client, cfg.d_fusion, codec=codec,
+        participating=k_int, broadcast_entries=bcast_entries,
+        broadcast=broadcast,
+        delta_entries=(max(1, int(round(e_exp)))
+                       if e_exp is not None else None),
+    )
+    full_down = ifl_round_bytes(
+        fleet_n, rows_per_client, cfg.d_fusion, codec=codec,
+        participating=k_int, broadcast_entries=bcast_entries,
+    )["down"]
+    return {
+        "codec": get_codec(codec).name,
+        "participation": schedule.name,
+        "broadcast": broadcast,
+        "mode": mode,
+        "trace": (parse_trace(trace, fleet_n).name
+                  if mode == "async" else None),
+        "tick": tick if mode == "async" else None,
+        "n_population": fleet_n if cohort else None,
+        "cohort": cohort or None,
+        "expected_participants": k_exp,
+        "expected_arrivals_per_tick": arrivals_exp,
+        "expected_delta_entries": e_exp,
+        "per_round_bytes": per_round,
+        "full_broadcast_down_bytes": full_down,
+        "downlink_saving_x": full_down / max(per_round["down"], 1),
+    }
+
+
 def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
             n_clients: int, tau: int, variant: str, out_dir: str,
             force: bool = False, cfg_override=None, overrides=None,
             fsdp_override=None, codec: str = "fp32",
             participation: str = "full", broadcast: str = "full",
-            mode: str = "sync", trace: str = "", tick: float = 1.0):
+            mode: str = "sync", trace: str = "", tick: float = 1.0,
+            n_population: int = 0, cohort: int = 0,
+            accounting_only: bool = False):
     import re as _re
 
     mesh_name = "2x16x16" if multi_pod else "16x16"
@@ -167,9 +251,13 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
                                        ("p", participation, "full"),
                                        ("b", broadcast, "full"),
                                        ("m", mode, "sync"),
-                                       ("t", trace, "")):
+                                       ("t", trace, ""),
+                                       ("N", n_population, 0),
+                                       ("C", cohort, 0)):
             if value != default:
                 tag += "__" + prefix + _re.sub(r"[^\w.]+", "-", str(value))
+    if accounting_only:
+        tag += "__acct"
     if variant:
         tag += f"__{variant}"
     os.makedirs(out_dir, exist_ok=True)
@@ -182,6 +270,32 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
     cfg = cfg_override if cfg_override is not None else get_config(arch)
     if overrides:
         cfg = cfg.replace(**overrides).validate()
+    schedule = parse_participation(participation)
+
+    if accounting_only:
+        # Client-boundary bytes only, no HLO: the 10^4-client CI leg
+        # prices the wire at N=10000/C=256 in seconds — the lowered
+        # program is identical to the plain C-client masked step (the
+        # fleet size N appears nowhere in the HLO; that IS the point),
+        # so compiling it again here would measure nothing new.
+        assert shape.kind == "train" and step_kind == "ifl", \
+            "--accounting-only prices the IFL client boundary only"
+        cb = client_boundary_section(
+            cfg, shape, n_clients=n_clients, schedule=schedule,
+            codec=codec, broadcast=broadcast, mode=mode, trace=trace,
+            tick=tick, n_population=n_population, cohort=cohort)
+        result = {"arch": arch, "shape": shape_name, "step": step_kind,
+                  "accounting_only": True, "n_clients": n_clients,
+                  "client_boundary": cb}
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"[ok] {tag}: accounting only — "
+              f"fleet N={cb['n_population'] or n_clients} "
+              f"cohort C={cb['cohort'] or '-'}: "
+              f"up {cb['per_round_bytes']['up']/1e6:.2f}MB, "
+              f"down {cb['per_round_bytes']['down']/1e6:.2f}MB/round")
+        return result
+
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
     fsdp = _params_count(param_specs(cfg)) > FSDP_THRESHOLD
@@ -189,21 +303,25 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
         fsdp = fsdp_override
 
     t0 = time.time()
-    schedule = parse_participation(participation)
+    # In the population regime the device program is cohort-shaped:
+    # C stacked client slots, always masked (the round's cohort draw is
+    # a runtime mask over C positions, never a recompile), with N
+    # appearing nowhere in the HLO.
+    width = cohort or n_clients
     if shape.kind == "train" and step_kind == "ifl":
-        ifl_mesh = derive_ifl_mesh(mesh, n_clients)
+        ifl_mesh = derive_ifl_mesh(mesh, width)
         # Async mode is arrival-driven, so the lowered program is always
         # the masked cached-payload variant — the tick's participant set
         # is a runtime mask, never a recompile.
-        partial = (mode == "async" or
+        partial = (cohort > 0 or mode == "async" or
                    not isinstance(schedule, FullParticipation))
         step = make_ifl_round_step(
-            cfg, ifl_mesh, n_clients=n_clients, tau=tau, codec=codec,
+            cfg, ifl_mesh, n_clients=width, tau=tau, codec=codec,
             partial_participation=partial,
         )
-        params = param_specs(cfg, n_clients=n_clients)
+        params = param_specs(cfg, n_clients=width)
         opt_state = {"base": {}, "modular": {}}  # SGD: stateless
-        batch = train_batch_specs(cfg, shape, n_clients=n_clients, tau=tau)
+        batch = train_batch_specs(cfg, shape, n_clients=width, tau=tau)
         pspecs = param_pspecs(params, fsdp=fsdp, client_axis=True)
         in_sh = [
             tree_shardings(ifl_mesh, pspecs, params),
@@ -212,8 +330,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
                            batch),
         ]
         lower_args = [params, opt_state, batch]
-        Bc = shape.global_batch // n_clients
-        z_shape = (n_clients, Bc, shape.seq_len, cfg.d_fusion)
+        Bc = shape.global_batch // width
+        z_shape = (width, Bc, shape.seq_len, cfg.d_fusion)
         if partial:
             # The masked cached-payload program: a bool (N,) mask plus
             # the carried payload cache (shape/dtype only — eval_shape
@@ -223,9 +341,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
             # at the jit boundary.
             cache = jax.eval_shape(
                 functools.partial(init_payload_cache, codec, z_shape,
-                                  (n_clients, Bc, shape.seq_len))
+                                  (width, Bc, shape.seq_len))
             )
-            lower_args += [jax.ShapeDtypeStruct((n_clients,), jnp.bool_),
+            lower_args += [jax.ShapeDtypeStruct((width,), jnp.bool_),
                            cache]
             in_sh += [None, None]
         if get_codec(codec).has_state:
@@ -324,7 +442,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
     }[shape.kind]
     mf = model_flops(
         mf_kind, params_base=a_base, params_mod=a_mod, tokens=tokens,
-        tau=tau, n_clients=n_clients,
+        tau=tau, n_clients=width,
     )
     terms = roofline_terms(cost, coll["total"], n_chips,
                            model_flops_total=mf)
@@ -335,55 +453,10 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
     # report and the wire report cannot disagree.
     client_boundary = None
     if shape.kind == "train" and step_kind == "ifl":
-        from repro.core.exchange import expected_delta_entries
-
-        rows_per_client = (shape.global_batch // n_clients) * shape.seq_len
-        arrivals_exp = None
-        if mode == "async":
-            # Per-tick expectations come from the arrival trace, not the
-            # participation schedule: mean coalesced uploads (= mask
-            # popcount the lowered program sees) and raw arrival rate.
-            k_exp, arrivals_exp = expected_async_participants(
-                trace, n_clients, tick)
-        else:
-            k_exp = schedule.expected_participants(n_clients)
-        k_int = max(1, int(round(k_exp)))
-        # Delta downlink: mean shipped entries from a mirror-sync replay
-        # of the schedule — NOT the K-fresh best case, which only holds
-        # at full participation (rejoining clients pull catch-up
-        # entries, so partial schedules sit between K and N).
-        if broadcast != "delta":
-            e_exp = None
-        elif mode == "async":
-            e_exp = _expected_async_delta_entries(trace, n_clients, tick)
-        else:
-            e_exp = expected_delta_entries(schedule, n_clients)
-        per_round = ifl_round_bytes(
-            n_clients, rows_per_client, cfg.d_fusion, codec=codec,
-            participating=k_int, broadcast_entries=n_clients,
-            broadcast=broadcast,
-            delta_entries=(max(1, int(round(e_exp)))
-                           if e_exp is not None else None),
-        )
-        full_down = ifl_round_bytes(
-            n_clients, rows_per_client, cfg.d_fusion, codec=codec,
-            participating=k_int, broadcast_entries=n_clients,
-        )["down"]
-        client_boundary = {
-            "codec": get_codec(codec).name,
-            "participation": schedule.name,
-            "broadcast": broadcast,
-            "mode": mode,
-            "trace": (parse_trace(trace, n_clients).name
-                      if mode == "async" else None),
-            "tick": tick if mode == "async" else None,
-            "expected_participants": k_exp,
-            "expected_arrivals_per_tick": arrivals_exp,
-            "expected_delta_entries": e_exp,
-            "per_round_bytes": per_round,
-            "full_broadcast_down_bytes": full_down,
-            "downlink_saving_x": full_down / max(per_round["down"], 1),
-        }
+        client_boundary = client_boundary_section(
+            cfg, shape, n_clients=n_clients, schedule=schedule,
+            codec=codec, broadcast=broadcast, mode=mode, trace=trace,
+            tick=tick, n_population=n_population, cohort=cohort)
 
     result = {
         "arch": arch,
@@ -394,7 +467,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
         "n_chips": n_chips,
         "fsdp": fsdp,
         "tau": tau if shape.kind == "train" and step_kind == "ifl" else None,
-        "n_clients": n_clients if step_kind == "ifl" else None,
+        "n_clients": width if step_kind == "ifl" else None,
         "client_boundary": client_boundary,
         "memory": {
             "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
@@ -446,6 +519,18 @@ def main():
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--step", choices=["ifl", "dp"], default="ifl")
     ap.add_argument("--n-clients", type=int, default=4)
+    ap.add_argument("--n-population", type=int, default=0,
+                    help="fleet size N in the population regime "
+                         "(requires --cohort; 0 = fixed fleet)")
+    ap.add_argument("--cohort", type=int, default=0,
+                    help="cohort width C: the device program is C "
+                         "client slots, drawn C-of-N per round "
+                         "(0 = every client every round)")
+    ap.add_argument("--accounting-only", action="store_true",
+                    help="skip HLO lowering; emit only the analytic "
+                         "client_boundary section (the lowered program "
+                         "is C-shaped and N-independent, so the 10^4-"
+                         "client wire report needs no compile)")
     ap.add_argument("--tau", type=int, default=2,
                     help="local base steps lowered per round (paper: 10; "
                          "2 keeps dry-run HLO small, τ is a scan)")
@@ -490,6 +575,9 @@ def main():
     fsdp_override = {"on": True, "off": False, "auto": None}[args.fsdp]
     if args.mode == "async" and not args.trace:
         ap.error("--mode async requires --trace (e.g. pareto(1.2,0.5))")
+    if args.n_population and not args.cohort:
+        ap.error("--n-population requires --cohort (a 10^4-wide device "
+                 "program is the thing the population regime avoids)")
 
     combos = []
     if args.all:
@@ -516,7 +604,10 @@ def main():
                         fsdp_override=fsdp_override, codec=args.codec,
                         participation=args.participation,
                         broadcast=args.broadcast, mode=args.mode,
-                        trace=args.trace, tick=args.tick)
+                        trace=args.trace, tick=args.tick,
+                        n_population=args.n_population,
+                        cohort=args.cohort,
+                        accounting_only=args.accounting_only)
             except Exception as e:  # noqa: BLE001
                 failures.append((arch, shape, mp, repr(e)))
                 print(f"[FAIL] {arch} {shape} multi_pod={mp}: {e}")

@@ -1,0 +1,448 @@
+"""Fleet scale-out (ISSUE 7): population store, cohort engines, spec
+axes, and the async-simulation bugfixes that rode along.
+
+Covers, in order:
+  - ``parse_participation`` strict normalization (one place, tested
+    error messages: 'k+2' must never parse as k2 again),
+  - ``ReplayTrace.cursor`` slot-range regression (out-of-range slots
+    used to be silently dropped),
+  - ``simulate_sync_wall_clock`` inf-barrier propagation regression
+    (rounds after a never-closing barrier used to look finite),
+  - Zipf / diurnal population schedules + cohort expectations,
+  - ``PopulationStore`` properties (gather/scatter identity on
+    untouched slots, page-in == eager init bitwise, staleness-bounded
+    memory on a 10k-slot fleet) and ``LazyFleet``,
+  - cohort-capped sync/async engines, with the bitwise-preservation
+    guarantee that ``cohort=None`` changes nothing,
+  - ``FleetSpec`` validation + spec-hash elision at defaults,
+  - end-to-end cohort rounds for both IFL trainers with exact
+    analytic<->ledger parity.
+"""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api.runner import build_trainer
+from repro.api.spec import DataSpec, ExperimentSpec, FleetSpec
+from repro.core import ifl_round_bytes
+from repro.core.population import LazyFleet, PopulationStore
+from repro.core.rounds import (
+    AsyncRoundEngine,
+    DiurnalSchedule,
+    ParticipationSchedule,
+    ReplayTrace,
+    RoundEngine,
+    ZipfSchedule,
+    expected_cohort_participants,
+    parse_participation,
+    simulate_sync_wall_clock,
+)
+
+# ------------------------------------------------- participation parsing
+
+
+def test_parse_strips_whitespace_everywhere():
+    assert parse_participation(" full ").name == "full"
+    assert parse_participation("  k2  ").name == parse_participation(
+        "k2").name
+    assert parse_participation(" zipf( 1.1 ) ").name == "zipf(1.1)"
+    assert parse_participation(" diurnal( 24 , 4 ) ").name == \
+        "diurnal(24,4)"
+
+
+@pytest.mark.parametrize("bad", ["k+2", "k-1", "k 2"])
+def test_parse_rejects_signed_k(bad):
+    # Regression: int('+2') == 2, so 'k+2' used to parse as UniformK(2).
+    with pytest.raises(ValueError,
+                       match="plain positive integer"):
+        parse_participation(bad)
+
+
+@pytest.mark.parametrize("bad", ["bern+0.5", "bern-0.1", "bern 0.5"])
+def test_parse_rejects_signed_bern(bad):
+    with pytest.raises(ValueError, match="plain decimal"):
+        parse_participation(bad)
+
+
+def test_parse_unknown_spec_lists_every_family():
+    with pytest.raises(ValueError) as ei:
+        parse_participation("uniform5")
+    msg = str(ei.value)
+    for family in ("full", "k<K>", "bern<p>", "straggle", "zipf",
+                   "diurnal"):
+        assert family in msg
+
+
+def test_zipf_diurnal_round_trip_and_validation():
+    z = parse_participation("zipf(1.5)")
+    assert isinstance(z, ZipfSchedule) and z.a == 1.5
+    assert parse_participation(z.name).name == z.name
+    d = parse_participation("diurnal(24)")
+    assert isinstance(d, DiurnalSchedule)
+    assert (d.period, d.zones) == (24, 4)  # default zones
+    assert parse_participation(d.name).name == d.name
+    with pytest.raises(ValueError, match="a must be >= 0"):
+        ZipfSchedule(-0.5)
+    with pytest.raises(ValueError, match="period must be >= 2"):
+        DiurnalSchedule(1)
+    with pytest.raises(ValueError, match="zones must be >= 1"):
+        DiurnalSchedule(24, 0)
+
+
+def test_zipf_skews_availability_toward_low_slots():
+    rng = np.random.default_rng(0)
+    z = ZipfSchedule(1.0)
+    counts = np.zeros(64)
+    for r in range(200):
+        counts += z.mask(r, 64, rng)
+    assert counts[0] == 200  # p = 1 for slot 0
+    # The head of the popularity curve dominates the tail.
+    assert counts[:8].sum() > 4 * counts[-8:].sum()
+    assert abs(z.expected_participants(64)
+               - ((np.arange(64) + 1.0) ** -1.0).sum()) < 1e-9
+
+
+def test_diurnal_is_deterministic_waves():
+    d = DiurnalSchedule(4, 2)  # 2 zones, awake 2 of every 4 rounds
+    rng = np.random.default_rng(0)
+    masks = [d.mask(r, 8, rng) for r in range(8)]
+    # No rng draws at all: a second replay is identical.
+    rng2 = np.random.default_rng(123)
+    assert all((m == d.mask(r, 8, rng2)).all()
+               for r, m in enumerate(masks))
+    # Zone 0 (slots 0-3) awake at phase 0,1; zone 1 shifted by 2.
+    assert masks[0][:4].all() and not masks[2][:4].any()
+    assert masks[2][4:].all() and not masks[0][4:].any()
+    assert d.expected_participants(8) == 4.0
+
+
+def test_expected_cohort_participants_caps_at_cohort():
+    assert expected_cohort_participants("full", 50, 10) == 10.0
+    assert expected_cohort_participants("full", 50, None) == 50.0
+    # A thin schedule stays under the cap.
+    thin = expected_cohort_participants("bern0.05", 100, 50)
+    assert 0 < thin < 10
+
+
+# ------------------------------------------ replay-trace slot regression
+
+
+def test_replay_cursor_rejects_out_of_range_slots():
+    # Regression: a trace built WITHOUT n_clients skipped the range
+    # check, and cursor() silently dropped slot-7 arrivals on a
+    # 4-client fleet — a mis-sized fleet just looked quiet.
+    tr = ReplayTrace([(0.5, 7), (1.0, 1)])
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="slot 7.*only 4 clients"):
+        tr.cursor(4, rng)
+    cur = tr.cursor(8, rng)  # exactly wide enough is fine
+    assert cur.next_after(7, 0.0, rng) == 0.5
+
+
+def test_replay_constructor_check_still_applies():
+    with pytest.raises(ValueError, match="slot 7"):
+        ReplayTrace([(0.5, 7)], n_clients=4)
+
+
+# ------------------------------------- sync barrier inf propagation fix
+
+
+class _ScriptedSchedule(ParticipationSchedule):
+    """Everyone for two rounds, then only client 1 (who keeps
+    arriving) — the shape that exposed the finite-after-inf bug."""
+
+    name = "scripted"
+
+    def mask(self, round_idx, n, rng):
+        m = np.zeros(n, bool)
+        if round_idx < 2:
+            m[:] = True
+        else:
+            m[1] = True
+        return m
+
+    def expected_participants(self, n):
+        return float(n)
+
+
+def test_sync_wall_clock_inf_barrier_sticks():
+    # Client 0 uploads once then vanishes; client 1 keeps arriving.
+    trace = ReplayTrace(
+        [(1.0, 0), (1.0, 1), (2.0, 1), (3.0, 1), (4.0, 1)], 2)
+    durations = simulate_sync_wall_clock(
+        trace, 2, 4, participation=_ScriptedSchedule())
+    assert durations[0] == 1.0
+    # Round 1's barrier waits on client 0 forever; round 2 schedules
+    # only the live client 1, but it is STILL stuck behind round 1's
+    # unclosed barrier — the regression reported it finite.
+    assert all(math.isinf(d) for d in durations[1:])
+    assert len(durations) == 4
+
+
+def test_sync_wall_clock_finite_replay_unchanged():
+    trace = ReplayTrace([(1.0, 0), (2.0, 1), (3.0, 0), (3.5, 1)], 2)
+    durations = simulate_sync_wall_clock(trace, 2, 2)
+    assert durations == [2.0, 1.5]
+
+
+# ------------------------------------------------------ population store
+
+
+def _slot_tree(slot: int):
+    return {"w": np.full((3,), float(slot), np.float32),
+            "b": np.asarray(slot, np.int32)}
+
+
+def test_page_in_matches_eager_init_bitwise():
+    store = PopulationStore(100, _slot_tree)
+    cohort = store.page_in([7, 3, 7])  # repeats legal (mask padding)
+    assert cohort["w"].shape == (3, 3)
+    for i, s in enumerate([7, 3, 7]):
+        np.testing.assert_array_equal(np.asarray(cohort["w"][i]),
+                                      _slot_tree(s)["w"])
+        assert int(cohort["b"][i]) == s
+
+
+@given(seed=st.integers(0, 5), c=st.integers(1, 6))
+@settings(max_examples=10, deadline=None)
+def test_scatter_touches_exactly_the_named_slots(seed, c):
+    n = 32
+    store = PopulationStore(n, _slot_tree)
+    rng = np.random.default_rng(seed)
+    slots = sorted(rng.choice(n, size=c, replace=False).tolist())
+    cohort = store.page_in(slots)
+    bumped = {"w": np.asarray(cohort["w"]) + 1.0,
+              "b": np.asarray(cohort["b"])}
+    store.page_out(slots, bumped, round_idx=0)
+    for s in range(n):
+        expect = _slot_tree(s)["w"] + (1.0 if s in slots else 0.0)
+        np.testing.assert_array_equal(store.get(s)["w"], expect)
+
+
+def test_page_out_drops_trailing_padding_and_copies():
+    store = PopulationStore(10, _slot_tree)
+    slots = [4, 9]
+    padded = store.page_in(slots + [slots[0]] * 2)  # width-4 cohort
+    host = {"w": np.asarray(padded["w"]).copy(),
+            "b": np.asarray(padded["b"]).copy()}
+    store.page_out(slots, host, round_idx=1)
+    # Trailing pad positions never wrote anywhere...
+    assert store.slots() == [4, 9]
+    # ...and the stored leaves are decoupled from the cohort buffer.
+    host["w"][0, :] = -1.0
+    np.testing.assert_array_equal(store.get(4)["w"], _slot_tree(4)["w"])
+
+
+def test_store_aging_bounds_memory_on_10k_fleet():
+    store = PopulationStore(10_000, _slot_tree, max_staleness=2)
+    rng = np.random.default_rng(0)
+    peak_slots = peak_bytes = 0
+    for r in range(40):
+        slots = sorted(rng.choice(10_000, size=16, replace=False))
+        cohort = store.page_in(slots)
+        store.page_out(slots, cohort, round_idx=r)
+        store.prune(r)
+        peak_slots = max(peak_slots, len(store))
+        peak_bytes = max(peak_bytes, store.memory_bytes())
+    bound = 16 * (2 + 2)  # cohort x (staleness window + this round + 1)
+    assert peak_slots <= bound
+    per_slot = sum(leaf.nbytes
+                   for leaf in _slot_tree(0).values())
+    assert peak_bytes <= bound * per_slot
+    # Eviction re-inits deterministically: rejoin == fresh.
+    s = store.slots()[0]
+    store.put(s, {"w": np.zeros(3, np.float32),
+                  "b": np.asarray(-1, np.int32)}, round_idx=0)
+    store._last_seen[s] = -100
+    store.prune(200)
+    np.testing.assert_array_equal(store.get(s)["w"], _slot_tree(s)["w"])
+
+
+def test_store_validation():
+    with pytest.raises(ValueError, match="n_population"):
+        PopulationStore(0, _slot_tree)
+    with pytest.raises(ValueError, match="max_staleness"):
+        PopulationStore(4, _slot_tree, max_staleness=-1)
+    store = PopulationStore(4, _slot_tree)
+    with pytest.raises(IndexError, match="slot 4 out of range"):
+        store.get(4)
+    with pytest.raises(IndexError):
+        store.put(-1, _slot_tree(0))
+    with pytest.raises(ValueError, match="at least one slot"):
+        store.page_in([])
+
+
+def test_lazy_fleet_materializes_on_touch():
+    built = []
+
+    def build(k):
+        built.append(k)
+        return f"client-{k}"
+
+    fleet = LazyFleet(100, build)
+    assert len(fleet) == 100 and built == []
+    assert fleet[7] == "client-7" and fleet[-1] == "client-99"
+    assert fleet[7] == "client-7" and built == [7, 99]  # cached
+    assert fleet[2:4] == ["client-2", "client-3"]
+    assert fleet.materialized == [2, 3, 7, 99]
+    with pytest.raises(IndexError):
+        fleet[100]
+    with pytest.raises(ValueError):
+        LazyFleet(0, build)
+
+
+# ------------------------------------------------------- cohort engines
+
+
+def test_sync_engine_cohort_draw():
+    eng = RoundEngine(20, "full", seed=0, cohort=5)
+    seen = set()
+    for _ in range(10):
+        parts = eng.participants()
+        assert len(parts) == 5
+        assert (np.diff(parts) > 0).all()  # sorted, distinct
+        assert parts.min() >= 0 and parts.max() < 20
+        seen.update(int(p) for p in parts)
+        eng.end_round({})
+    assert len(seen) > 5  # the draw rotates over the population
+
+
+def test_cohort_none_is_bitwise_identical():
+    # The preservation guarantee: cohort=None must not perturb the rng
+    # stream — every legacy run replays exactly.
+    a = RoundEngine(8, "bern0.5", seed=3)
+    b = RoundEngine(8, "bern0.5", seed=3, cohort=None)
+    for _ in range(10):
+        pa, pb = a.participants(), b.participants()
+        np.testing.assert_array_equal(pa, pb)
+        a.end_round({})
+        b.end_round({})
+    assert a.rng.bit_generator.state == b.rng.bit_generator.state
+
+
+def test_cohort_wider_than_need_draws_nothing_extra():
+    # k2 of 8 never exceeds a cohort of 4: the cap must not consume rng.
+    a = RoundEngine(8, "k2", seed=1)
+    b = RoundEngine(8, "k2", seed=1, cohort=4)
+    for _ in range(6):
+        np.testing.assert_array_equal(a.participants(), b.participants())
+        a.end_round({})
+        b.end_round({})
+
+
+def test_cohort_validation():
+    with pytest.raises(ValueError, match="cohort must be >= 1"):
+        RoundEngine(8, "full", cohort=0)
+    with pytest.raises(ValueError, match="cannot exceed the population"):
+        RoundEngine(8, "full", cohort=9)
+
+
+def test_async_engine_admits_earliest_cohort():
+    trace = ReplayTrace(
+        [(0.1, 5), (0.2, 0), (0.3, 3), (0.4, 1), (1.5, 2)], 6)
+    eng = AsyncRoundEngine(6, trace, tick=1.0, cohort=2)
+    parts = eng.participants()
+    # Four distinct arrivals in tick 0; the two earliest (5 then 0) win.
+    np.testing.assert_array_equal(parts, [0, 5])
+    rep = eng.end_round({})
+    assert rep.metrics["arrivals"] == 4  # turned-away events still count
+    np.testing.assert_array_equal(eng.participants(), [2])
+
+
+# ----------------------------------------------------- spec + registry
+
+
+def test_fleet_spec_validation():
+    with pytest.raises(ValueError, match="n_population"):
+        FleetSpec(n_population=10)  # population requires a cohort
+    with pytest.raises(ValueError, match="cohort"):
+        FleetSpec(n_population=4, cohort=5)
+    with pytest.raises(ValueError):
+        FleetSpec(cohort=-1)
+    f = FleetSpec(n_population=100, cohort=8)
+    assert f.population == 100 and f.cohort_size == 8
+    assert FleetSpec().population == FleetSpec().n_clients
+    assert FleetSpec().cohort_size is None
+
+
+def test_spec_hash_elides_population_defaults():
+    # Old specs must stay addressable: at the defaults the new fleet
+    # fields vanish from the canonical dict, so every pre-cohort hash
+    # (and its cached fixture) is unchanged.
+    default = ExperimentSpec()
+    explicit = ExperimentSpec(fleet=FleetSpec(n_population=0, cohort=0))
+    assert default.spec_hash() == explicit.spec_hash()
+    d = default.to_dict()
+    assert "n_population" not in d["fleet"] and "cohort" not in d["fleet"]
+    pop = ExperimentSpec(fleet=FleetSpec(n_population=64, cohort=4))
+    assert pop.spec_hash() != default.spec_hash()
+    pd = pop.to_dict()
+    assert pd["fleet"]["n_population"] == 64
+    assert pd["fleet"]["cohort"] == 4
+    cfg = pop.run_config()
+    assert cfg.n_clients == 64 and cfg.cohort == 4
+
+
+@pytest.mark.parametrize("scheme", ["fsl", "fl1", "fl2"])
+def test_baselines_reject_population_fleets(scheme):
+    spec = ExperimentSpec(
+        scheme=scheme, rounds=1,
+        data=DataSpec(n_train=64, n_test=32),
+        fleet=FleetSpec(n_population=16, cohort=2),
+    )
+    with pytest.raises(ValueError, match="no cohort-shaped path"):
+        build_trainer(spec)
+
+
+# ------------------------------------------------- end-to-end cohorts
+
+
+def test_eager_ifl_cohort_rounds_with_parity():
+    spec = ExperimentSpec(
+        scheme="ifl", rounds=2, tau=1, batch_size=8, eval_every=0,
+        seed=0, codec="int8", max_staleness=2,
+        data=DataSpec(n_train=256, n_test=64),
+        fleet=FleetSpec(n_population=32, cohort=4),
+    )
+    trainer = build_trainer(spec)
+    for r in range(2):
+        rep = trainer.run_round()
+        assert len(rep["participants"]) == 4
+        # Cohort-fresh broadcast: the cache serves this round's uploads.
+        assert rep["cache_size"] == 4
+        exp = ifl_round_bytes(
+            32, spec.batch_size, spec.d_fusion, codec=spec.codec,
+            participating=4, broadcast_entries=4)
+        got = trainer.ledger.per_round[r]
+        assert got["up"] == exp["up"] and got["down"] == exp["down"]
+    # Only the touched slots ever paid model init.
+    assert len(trainer.clients.materialized) <= 8
+    accs = trainer.evaluate(np.zeros((8, 28, 28, 1), np.float32),
+                            np.zeros((8,), np.int32))
+    assert 0 < len(accs) <= 8
+    with pytest.raises(NotImplementedError, match="population"):
+        trainer.snapshot()
+
+
+def test_spmd_ifl_cohort_rounds_with_parity():
+    spec = ExperimentSpec(
+        scheme="ifl_spmd", rounds=2, tau=1, batch_size=2, d_fusion=32,
+        eval_every=0, seed=0,
+        data=DataSpec(dataset="synth_tokens", n_test=8),
+        fleet=FleetSpec(n_population=16, cohort=2),
+    )
+    trainer = build_trainer(spec)
+    for _ in range(2):
+        trainer.run_round()
+    assert trainer.ledger.uplink == 2 * 2 * trainer._entry_bytes
+    assert trainer.ledger.downlink == 2 * 2 * 2 * trainer._entry_bytes
+    # The population store holds exactly the slots that trained.
+    assert 2 <= len(trainer.store) <= 4
+    assert all(0 <= s < 16 for s in trainer.store.slots())
+    accs = trainer.evaluate(None, None)
+    assert 0 < len(accs) <= 2
+    with pytest.raises(NotImplementedError, match="population"):
+        trainer.snapshot()
