@@ -1,7 +1,11 @@
 """§Roofline report: aggregate results/dryrun/*.json into the per-(arch,
-shape, mesh) three-term table. Prints CSV:
+shape, mesh) three-term table, plus the wire-path HBM table — per codec,
+the bytes the fused encode kernel moves (exact DMA schedule off its
+BlockSpecs) vs the unfused jnp oracle, at every arch's d_fusion. Prints
+CSV:
 arch,shape,mesh,step,variant,compute_ms,memory_ms,collective_ms,dominant,
 model_gflops,useful_ratio,mfu_bound,temp_gb_per_chip
+codec,d_fusion,fused_hbm_bytes,oracle_hbm_bytes,payload_bytes,savings
 """
 
 from __future__ import annotations
@@ -12,6 +16,35 @@ import os
 from typing import Dict, List
 
 DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+WIRE_CODECS = ("int8_row", "int4", "topk", "sketch",
+               "ef(int4)", "ef(int8_row)")
+
+
+def wire_rows(batch: int = 1024) -> List[Dict]:
+    """Per-(codec, d_fusion) HBM traffic of the fused wire encode vs
+    the jnp oracle across the repro arch configs (analytic, no run
+    artifacts needed)."""
+    from repro.configs import ARCH_IDS, get_config
+    from repro.core.codec import get_codec
+    from repro.kernels import wire_fused
+
+    d_fusions = sorted({get_config(a).d_fusion for a in ARCH_IDS})
+    out = []
+    for name in WIRE_CODECS:
+        cd = get_codec(name)
+        for d in d_fusions:
+            hbm = wire_fused.encode_hbm_bytes(cd, (batch, d))
+            if hbm is None:
+                continue
+            out.append({
+                "codec": name, "d_fusion": d,
+                "fused_hbm_bytes": hbm["fused_bytes"],
+                "oracle_hbm_bytes": hbm["unfused_bytes"],
+                "payload_bytes": hbm["payload_bytes"],
+                "savings": 1.0 - hbm["fused_bytes"] / hbm["unfused_bytes"],
+            })
+    return out
 
 
 def load_all(dirpath: str = DRYRUN) -> List[Dict]:
@@ -56,6 +89,15 @@ def run(quiet: bool = False):
             print(",".join(
                 f"{r[c]:.3f}" if isinstance(r[c], float) else str(r[c])
                 for c in cols
+            ))
+        print()
+        wcols = ["codec", "d_fusion", "fused_hbm_bytes",
+                 "oracle_hbm_bytes", "payload_bytes", "savings"]
+        print(",".join(wcols))
+        for r in wire_rows():
+            print(",".join(
+                f"{r[c]:.3f}" if isinstance(r[c], float) else str(r[c])
+                for c in wcols
             ))
     return rs
 

@@ -80,7 +80,9 @@ __all__ = [
     "CountSketchCodec",
     "EFCodec",
     "Int4RowCodec",
+    "ef_residual_update",
     "get_codec",
+    "quantize_rows_sym",
     "register",
     "available_codecs",
 ]
@@ -115,6 +117,47 @@ class Codec:
         every existing codec works under the stateful calling
         convention without modification."""
         return self.encode(z), state
+
+    # ---- optional fused (Pallas) encode path -------------------------
+
+    def fused_spec(self, shape: Tuple[int, ...]):
+        """Describe the fused Pallas encode for a z of ``shape``.
+
+        Returns a dict (kernel name, block sizes, payload leaves) when
+        ``kernels.wire_fused`` has a single-launch encode kernel for
+        this codec at this shape, else None — the fallback rule is
+        always the jnp path, never an error. Host-level and static:
+        exchange planes and the dryrun report both key off it."""
+        from repro.kernels import wire_fused
+
+        return wire_fused.encode_spec(self, shape)
+
+    def fused_encode(self, z: jnp.ndarray, *, block_rows: Optional[int] = None,
+                     interpret: bool = False):
+        """Encode z in one Pallas kernel launch, or None if unsupported.
+
+        The payload pytree is bitwise-identical to ``encode(z)`` (leaf
+        names, shapes, dtypes, and values) — the jnp codec stays the
+        oracle and the ground truth for ``encoded_nbytes``/ledger
+        parity. Callers treat None as "use the jnp path"."""
+        from repro.kernels import wire_fused
+
+        return wire_fused.wire_encode(
+            z, self, block_rows=block_rows, interpret=interpret
+        )
+
+    def fused_encode_with_state(self, z: jnp.ndarray, state, *,
+                                block_rows: Optional[int] = None,
+                                interpret: bool = False):
+        """Stateful twin of ``fused_encode`` -> (payload, state') or None.
+
+        Stateless codecs pass the state through unchanged, mirroring
+        ``encode_with_state``; ``EFCodec`` overrides this with the
+        fused EF21 epilogue (residual update inside the kernel)."""
+        payload = self.fused_encode(
+            z, block_rows=block_rows, interpret=interpret
+        )
+        return None if payload is None else (payload, state)
 
     # ---- byte accounting ----
 
@@ -204,19 +247,50 @@ class Int8AffineCodec(Codec):
         return int(np.prod(shape)) * 1 + sidecar
 
 
-def quantize_rows_sym(y: jnp.ndarray):
-    """Symmetric per-row absmax int8: q = round(y / (absmax/127)).
+def quantize_rows_sym(y: jnp.ndarray, qmax: int = 127):
+    """Symmetric per-row absmax quantization: q = round(y / (absmax/qmax)).
 
-    THE single definition of the int8_row wire scheme — shared by
-    ``Int8RowCodec``, the jnp kernel oracle (``kernels.ref``), and the
-    fused Pallas epilogue (``kernels.fusion_proj``), so the three paths
-    cannot drift. -> (q int8, scale fp32 (..., 1))."""
+    THE single definition of the symmetric row schemes — shared by
+    ``Int8RowCodec`` (qmax=127), ``Int4RowCodec`` (qmax=7), the jnp
+    kernel oracles (``kernels.ref``), and the fused Pallas epilogues
+    (``kernels.fusion_proj`` / ``kernels.wire_fused``), so the paths
+    cannot drift. -> (q int8 in [-qmax, qmax], scale fp32 (..., 1)).
+
+    An all-zero row (dead ReLU row, or the payload cache's
+    encode(zeros) empty-slot convention) has absmax 0: its scale is
+    pinned to 1.0 so 0/scale stays an exact 0 at any compute precision
+    — never a 0/0 or a subnormal blow-up. Every path that quantizes
+    rows inherits the guard from here."""
     yf = y.astype(jnp.float32)
-    scale = jnp.maximum(
-        jnp.max(jnp.abs(yf), axis=-1, keepdims=True) / 127.0, 1e-12
+    absmax = jnp.max(jnp.abs(yf), axis=-1, keepdims=True)
+    # absmax * (1/qmax), NOT absmax / qmax: XLA rewrites division by a
+    # constant into multiply-by-reciprocal inside compiled kernels but
+    # not in op-by-op execution — writing the multiply in the source is
+    # what keeps eager oracle and fused Pallas path bitwise equal.
+    scale = jnp.where(
+        absmax > 0.0, jnp.maximum(absmax * (1.0 / qmax), 1e-12), 1.0
     )
-    q = jnp.clip(jnp.round(yf / scale), -127, 127).astype(jnp.int8)
+    q = jnp.clip(jnp.round(yf / scale), -qmax, qmax).astype(jnp.int8)
     return q, scale.astype(jnp.float32)
+
+
+def ef_residual_update(zf: jnp.ndarray, c: jnp.ndarray, z_hat: jnp.ndarray,
+                       max_ratio: Optional[float]) -> jnp.ndarray:
+    """EF21 residual + per-row trust-region clip (see ``EFCodec``).
+
+    ``zf`` is the raw fp32 fusion signal, ``c = zf + e`` the compressed
+    quantity, ``z_hat = decode(encode(c))``. Shared by
+    ``EFCodec.encode_with_state`` and the fused Pallas epilogues so the
+    two paths compute the recurrence with the exact same ops (bitwise
+    parity in interpret mode is a test gate, not a hope)."""
+    e = c - z_hat
+    if max_ratio is not None and np.isfinite(max_ratio):
+        z_norm = jnp.linalg.norm(zf, axis=-1, keepdims=True)
+        e_norm = jnp.linalg.norm(e, axis=-1, keepdims=True)
+        e = e * jnp.minimum(
+            1.0, max_ratio * z_norm / jnp.maximum(e_norm, 1e-12)
+        )
+    return e
 
 
 @dataclass(frozen=True, repr=False)
@@ -302,11 +376,7 @@ class Int4RowCodec(Codec):
     name: str = "int4"
 
     def encode(self, z):
-        zf = z.astype(jnp.float32)
-        scale = jnp.maximum(
-            jnp.max(jnp.abs(zf), axis=-1, keepdims=True) / 7.0, 1e-12
-        )
-        q = jnp.clip(jnp.round(zf / scale), -7, 7).astype(jnp.int8)
+        q, scale = quantize_rows_sym(z, qmax=7)
         if q.shape[-1] % 2:
             pad = [(0, 0)] * (q.ndim - 1) + [(0, 1)]
             q = jnp.pad(q, pad)  # zero nibble; sliced off on decode
@@ -335,19 +405,24 @@ class Int4RowCodec(Codec):
 
 @functools.lru_cache(maxsize=256)
 def _sketch_tables(d: int, w: int, seed: int):
-    """Shared (hash, sign, bucket-count) tables for a (d -> w) sketch.
+    """Shared (hash, sign, 1/bucket-count) tables for a (d -> w) sketch.
 
     Derived deterministically from (d, w, seed) with numpy at trace
     time, so encoder and decoder agree without any index sidecar on the
-    wire — the whole point of sketching vs top-k. Returned as jnp
-    constants so encode/decode stay jit/vmap-pure."""
+    wire — the whole point of sketching vs top-k. The bucket counts are
+    returned pre-inverted: decode multiplies by 1/count instead of
+    dividing, because the table is a baked constant in the jnp oracle
+    but a runtime input to the fused kernels — XLA folds a constant
+    divisor into a reciprocal-multiply, so only a shared precomputed
+    reciprocal keeps the two paths bitwise equal."""
     rng = np.random.default_rng(seed + 1_000_003 * d + w)
     h = rng.integers(0, w, size=d)
     s = (rng.integers(0, 2, size=d) * 2 - 1).astype(np.float32)
-    counts = np.maximum(np.bincount(h, minlength=w), 1).astype(np.float32)
+    counts = np.maximum(np.bincount(h, minlength=w), 1)
+    inv_counts = (1.0 / counts).astype(np.float32)
     # Cache NUMPY arrays only: converting here would capture per-trace
     # constants (tracers) in the lru_cache and leak them across jits.
-    return h.astype(np.int32), s, counts
+    return h.astype(np.int32), s, inv_counts
 
 
 @dataclass(frozen=True, repr=False)
@@ -392,8 +467,8 @@ class CountSketchCodec(Codec):
             # hash tables are keyed by d — the original shape is required.
             raise ValueError("sketch decode requires the original z shape")
         d = shape[-1]
-        h, s, counts = _sketch_tables(d, self.w_of(d), self.seed)
-        vals = payload["sketch"] / counts  # bucket means
+        h, s, inv_counts = _sketch_tables(d, self.w_of(d), self.seed)
+        vals = payload["sketch"] * inv_counts  # bucket means
         zh = vals[..., h] * s
         return zh.reshape(shape).astype(dtype or jnp.float32)
 
@@ -451,14 +526,31 @@ class EFCodec(Codec):
         c = zf + state
         payload = self.inner.encode(c)
         z_hat = self.inner.decode(payload, shape=c.shape, dtype=jnp.float32)
-        e = c - z_hat
-        if self.max_ratio is not None and np.isfinite(self.max_ratio):
-            z_norm = jnp.linalg.norm(zf, axis=-1, keepdims=True)
-            e_norm = jnp.linalg.norm(e, axis=-1, keepdims=True)
-            e = e * jnp.minimum(
-                1.0, self.max_ratio * z_norm / jnp.maximum(e_norm, 1e-12)
-            )
-        return payload, e
+        return payload, ef_residual_update(zf, c, z_hat, self.max_ratio)
+
+    # EF's stateless wire format IS the inner codec's, so the fused
+    # stateless encode delegates; the stateful one runs the EF21
+    # epilogue (inner encode + in-register decode + residual update)
+    # inside the same single kernel launch.
+
+    def fused_spec(self, shape):
+        spec = self.inner.fused_spec(shape)
+        if spec is not None:
+            spec = dict(spec, kernel=f"wire_encode[{self.name}]", ef=True)
+        return spec
+
+    def fused_encode(self, z, *, block_rows=None, interpret=False):
+        return self.inner.fused_encode(
+            z, block_rows=block_rows, interpret=interpret
+        )
+
+    def fused_encode_with_state(self, z, state, *, block_rows=None,
+                                interpret=False):
+        from repro.kernels import wire_fused
+
+        return wire_fused.wire_encode_ef(
+            z, state, self, block_rows=block_rows, interpret=interpret
+        )
 
     def encoded_nbytes(self, shape):
         return self.inner.encoded_nbytes(shape)

@@ -63,6 +63,7 @@ import numpy as np
 
 from repro.core.codec import Codec, get_codec
 from repro.core.comm import DELTA_SIDECAR_BYTES, CommLedger
+from repro.kernels import wire_fused
 
 __all__ = [
     "BROADCAST_POLICIES",
@@ -298,7 +299,8 @@ class FusionExchange(ExchangePlane):
                  max_staleness: Optional[int] = None,
                  broadcast: str = "full",
                  ledger: Optional[CommLedger] = None,
-                 population: bool = False):
+                 population: bool = False,
+                 fused: Optional[bool] = None):
         super().__init__(ledger)
         self.codec = get_codec(codec)
         self.n_clients = n_clients
@@ -314,8 +316,14 @@ class FusionExchange(ExchangePlane):
         self.mirrors = _DeltaMirrors(n_clients)
         self._last_upload: Dict[int, int] = {}
         # encode_with_state is a stateless passthrough for plain codecs,
-        # so ONE jitted encode path serves the whole registry.
-        self._encode_state = jax.jit(self.codec.encode_with_state)
+        # so ONE jitted encode path serves the whole registry.  With
+        # ``fused`` (None = auto: TPU only), the encode half dispatches
+        # to the codec's Pallas epilogue kernel; codecs without a fused
+        # scheme return None and silently keep the jnp oracle — the
+        # fallback is never an error, and payload structure/bytes are
+        # identical either way, so cache, ledger, and decode don't care.
+        self.fused, self._fused_interpret = wire_fused.resolve_fused(fused)
+        self._encode_state = jax.jit(self._encode_with_state)
         self._decode = jax.jit(
             functools.partial(
                 self.codec.decode, shape=self.z_shape, dtype=jnp.float32
@@ -331,6 +339,16 @@ class FusionExchange(ExchangePlane):
         self.ef_state: Dict[int, Any] = _LazySlotState(
             lambda slot: self.codec.init_state(self.z_shape)
         )
+
+    def _encode_with_state(self, z, state):
+        """EF-threaded encode, fused when enabled and supported."""
+        if self.fused:
+            out = self.codec.fused_encode_with_state(
+                z, state, interpret=self._fused_interpret
+            )
+            if out is not None:
+                return out
+        return self.codec.encode_with_state(z, state)
 
     # ------------------------------------------------------------ uplink
 
@@ -497,10 +515,17 @@ class SPMDFusionExchange(ExchangePlane):
                  n_clients: int, max_staleness: Optional[int] = None,
                  broadcast: str = "full",
                  ledger: Optional[CommLedger] = None,
-                 population: bool = False):
+                 population: bool = False,
+                 fused: Optional[bool] = None):
         super().__init__(ledger)
         self.codec = get_codec(codec)
         self.mesh = mesh
+        # Fused wire-path dispatch (None = auto: TPU only).  The fused
+        # encode flattens the (client, batch) leading axes into kernel
+        # rows — for the row-wise scheme family that is exactly the
+        # vmapped per-client encode, so payload leaves keep identical
+        # shapes/dtypes/bytes and the gather/cache specs are unchanged.
+        self.fused, self._fused_interpret = wire_fused.resolve_fused(fused)
         self.n_clients = n_clients
         self.max_staleness = max_staleness
         self.broadcast = parse_broadcast(broadcast)
@@ -602,12 +627,21 @@ class SPMDFusionExchange(ExchangePlane):
         """
         wire = self.codec
         if wire.has_state:
-            enc_new, ef_new = jax.vmap(wire.encode_with_state)(z, ef_state)
+            out = (wire.fused_encode_with_state(
+                z, ef_state, interpret=self._fused_interpret)
+                if self.fused else None)
+            if out is None:
+                out = jax.vmap(wire.encode_with_state)(z, ef_state)
+            enc_new, ef_new = out
             if mask is not None:
                 ef_new = _tree_where(mask, ef_new, ef_state)
             ef_state = jax.tree.map(self._ef_constrain, ef_new)
         else:
-            enc_new = jax.vmap(wire.encode)(z)
+            enc_new = (wire.fused_encode(
+                z, interpret=self._fused_interpret)
+                if self.fused else None)
+            if enc_new is None:
+                enc_new = jax.vmap(wire.encode)(z)
         if mask is None:
             enc = enc_new
             yg_src = tokens

@@ -210,3 +210,133 @@ def _kernel_quant_nobias(x_ref, w_ref, q_ref, s_ref, acc_ref, *, act: str,
                          nk: int):
     _kernel_quant(x_ref, w_ref, None, q_ref, s_ref, acc_ref, act=act,
                   nk=nk, has_bias=False)
+
+
+# ------------------------------------------------- generic codec epilogue
+
+
+def _kernel_encode(x_ref, w_ref, *refs, act: str, nk: int, has_bias: bool,
+                   ef: bool, scheme, max_ratio):
+    """Matmul with any wire scheme as the flush epilogue (+ EF21).
+
+    ``refs`` layout: [b_ref]? [e_ref]? scheme-const refs..
+    payload-leaf refs.. [e'_ref]? acc scratch last — the projection
+    result is encoded (and the EF residual updated) in-register on the
+    final K step, so the fp32 activation tile never leaves VMEM.
+    """
+    from repro.core.codec import ef_residual_update
+
+    i = 0
+    b_ref = refs[0] if has_bias else None
+    i += int(has_bias)
+    e_ref = refs[i] if ef else None
+    i += int(ef)
+    consts = {
+        name: refs[i + j][...] for j, name in enumerate(scheme.consts)
+    }
+    i += len(consts)
+    out_refs = refs[i:-1]
+    acc_ref = refs[-1]
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(1) == nk - 1)
+    def _flush():
+        y = _epilogue(acc_ref[...], b_ref[...] if has_bias else None, act)
+        c = y + e_ref[...] if ef else y
+        payload, z_hat = scheme.encode_block(c, consts)
+        for ref, name in zip(out_refs, scheme.leaf_names):
+            ref[...] = payload[name]
+        if ef:
+            out_refs[len(scheme.leaf_names)][...] = ef_residual_update(
+                y, c, z_hat, max_ratio
+            )
+
+
+def fusion_proj_encode_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: Optional[jnp.ndarray] = None,
+    act: str = "none",
+    *,
+    scheme,
+    e: Optional[jnp.ndarray] = None,
+    max_ratio: Optional[float] = None,
+    bm: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+):
+    """Projection + wire encode (+ EF21 residual update) in one launch.
+
+    The ``fusion_proj_quant_pallas`` pattern generalized over the
+    ``wire_fused`` scheme family: int4 nibble-pack, top-k select,
+    count-sketch scatter — and, with ``e`` (the carried EF residual,
+    (M, N)), the EF21 epilogue ``c = y + e``, payload = encode(c),
+    ``e' = clip(c - decode(payload))`` as an extra output. Same grid as
+    the quant kernel: (M/bm, K/bk) with the full N in-block, K
+    zero-padded to a bk multiple. Returns the payload leaf arrays in
+    scheme order (+ e' last when ``e`` is given).
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (K, K2)
+    assert scheme.d == N, (scheme.d, N)
+    bm = min(bm, M)
+    bk = min(bk, K)
+    rem = K % bk
+    if rem:
+        x = jnp.pad(x, ((0, 0), (0, bk - rem)))
+        w = jnp.pad(w, ((0, bk - rem), (0, 0)))
+        K += bk - rem
+    assert M % bm == 0, (M, bm)
+    nk = K // bk
+    ef = e is not None
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+        pl.BlockSpec((bk, N), lambda i, k: (k, 0)),
+    ]
+    args = [x, w]
+    has_bias = b is not None
+    if has_bias:
+        in_specs.append(pl.BlockSpec((N,), lambda i, k: (0,)))
+        args.append(b)
+    if ef:
+        in_specs.append(pl.BlockSpec((bm, N), lambda i, k: (i, 0)))
+        args.append(e)
+    for tbl in scheme.consts.values():
+        arr = jnp.asarray(tbl)
+        in_specs.append(
+            pl.BlockSpec(arr.shape, lambda i, k, _n=arr.ndim: (0,) * _n)
+        )
+        args.append(arr)
+
+    out_specs = [
+        pl.BlockSpec((bm, *tail), lambda i, k, _n=len(tail): (i,) + (0,) * _n)
+        for tail, _ in scheme.leaves.values()
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((M, *tail), dt)
+        for tail, dt in scheme.leaves.values()
+    ]
+    if ef:
+        out_specs.append(pl.BlockSpec((bm, N), lambda i, k: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((M, N), jnp.float32))
+
+    return pl.pallas_call(
+        functools.partial(_kernel_encode, act=act, nk=nk,
+                          has_bias=has_bias, ef=ef, scheme=scheme,
+                          max_ratio=max_ratio),
+        grid=(M // bm, nk),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((bm, N), jnp.float32)],
+        interpret=interpret,
+    )(*args)

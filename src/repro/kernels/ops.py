@@ -1,23 +1,36 @@
-"""Jitted public wrappers around the Pallas kernels.
+"""Jitted public wrappers around the Pallas kernels, plus the wire-path
+block-size autotuner.
 
 Each op dispatches: Pallas kernel on TPU (or when ``interpret=True`` for
 CPU validation), pure-jnp oracle otherwise — so the same model code runs
 everywhere and tests can assert kernel == oracle. Wrappers also handle
 layout adaptation (padding to tile multiples, GQA head expansion,
 flattening leading dims).
+
+The autotuner (``autotune_wire_blocks``) does a power-of-two search
+over (bm, bk) per (device kind, d_fusion, codec, kernel kind) and
+persists the winners to an on-disk JSON cache
+(``$REPRO_WIRE_BLOCKS_CACHE`` or ~/.cache/repro_kernels/
+wire_blocks.json). ``wire_blocks`` is the cheap read side every fused
+wrapper consults, falling back to the defaults when nothing was tuned —
+tuning is an optimization, never a requirement.
 """
 
 from __future__ import annotations
 
 import functools
+import json
+import os
+import time
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import ref, wire_fused
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.fusion_proj import (
+    fusion_proj_encode_pallas,
     fusion_proj_pallas,
     fusion_proj_quant_pallas,
 )
@@ -112,3 +125,287 @@ def rmsnorm(x, scale, *, use_kernel: bool = True, interpret: bool = False):
     else:
         y = ref.rmsnorm_ref(x2, scale)
     return y.reshape(*lead, x.shape[-1])
+
+
+# ---------------------------------------------------------- wire path
+
+
+@functools.partial(
+    jax.jit, static_argnames=("codec", "use_kernel", "interpret")
+)
+def wire_encode(z, *, codec, use_kernel: bool = True,
+                interpret: bool = False):
+    """One-launch wire encode; jnp codec when unfused/unsupported.
+
+    Payloads are bitwise-identical across the dispatch (the codec is
+    the oracle), so callers never need to know which path ran.
+    """
+    if use_kernel and (interpret or _on_tpu()):
+        blocks = wire_blocks(codec.name, z.shape[-1])
+        payload = codec.fused_encode(
+            z, block_rows=blocks.get("bm"), interpret=interpret
+        )
+        if payload is not None:
+            return payload
+    return codec.encode(z)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("act", "codec", "shape", "use_kernel", "interpret"),
+)
+def decode_proj(payload, w, b=None, act: str = "none", *, codec, shape,
+                use_kernel: bool = True, interpret: bool = False):
+    """Decode-as-prologue: act(codec.decode(payload) @ w + b).
+
+    The modular-block consumer's first matmul, with the broadcast
+    payload dequantized in-register — the fp32 (rows, d_fusion)
+    reconstruction never touches HBM. ``shape`` is the original z
+    shape; returns (*shape[:-1], N) fp32.
+    """
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    fusable = (use_kernel and (interpret or _on_tpu())
+               and wire_fused.scheme_for(codec, d) is not None
+               and wire_fused.scheme_for(codec, d).d == d
+               and w.shape[-1] % min(256, w.shape[-1]) == 0)
+    if fusable:
+        flat = {k: v.reshape(rows, -1) for k, v in payload.items()}
+        blocks = wire_blocks(codec.name, d, kind="decode_proj")
+        y = wire_fused.decode_proj_pallas(
+            flat, w, b, act, codec=codec, rows=rows, d=d,
+            block_rows=blocks.get("bm"),
+            bn=min(blocks.get("bn", 256), w.shape[-1]),
+            interpret=interpret,
+        )
+    else:
+        y = ref.decode_proj_ref(payload, w, b, act, codec=codec,
+                                shape=shape)
+        y = y.reshape(rows, -1)
+    return y.reshape(*shape[:-1], w.shape[-1])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("act", "codec", "use_kernel", "interpret"),
+)
+def fusion_proj_encode(x, w, b=None, act: str = "none", *, codec,
+                       ef_state=None, use_kernel: bool = True,
+                       interpret: bool = False):
+    """Projection + wire encode (+ EF21) as ONE kernel launch.
+
+    x: (..., K), w: (K, d_fusion) -> (payload, e') with ``ef_state``
+    (an EF codec's carried residual, shaped like the output), or just
+    the payload when ``ef_state`` is None. The fp32 activation tile
+    never reaches HBM — only the wire payload (and the residual) do.
+    Falls back to oracle projection + jnp encode when no fused scheme
+    exists for the codec at d_fusion.
+    """
+    from repro.core.codec import EFCodec
+
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    N = w.shape[-1]
+    inner = codec.inner if isinstance(codec, EFCodec) else codec
+    scheme = wire_fused.scheme_for(inner, N)
+    ef = ef_state is not None
+    e2 = ef_state.reshape(-1, N) if ef else None
+    if (use_kernel and (interpret or _on_tpu()) and scheme is not None
+            and scheme.d == N):
+        blocks = wire_blocks(codec.name, N, kind="proj_encode")
+        xp, bm, m = _pad_rows(x2, blocks.get("bm", 256))
+        ep = None
+        if ef:
+            ep = jnp.pad(e2, ((0, xp.shape[0] - m), (0, 0)))
+        outs = fusion_proj_encode_pallas(
+            xp, w, b, act, scheme=scheme, e=ep,
+            max_ratio=getattr(codec, "max_ratio", None),
+            bm=bm, bk=blocks.get("bk", 512), interpret=interpret,
+        )
+        outs = [o[:m] for o in outs]
+        payload = {
+            name: o.reshape(*lead, *tail)
+            for o, (name, (tail, _)) in zip(outs, scheme.leaves.items())
+        }
+        if ef:
+            return payload, outs[len(scheme.leaves)].reshape(*lead, N)
+        return payload
+    y = ref.fusion_proj_ref(x2, w, b, act).astype(jnp.float32)
+    if ef:
+        payload, e_new = codec.encode_with_state(y, e2)
+        payload = {k: v.reshape(*lead, *v.shape[1:])
+                   for k, v in payload.items()}
+        return payload, e_new.reshape(*lead, N)
+    payload = codec.encode(y)
+    return {k: v.reshape(*lead, *v.shape[1:]) for k, v in payload.items()}
+
+
+# ------------------------------------------------------------ autotuner
+
+
+_WIRE_BLOCK_DEFAULTS = {
+    "encode": {"bm": 256},
+    "proj_encode": {"bm": 256, "bk": 512},
+    "decode_proj": {"bm": 256, "bn": 256},
+}
+_wire_cache_mem: Optional[dict] = None
+
+
+def _wire_cache_path() -> str:
+    return os.environ.get(
+        "REPRO_WIRE_BLOCKS_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro_kernels",
+                     "wire_blocks.json"),
+    )
+
+
+def _load_wire_cache(refresh: bool = False) -> dict:
+    global _wire_cache_mem
+    if _wire_cache_mem is None or refresh:
+        try:
+            with open(_wire_cache_path()) as f:
+                _wire_cache_mem = json.load(f)
+        except (OSError, ValueError):
+            _wire_cache_mem = {}
+    return _wire_cache_mem
+
+
+def _wire_key(codec_name: str, d: int, kind: str) -> str:
+    dev = jax.devices()[0].device_kind.replace(" ", "_")
+    return f"{dev}|{kind}|{codec_name}|d{d}"
+
+
+def wire_blocks(codec_name: str, d: int, kind: str = "encode") -> dict:
+    """Block sizes for a fused wire kernel: tuned if cached, defaults
+    otherwise. Pure read side — never times anything."""
+    entry = _load_wire_cache().get(_wire_key(codec_name, d, kind))
+    if entry:
+        return {k: v for k, v in entry.items() if k in ("bm", "bn", "bk")}
+    return dict(_WIRE_BLOCK_DEFAULTS[kind])
+
+
+def autotune_wire_blocks(codec, d: int, *, kind: str = "encode",
+                         rows: int = 512, reps: int = 3,
+                         candidates=None, interpret: Optional[bool] = None,
+                         force: bool = False) -> dict:
+    """Power-of-two block search for one (codec, d_fusion, kernel kind).
+
+    Times each candidate on synthetic data (best of ``reps``) and
+    persists the winner keyed by (device kind, kind, codec, d) so later
+    runs — and other processes — get it from ``wire_blocks`` for free.
+    Returns the winning entry (also on cache hit, unless ``force``).
+    """
+    from repro.core.codec import get_codec
+
+    codec = get_codec(codec)
+    key = _wire_key(codec.name, d, kind)
+    cache = _load_wire_cache(refresh=True)
+    if key in cache and not force:
+        return cache[key]
+    if interpret is None:
+        interpret = not _on_tpu()
+    if candidates is None:
+        bms, cap = [], min(1024, max(8, rows))
+        b = 8
+        while b <= cap:
+            bms.append(b)
+            b *= 2
+        candidates = [{"bm": bm} for bm in bms]
+        if kind == "proj_encode":
+            candidates = [{"bm": bm, "bk": bk}
+                          for bm in bms for bk in (128, 256, 512)]
+
+    z = jax.random.normal(jax.random.PRNGKey(0), (rows, d), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (rows, 128), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(2), (128, d),
+                          jnp.float32) * 0.05
+    best = None
+    for cand in candidates:
+        try:
+            if kind == "encode":
+                fn = jax.jit(functools.partial(
+                    wire_fused.wire_encode, codec=codec,
+                    block_rows=cand["bm"], interpret=interpret))
+                args = (z,)
+            elif kind == "proj_encode":
+                scheme = wire_fused.scheme_for(
+                    getattr(codec, "inner", codec), d)
+                if scheme is None or scheme.d != d:
+                    break
+                fn = jax.jit(functools.partial(
+                    fusion_proj_encode_pallas, act="none", scheme=scheme,
+                    bm=cand["bm"], bk=cand["bk"], interpret=interpret))
+                args = (x, w)
+            else:  # decode_proj
+                scheme = wire_fused.scheme_for(codec, d)
+                if scheme is None or scheme.d != d:
+                    break
+                payload = codec.encode(z)
+                wd = jax.random.normal(jax.random.PRNGKey(3), (d, 256),
+                                       jnp.float32) * 0.05
+                fn = jax.jit(functools.partial(
+                    wire_fused.decode_proj_pallas, act="none", codec=codec,
+                    rows=rows, d=d, block_rows=cand["bm"],
+                    interpret=interpret))
+                args = (payload, wd)
+            jax.block_until_ready(fn(*args))  # compile outside the clock
+            t = min(
+                _timeit(fn, args) for _ in range(reps)
+            )
+        except Exception:
+            continue
+        if best is None or t < best["us"]:
+            best = dict(cand, us=round(t * 1e6, 2))
+    if best is None:
+        return dict(_WIRE_BLOCK_DEFAULTS[kind], us=None)
+    cache[key] = best
+    path = _wire_cache_path()
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(cache, f, indent=1, sort_keys=True)
+    return best
+
+
+def _timeit(fn, args) -> float:
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    return time.perf_counter() - t0
+
+
+def fused_wire_report(codec, z_shape, *, fused: bool = True) -> dict:
+    """Which wire path a spec lowers, for the dryrun client_boundary.
+
+    ``fused=False`` (or no scheme) reports the jnp oracle path; either
+    way the payload bytes and decoded values are identical, so this is
+    pure lowering metadata.
+    """
+    from repro.core.codec import get_codec
+
+    codec = get_codec(codec)
+    spec = codec.fused_spec(tuple(z_shape)) if fused else None
+    if spec is None:
+        return {
+            "fused": False,
+            "path": "jnp",
+            "kernel": None,
+            "fallback": (None if fused else "--no-fused")
+            or f"no fused scheme for codec {codec.name!r} at "
+               f"d={z_shape[-1]}",
+        }
+    traffic = wire_fused.encode_hbm_bytes(codec, tuple(z_shape)) or {}
+    return {
+        "fused": True,
+        "path": "pallas",
+        "kernel": spec["kernel"],
+        "scheme": spec["scheme"],
+        "block_rows": spec["block_rows"],
+        "grid": list(spec["grid"]),
+        "payload_leaves": spec["leaves"],
+        "hbm_bytes_fused": traffic.get("fused_bytes"),
+        "hbm_bytes_unfused": traffic.get("unfused_bytes"),
+        "proj_epilogue_blocks": wire_blocks(
+            codec.name, z_shape[-1], kind="proj_encode"),
+        "fallback": None,
+    }

@@ -47,6 +47,35 @@ def fusion_proj_quant_ref(x: jnp.ndarray, w: jnp.ndarray,
     return quantize_rows_sym(y)
 
 
+def fusion_proj_encode_ref(x: jnp.ndarray, w: jnp.ndarray,
+                           b: Optional[jnp.ndarray] = None,
+                           act: str = "none", *, codec, e=None):
+    """Projection + any registered wire codec (+ EF21), unfused.
+
+    The two-graph jnp path the fused epilogue kernels are benchmarked
+    against: the fp32 activation is materialized, then encoded by the
+    codec itself (the oracle), threading the EF residual when ``e`` is
+    given. -> payload, or (payload, e')."""
+    y = fusion_proj_ref(x, w, b, act).astype(jnp.float32)
+    if e is not None:
+        return codec.encode_with_state(y, e)
+    return codec.encode(y)
+
+
+def decode_proj_ref(payload, w: jnp.ndarray,
+                    b: Optional[jnp.ndarray] = None, act: str = "none", *,
+                    codec, shape):
+    """Unfused consumer path: decode the wire payload, then project.
+
+    act(codec.decode(payload) @ w + b) with the fp32 reconstruction
+    materialized — what ``wire_fused.decode_proj_pallas`` folds into
+    one launch. -> (*shape[:-1], N) fp32."""
+    z_hat = codec.decode(payload, shape=shape, dtype=jnp.float32)
+    return fusion_proj_ref(
+        z_hat.reshape(-1, shape[-1]), w, b, act
+    ).reshape(*shape[:-1], w.shape[-1])
+
+
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         *, causal: bool = True, window: int = -1,
                         scale: Optional[float] = None) -> jnp.ndarray:

@@ -149,7 +149,8 @@ def _expected_async_delta_entries(trace: str, n_clients: int, tick: float,
 def client_boundary_section(cfg: ModelConfig, shape, *, n_clients: int,
                             schedule, codec: str, broadcast: str,
                             mode: str, trace: str, tick: float,
-                            n_population: int = 0, cohort: int = 0):
+                            n_population: int = 0, cohort: int = 0,
+                            fused=None):
     """The analytic per-round client-boundary bytes — the exact formula
     the trainers' ledgers are pinned to.
 
@@ -208,8 +209,20 @@ def client_boundary_section(cfg: ModelConfig, shape, *, n_clients: int,
         fleet_n, rows_per_client, cfg.d_fusion, codec=codec,
         participating=k_int, broadcast_entries=bcast_entries,
     )["down"]
+    # Which encode lowering serves this spec: the fused Pallas wire
+    # kernel (name, scheme, autotuned block rows, exact DMA bytes) or
+    # the jnp oracle — with the reason when it falls back. ``fused``
+    # None = auto (TPU only); the payload bytes above are identical
+    # either way, this is pure lowering metadata.
+    from repro.kernels import ops as kernel_ops
+    from repro.kernels.wire_fused import resolve_fused
+
+    fused_on, _ = resolve_fused(fused)
+    wire_path = kernel_ops.fused_wire_report(
+        codec, (rows_per_client, cfg.d_fusion), fused=fused_on)
     return {
         "codec": get_codec(codec).name,
+        "wire_path": wire_path,
         "participation": schedule.name,
         "broadcast": broadcast,
         "mode": mode,
@@ -234,7 +247,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
             participation: str = "full", broadcast: str = "full",
             mode: str = "sync", trace: str = "", tick: float = 1.0,
             n_population: int = 0, cohort: int = 0,
-            accounting_only: bool = False):
+            accounting_only: bool = False, fused=None):
     import re as _re
 
     mesh_name = "2x16x16" if multi_pod else "16x16"
@@ -283,7 +296,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
         cb = client_boundary_section(
             cfg, shape, n_clients=n_clients, schedule=schedule,
             codec=codec, broadcast=broadcast, mode=mode, trace=trace,
-            tick=tick, n_population=n_population, cohort=cohort)
+            tick=tick, n_population=n_population, cohort=cohort,
+            fused=fused)
         result = {"arch": arch, "shape": shape_name, "step": step_kind,
                   "accounting_only": True, "n_clients": n_clients,
                   "client_boundary": cb}
@@ -456,7 +470,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
         client_boundary = client_boundary_section(
             cfg, shape, n_clients=n_clients, schedule=schedule,
             codec=codec, broadcast=broadcast, mode=mode, trace=trace,
-            tick=tick, n_population=n_population, cohort=cohort)
+            tick=tick, n_population=n_population, cohort=cohort,
+            fused=fused)
 
     result = {
         "arch": arch,
@@ -507,6 +522,10 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool, step_kind: str,
             f"down {cb['per_round_bytes']['down']/1e6:.2f}MB/round "
             f"({cb['downlink_saving_x']:.2f}x below full broadcast)"
         )
+        wp = cb["wire_path"]
+        print(f"     wire path: {wp['path']}"
+              + (f" {wp['kernel']} block_rows={wp['block_rows']}"
+                 if wp["fused"] else f" ({wp['fallback']})"))
     return result
 
 
@@ -554,6 +573,13 @@ def main():
                          "pareto(1.2,0.5) — required with --mode async")
     ap.add_argument("--tick", type=float, default=1.0,
                     help="async server fuse period in simulated seconds")
+    ap.add_argument("--fused", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="wire-path lowering for the client_boundary "
+                         "report: --fused forces the Pallas encode "
+                         "kernels, --no-fused the jnp oracle; default "
+                         "auto (fused on TPU). Payload bytes are "
+                         "identical either way")
     ap.add_argument("--variant", default="",
                     help="perf-iteration tag for §Perf experiments")
     ap.add_argument("--out", default="results/dryrun")
@@ -607,7 +633,8 @@ def main():
                         trace=args.trace, tick=args.tick,
                         n_population=args.n_population,
                         cohort=args.cohort,
-                        accounting_only=args.accounting_only)
+                        accounting_only=args.accounting_only,
+                        fused=args.fused)
             except Exception as e:  # noqa: BLE001
                 failures.append((arch, shape, mp, repr(e)))
                 print(f"[FAIL] {arch} {shape} multi_pod={mp}: {e}")

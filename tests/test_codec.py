@@ -136,7 +136,7 @@ def test_sketch_bucket_mean_decode_and_no_sidecar():
     assert set(payload) == {"sketch"}  # nothing else crosses the wire
     w = codec.w_of(64)
     assert payload["sketch"].shape == (6, w)
-    h, s, counts = _sketch_tables(64, w, codec.seed)
+    h, s, inv_counts = _sketch_tables(64, w, codec.seed)
     zn = np.asarray(z)
     # Hand-built sketch: bucket sums of the signed features.
     expect = np.zeros((6, w), np.float32)
@@ -146,7 +146,7 @@ def test_sketch_bucket_mean_decode_and_no_sidecar():
                                rtol=1e-5, atol=1e-5)
     zh = np.asarray(codec.decode(payload, shape=z.shape))
     np.testing.assert_allclose(
-        zh, (expect / counts)[:, h] * s, rtol=1e-5, atol=1e-5)
+        zh, (expect * inv_counts)[:, h] * s, rtol=1e-5, atol=1e-5)
     # Non-expansive, deterministically (not just in expectation).
     assert np.linalg.norm(zh - zn) <= np.linalg.norm(zn) + 1e-5
     # decode without the original shape must refuse (w is not

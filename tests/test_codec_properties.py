@@ -181,6 +181,45 @@ def test_ef_reduces_cumulative_bias(di, seed):
     )
 
 
+def _assert_trees_bitwise(a, b, label):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), label
+    for x, y in zip(la, lb):
+        assert x.shape == y.shape and x.dtype == y.dtype, label
+        assert np.asarray(x).tobytes() == np.asarray(y).tobytes(), label
+
+
+@pytest.mark.parametrize("name", ALL_CODECS)
+@given(seed=st.integers(0, 3), di=st.integers(0, len(_D) - 1),
+       li=st.integers(0, len(_LEADS) - 1), scale=st.floats(0.01, 8.0))
+@settings(max_examples=6, deadline=None)
+def test_fused_encode_matches_oracle(name, seed, di, li, scale):
+    """Any codec exposing a fused (Pallas) encode must be bitwise-equal
+    to its own jnp oracle — payload, sidecar, and (stateful) EF residual
+    — on every shape; None means no fused scheme and the jnp path runs,
+    never an error. The oracle is jitted because that is what the
+    exchange planes execute (op-by-op eager XLA may differ in the last
+    bit, e.g. constant-divisor reciprocal rewrites). Auto-covers any
+    codec added to the registry later."""
+    codec = get_codec(name)
+    z = _z(_LEADS[li], _D[di], seed, scale)
+    if codec.has_state:
+        e = codec.init_state(z.shape)
+        out = codec.fused_encode_with_state(z, e, interpret=True)
+        if out is None:
+            return
+        p_f, e_f = out
+        p_o, e_o = jax.jit(codec.encode_with_state)(z, e)
+        _assert_trees_bitwise(p_f, p_o, (name, z.shape, "payload"))
+        _assert_trees_bitwise(e_f, e_o, (name, z.shape, "residual"))
+    else:
+        p_f = codec.fused_encode(z, interpret=True)
+        if p_f is None:
+            return
+        p_o = jax.jit(codec.encode)(z)
+        _assert_trees_bitwise(p_f, p_o, (name, z.shape, "payload"))
+
+
 def test_ef_registry_spelling():
     ef = get_codec("ef(int8_row)")
     assert ef.name == "ef(int8_row)" and ef.has_state
