@@ -1,0 +1,238 @@
+"""Serving-plane throughput: continuous batching vs sequential (ISSUE 9).
+
+The claim: at >= 8 concurrent tenants with staggered arrivals, the
+lane engine's continuous batching (one vmapped dispatch advances every
+occupied slot a token) strictly beats serving the same trace one
+request at a time — WITHOUT giving up the correctness contract: every
+served continuation stays bitwise equal to its fixed-batch oracle (the
+request alone in an empty lane of the same width, same compiled step).
+
+The sweep runs a (lane width W) x (tenant count T) grid over the
+smoke-config composition store (one personalized base block per tenant
+sharing one modular block).  Each arm:
+
+  throughput — hot tokens/sec of the width-W engine on a staggered
+               trace vs the width-1 sequential baseline on the same
+               requests back to back.  Both are timed on a
+               ``fresh_clone`` after a throwaway compile run, so the
+               number is steady-state serving, not jit compiles.
+  latency    — p50/p99 per-token wall latency.  The engine's step-count
+               clock makes attribution exact: every Completion stamps
+               each token with its tick, the harness times each tick,
+               and a token's latency is its tick's wall duration.
+  parity     — every engine completion bitwise equal to its oracle.
+
+  PYTHONPATH=src python -m benchmarks.serving_bench --smoke --check
+
+``--check`` exits nonzero unless parity holds on every arm and every
+batched (W > 1) arm at >= 8 tenants strictly beats sequential.
+Results land in ``BENCH_serving.json`` (``--out``), a nightly artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.api.spmd import smoke_model_config
+from repro.data.synthetic import SyntheticLM
+from repro.launch.serve import build_demo_store
+from repro.serve import Request, ServeEngine
+
+
+def _requests(args, n_tenants: int, stagger: int):
+    stream = SyntheticLM(smoke_model_config().vocab_size, seed=args.seed)
+    prompts = stream.sample(n_tenants, args.prompt_len, step=0)
+    return [
+        Request(rid=i, tenant=f"tenant{i}",
+                prompt=[int(t) for t in prompts[i]],
+                max_new_tokens=args.gen, arrival=i * stagger)
+        for i in range(n_tenants)
+    ]
+
+
+def _timed_run(engine: ServeEngine, requests):
+    """Drive the engine tick by tick, timing each tick.  Returns
+    (completions, per-tick wall seconds, total wall seconds)."""
+    for r in requests:
+        engine.submit(r)
+    tick_wall, comps = [], []
+    t0 = time.perf_counter()
+    while engine.inflight > 0:
+        s = time.perf_counter()
+        comps.extend(engine.step())
+        tick_wall.append(time.perf_counter() - s)
+    total = time.perf_counter() - t0
+    return sorted(comps, key=lambda c: c.rid), tick_wall, total
+
+
+def _token_latencies(comps, tick_wall):
+    """Map every emitted token to the wall duration of its tick."""
+    lat = []
+    for c in comps:
+        lat.extend(tick_wall[t] for t in c.token_ticks)
+    return lat
+
+
+def _serve(store, requests, width: int, cache_len: int):
+    """Compile-run then hot-run on a fresh clone; returns the warm
+    engine (for oracles) plus the hot run's measurements."""
+    warm = ServeEngine(store, width=width, cache_len=cache_len)
+    warm.run(list(requests))
+    hot = warm.fresh_clone()
+    comps, tick_wall, total = _timed_run(hot, list(requests))
+    return warm, comps, tick_wall, total
+
+
+def run_arm(args, store, width: int, n_tenants: int, seq_baseline):
+    cache_len = args.prompt_len + args.gen
+    requests = _requests(args, n_tenants, args.stagger)
+    warm, comps, tick_wall, total = _serve(store, requests, width,
+                                           cache_len)
+    new_tokens = sum(len(c.tokens) for c in comps)
+    lat = _token_latencies(comps, tick_wall)
+    parity = all(
+        comps[i].tokens == warm.oracle(r).tokens
+        for i, r in enumerate(requests)
+    )
+    arm = {
+        "width": width, "tenants": n_tenants,
+        "new_tokens": new_tokens, "ticks": len(tick_wall),
+        "wall_s": total,
+        "tok_per_s": new_tokens / max(total, 1e-9),
+        "p50_token_s": float(np.percentile(lat, 50)),
+        "p99_token_s": float(np.percentile(lat, 99)),
+        "seq_tok_per_s": seq_baseline["tok_per_s"],
+        "speedup_vs_sequential":
+            (new_tokens / max(total, 1e-9)) /
+            max(seq_baseline["tok_per_s"], 1e-9),
+        "parity_exact": parity,
+    }
+    print(f"W={width:>3} T={n_tenants:>3}: "
+          f"{arm['tok_per_s']:8.1f} tok/s "
+          f"(seq {arm['seq_tok_per_s']:8.1f}, "
+          f"x{arm['speedup_vs_sequential']:.2f}), "
+          f"p50 {arm['p50_token_s']*1e3:.2f} ms "
+          f"p99 {arm['p99_token_s']*1e3:.2f} ms, "
+          f"parity {'exact' if parity else 'BROKEN'}")
+    return arm
+
+
+def run_sequential(args, store, n_tenants: int):
+    """The per-request baseline: same requests, no batching — a width-1
+    engine serves them back to back (arrivals zeroed so it never idles
+    waiting on the stagger; it is purely serialized decode)."""
+    cache_len = args.prompt_len + args.gen
+    requests = [
+        Request(rid=r.rid, tenant=r.tenant, prompt=r.prompt,
+                max_new_tokens=r.max_new_tokens, arrival=0)
+        for r in _requests(args, n_tenants, args.stagger)
+    ]
+    _, comps, tick_wall, total = _serve(store, requests, 1, cache_len)
+    new_tokens = sum(len(c.tokens) for c in comps)
+    lat = _token_latencies(comps, tick_wall)
+    base = {
+        "tenants": n_tenants, "new_tokens": new_tokens,
+        "wall_s": total,
+        "tok_per_s": new_tokens / max(total, 1e-9),
+        "p50_token_s": float(np.percentile(lat, 50)),
+        "p99_token_s": float(np.percentile(lat, 99)),
+    }
+    print(f"seq T={n_tenants:>3}: {base['tok_per_s']:8.1f} tok/s "
+          f"(width-1, back to back)")
+    return base
+
+
+def run(args):
+    cfg = smoke_model_config()
+    max_t = max(args.tenants)
+    print(f"serving sweep: widths {sorted(args.widths)} x tenants "
+          f"{sorted(args.tenants)}, prompt {args.prompt_len} + gen "
+          f"{args.gen}, stagger {args.stagger} ticks")
+    store = build_demo_store(cfg, cfg.name, max_t, seed=args.seed)
+
+    arms, baselines = [], {}
+    for t in sorted(args.tenants):
+        baselines[t] = run_sequential(args, store, t)
+        for w in sorted(args.widths):
+            arms.append(run_arm(args, store, w, t, baselines[t]))
+
+    result = {
+        "widths": sorted(args.widths), "tenants": sorted(args.tenants),
+        "prompt_len": args.prompt_len, "gen": args.gen,
+        "stagger": args.stagger, "seed": args.seed, "smoke": args.smoke,
+        "arch": cfg.name,
+        "sequential": [baselines[t] for t in sorted(args.tenants)],
+        "arms": arms,
+    }
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+        print(f"wrote {args.out}")
+
+    if args.check:
+        failures = []
+        if not all(a["parity_exact"] for a in arms):
+            failures.append("served output != fixed-batch oracle "
+                            "(bitwise contract broken)")
+        checked = [a for a in arms
+                   if a["tenants"] >= 8 and a["width"] > 1]
+        if not checked:
+            failures.append("no batched arm at >= 8 tenants to check "
+                            "(widen --tenants/--widths)")
+        for a in checked:
+            if a["tok_per_s"] <= a["seq_tok_per_s"]:
+                failures.append(
+                    f"engine does not beat sequential at W={a['width']} "
+                    f"T={a['tenants']}: {a['tok_per_s']:.1f} <= "
+                    f"{a['seq_tok_per_s']:.1f} tok/s")
+        if failures:
+            for msg in failures:
+                print(f"CHECK FAILED: {msg}")
+            raise SystemExit(1)
+        print("all serving acceptance checks passed")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--widths", type=int, nargs="+", default=[2, 4, 8],
+                    help="lane widths W to sweep")
+    ap.add_argument("--tenants", type=int, nargs="+", default=[8, 16],
+                    help="concurrent tenant counts T to sweep")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--stagger", type=int, default=2,
+                    help="ticks between consecutive arrivals")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-long CI mode: one batched width, "
+                         "8 tenants, short generations")
+    ap.add_argument("--nightly", action="store_true",
+                    help="the full W x T grid at longer generations")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless every arm is bitwise "
+                         "equal to its oracle and every batched arm "
+                         "at >= 8 tenants beats sequential tok/s")
+    ap.add_argument("--out", default="results/bench/BENCH_serving.json")
+    args = ap.parse_args()
+    if args.smoke:
+        # Decode-bound lengths: prefill cost is identical in both arms,
+        # so short generations understate the batching win.
+        args.widths = [8]
+        args.tenants = [8]
+        args.gen = 48
+    elif args.nightly:
+        args.widths = [2, 4, 8]
+        args.tenants = [8, 16]
+        args.gen = 48
+    run(args)
+
+
+if __name__ == "__main__":
+    main()

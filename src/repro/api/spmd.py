@@ -360,16 +360,36 @@ class SPMDIFLTrainer:
     def snapshot(self):
         """(array pytree, JSON-able aux) — Trainer-protocol state.
 
-        Unlike the eager IFL trainer, the payload cache here is
-        fixed-shape carried state, so it checkpoints exactly; resume is
-        bitwise even mid-partial-participation."""
+        Legacy (cohort=0): the payload cache is fixed-shape carried
+        state, so it checkpoints exactly; resume is bitwise even
+        mid-partial-participation.  Population mode: a SPARSE slot
+        snapshot — only the slots the cohorts actually materialized in
+        the host-side ``PopulationStore`` (params/opt, plus aged EF
+        residuals) are written, keyed by slot id, with the slot list and
+        last-seen rounds riding in the aux.  Restore pages them back in
+        bitwise; untouched slots re-materialize through the store's
+        deterministic ``init_fn``, exactly as they would have in the
+        original run — which is also what makes a trained population
+        run exportable as a serving artifact
+        (``CompositionStore.from_spmd_trainer``)."""
         if self._population:
-            raise NotImplementedError(
-                "population-scale checkpointing (sparse slot snapshots) "
-                "is not implemented yet — see the ROADMAP's serving/"
-                "checkpoint tier; cohort runs currently restart from "
-                "round 0"
-            )
+            state, last_seen = self.store.snapshot_state()
+            tree = {"slots": {str(s): t for s, t in state.items()}}
+            pop = {
+                "slots": sorted(state),
+                "last_seen": {str(s): r for s, r in last_seen.items()},
+                "last_cohort": list(self._last_cohort),
+            }
+            if self.ef_store is not None:
+                ef_state, ef_seen = self.ef_store.snapshot_state()
+                tree["ef_slots"] = {str(s): t
+                                    for s, t in ef_state.items()}
+                pop["ef_slots"] = sorted(ef_state)
+                pop["ef_last_seen"] = {str(s): r
+                                       for s, r in ef_seen.items()}
+            aux = self.engine.aux_state()
+            aux["population"] = pop
+            return tree, aux
         tree = {"params": self.params, "opt": self.opt_state}
         if self.ef_state is not None:
             tree["ef"] = self.ef_state
@@ -377,7 +397,38 @@ class SPMDIFLTrainer:
             tree["cache"] = self.cache
         return tree, self.engine.aux_state()
 
+    def snapshot_template(self, extra):
+        """Shape/dtype template matching a SAVED checkpoint — consulted
+        by ``load_trainer`` BEFORE restore.  Sparse population
+        checkpoints depend on which slots the saved run had touched, so
+        a fresh trainer cannot use its own (empty) snapshot as the
+        template; materialize exactly the saved slot list through the
+        store's deterministic ``init_fn`` instead."""
+        if not self._population:
+            return self.snapshot()[0]
+        pop = extra.get("population", {})
+        tree = {"slots": {
+            str(int(s)): jax.tree.map(np.asarray, self.store.init_fn(int(s)))
+            for s in pop.get("slots", [])
+        }}
+        if self.ef_store is not None:
+            tree["ef_slots"] = {
+                str(int(s)): jax.tree.map(np.asarray,
+                                          self.ef_store.init_fn(int(s)))
+                for s in pop.get("ef_slots", [])
+            }
+        return tree
+
     def restore(self, tree, aux) -> None:
+        if self._population:
+            pop = aux["population"]
+            self.store.restore_state(tree["slots"], pop["last_seen"])
+            if self.ef_store is not None:
+                self.ef_store.restore_state(tree.get("ef_slots", {}),
+                                            pop.get("ef_last_seen", {}))
+            self._last_cohort = [int(s) for s in pop.get("last_cohort", [])]
+            self.engine.restore_aux(aux)
+            return
         self.params = tree["params"]
         self.opt_state = tree["opt"]
         if self.ef_state is not None:

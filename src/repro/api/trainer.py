@@ -60,8 +60,18 @@ def load_trainer(path: str, trainer: Trainer) -> Trainer:
     the flattened checkpoint is validated against — restoring across a
     different spec (other fleet, other codec state shape) fails loudly
     instead of silently mixing states.
+
+    Trainers whose snapshot STRUCTURE depends on run history — the
+    population trainers' sparse slot snapshots — expose
+    ``snapshot_template(extra)``: the manifest's aux is read FIRST so
+    the template can materialize exactly the slots the saved run had
+    touched.
     """
-    template, _ = trainer.snapshot()
+    extra = load_extra(path)
+    if hasattr(trainer, "snapshot_template"):
+        template = trainer.snapshot_template(extra)
+    else:
+        template, _ = trainer.snapshot()
     tree = load_checkpoint(path, template)
-    trainer.restore(tree, load_extra(path))
+    trainer.restore(tree, extra)
     return trainer

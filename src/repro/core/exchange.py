@@ -723,6 +723,28 @@ class SPMDFusionExchange(ExchangePlane):
 
     # ------------------------------------------------- snapshot / restore
 
+    def cache_tree(self, cache: Dict[str, Any],
+                   z_shape: Tuple[int, ...]) -> Dict[str, Any]:
+        """Eager-style view of the carried payload cache — the serving
+        plane's deployable fusion state.
+
+        ``cache`` is the in-program carry (``init_payload_cache``
+        layout: encoded payload + token labels + ages); ``z_shape`` one
+        client's fusion-output shape.  Decodes every slot's payload to
+        ``z_hat`` so the artifact matches ``FusionExchange.cache_tree``
+        ({payload, z_hat, y}) with the ``age`` vector riding along to
+        mark which slots are real (age <= ``age_bound``)."""
+        zg = jax.vmap(
+            lambda p: self.codec.decode(p, shape=tuple(z_shape),
+                                        dtype=jnp.float32)
+        )(cache["payload"])
+        return {
+            "payload": cache["payload"],
+            "z_hat": zg,
+            "y": cache["tokens"],
+            "age": cache["age"],
+        }
+
     def aux_state(self) -> Dict[str, Any]:
         return {
             "last_upload": list(self._last_upload),

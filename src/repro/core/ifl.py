@@ -274,12 +274,7 @@ class IFLTrainer:
         (repro.checkpoint).
         """
         if self._population:
-            raise NotImplementedError(
-                "population-scale checkpointing (sparse slot snapshots) "
-                "is not implemented yet — see the ROADMAP's serving/"
-                "checkpoint tier; cohort runs currently restart from "
-                "round 0"
-            )
+            return self._snapshot_population()
         tree = {
             "clients": [c.params for c in self.clients],
             "ef": [self.ef_state[k] for k in range(len(self.clients))],
@@ -287,7 +282,61 @@ class IFLTrainer:
         }
         return tree, self.engine.aux_state()
 
+    def _snapshot_population(self):
+        """Sparse population snapshot: only the materialized working
+        set — touched clients' params, their EF residuals, and the
+        server cache's live entries — keyed by slot id, with slot lists
+        and entry rounds in the aux.  Memory and checkpoint size follow
+        the working set, never N."""
+        touched = (self.clients.materialized
+                   if isinstance(self.clients, LazyFleet)
+                   else list(range(len(self.clients))))
+        ef_slots = sorted(int(k) for k in self.ef_state)
+        entries = self.exchange.cache._entries
+        tree = {
+            "clients": {str(k): self.clients[k].params for k in touched},
+            "ef": {str(k): self.ef_state[k] for k in ef_slots},
+            "cache": {str(s): {"payload": e.payload, "z_hat": e.z_hat,
+                               "y": e.y}
+                      for s, e in sorted(entries.items())},
+        }
+        aux = self.engine.aux_state()
+        aux["population"] = {
+            "clients": [int(k) for k in touched],
+            "ef": ef_slots,
+            "cache_rounds": {str(s): int(e.round_idx)
+                             for s, e in entries.items()},
+            "last_upload": {str(s): int(r)
+                            for s, r in self.exchange._last_upload.items()},
+        }
+        return tree, aux
+
+    def snapshot_template(self, extra):
+        """Shape template matching a SAVED checkpoint (``load_trainer``
+        hook).  A fresh population trainer has touched nothing, so its
+        own snapshot cannot serve as the template — materialize exactly
+        the saved slot lists instead (lazy init is deterministic, so
+        the shapes are the saved run's shapes)."""
+        if not self._population:
+            return self.snapshot()[0]
+        pop = extra.get("population", {})
+        z0 = jnp.zeros(self.exchange.z_shape, jnp.float32)
+        empty_payload = self.codec.encode(z0)
+        y0 = np.zeros((self.exchange.z_shape[0],), np.int64)
+        return {
+            "clients": {str(int(k)): self.clients[int(k)].params
+                        for k in pop.get("clients", [])},
+            "ef": {str(int(k)): self.ef_state[int(k)]
+                   for k in pop.get("ef", [])},
+            "cache": {str(int(s)): {"payload": empty_payload,
+                                    "z_hat": z0, "y": y0}
+                      for s in pop.get("cache_rounds", {})},
+        }
+
     def restore(self, tree, aux) -> None:
+        if self._population:
+            self._restore_population(tree, aux)
+            return
         for k, (c, p, e) in enumerate(
                 zip(self.clients, tree["clients"], tree["ef"])):
             c.params = p
@@ -299,6 +348,27 @@ class IFLTrainer:
         cache_rounds = aux.get("exchange", {}).get("cache_rounds")
         if tree.get("cache") is not None and cache_rounds is not None:
             self.exchange.restore_cache(tree["cache"], cache_rounds)
+
+    def _restore_population(self, tree, aux) -> None:
+        from repro.core.exchange import CacheEntry
+
+        for k, p in tree["clients"].items():
+            self.clients[int(k)].params = p
+        for k, e in tree.get("ef", {}).items():
+            self.ef_state[int(k)] = e
+        self.engine.restore_aux(aux)  # clears the cache in place ...
+        pop = aux["population"]
+        rounds = pop.get("cache_rounds", {})
+        self.exchange.cache._entries = {
+            int(s): CacheEntry(payload=sub["payload"],
+                               z_hat=sub["z_hat"], y=sub["y"],
+                               round_idx=int(rounds[s]))
+            for s, sub in tree.get("cache", {}).items()
+        }
+        self.exchange._last_upload = {
+            int(s): int(r)
+            for s, r in pop.get("last_upload", {}).items()
+        }
 
     # ------------------------------------------------------------ eval
 

@@ -147,6 +147,27 @@ class PopulationStore:
             self._state.pop(s, None)
         return sorted(stale)
 
+    # -- snapshot / restore ---------------------------------------------
+
+    def snapshot_state(self):
+        """Sparse host view for checkpointing: ``({slot: tree}, {slot:
+        last_seen_round})`` over exactly the materialized slots.  The
+        trees are the store's own numpy copies — serialize before
+        mutating further."""
+        return ({s: self._state[s] for s in sorted(self._state)},
+                dict(self._last_seen))
+
+    def restore_state(self, state, last_seen) -> None:
+        """Inverse of ``snapshot_state`` (slot keys may arrive as str —
+        JSON round-trips them that way)."""
+        self._state = {
+            self._check(int(s)): jax.tree.map(np.asarray, t)
+            for s, t in state.items()
+        }
+        self._last_seen = {
+            self._check(int(s)): int(r) for s, r in last_seen.items()
+        }
+
     def memory_bytes(self) -> int:
         """Total bytes of materialized leaf arrays — what the bounded-
         memory acceptance tests measure."""

@@ -82,6 +82,88 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         ).astype(o_ref.dtype)
 
 
+def _decode_kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, nk: int):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]  # (1, hd)
+    s = jnp.dot(
+        q, k_ref[...].T, preferred_element_type=jnp.float32
+    ) * scale  # (1, bk)
+    # Causality and the ring-buffer window arrive pre-folded into the
+    # validity row (slot_pos semantics) — no index arithmetic here.
+    mask = (valid_ref[...] != 0).reshape(1, -1)
+    s = jnp.where(mask, s, NEG)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None]) * mask.astype(jnp.float32)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[...],
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[...] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+
+
+def flash_decode_pallas(
+    q: jnp.ndarray,      # (BH, hd) — one query row per batch*head
+    k: jnp.ndarray,      # (BH, L, hd) KV cache
+    v: jnp.ndarray,      # (BH, L, hd)
+    valid: jnp.ndarray,  # (BH, L) int32/bool — live cache rows
+    *,
+    scale: Optional[float] = None,
+    bk: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Serving decode step as a flash kernel: one query token attends to
+    the whole KV cache, grid (BH, L/bk) with the fp32 (m, l, acc) running
+    scratch carried across kv blocks exactly as in the full-sequence
+    kernel above.  Fully-masked rows flush zeros (the jnp oracle returns
+    the uniform mean of v there instead — in real decode the row is
+    unreachable because ``attn_decode`` always marks the just-written
+    token valid, and empty serving slots carry an all-zero cache)."""
+    BH, hd = q.shape
+    L = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    bk = min(bk, L)
+    assert L % bk == 0, (L, bk)
+    nk = L // bk
+
+    kern = functools.partial(_decode_kernel, scale=scale, nk=nk)
+    out = pl.pallas_call(
+        kern,
+        grid=(BH, nk),
+        in_specs=[
+            pl.BlockSpec((None, 1, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((None, bk, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((None, bk, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((None, bk), lambda b, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((None, 1, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, 1, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q[:, None, :], k, v, valid.astype(jnp.int32))
+    return out[:, 0]
+
+
 def flash_attention_pallas(
     q: jnp.ndarray,  # (BH, S, hd)
     k: jnp.ndarray,

@@ -28,7 +28,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref, wire_fused
-from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention import (
+    flash_attention_pallas,
+    flash_decode_pallas,
+)
 from repro.kernels.fusion_proj import (
     fusion_proj_encode_pallas,
     fusion_proj_pallas,
@@ -111,6 +114,45 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = -1,
         )
         return out.reshape(B, H, S, hd)
     return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def cached_attn_decode(q, k, v, valid, *, use_kernel: bool = True,
+                       interpret: bool = False):
+    """Single-token attention against a KV cache — the serving decode
+    path's dispatch point.
+
+    q: (B, 1, KVH, G, hd) grouped query (G = H/KVH); k, v: (B, L, KVH,
+    hd) cache; valid: (B, L) bool live-row mask (causality and the
+    ring-buffer window pre-folded via slot_pos).  Pallas flash-decode
+    kernel on TPU (or ``interpret=True`` for CPU validation) when the
+    cache tiles align; pure-jnp oracle otherwise — which on CPU is
+    bit-for-bit the historical ``attn_decode`` math, so the serving
+    plane's bitwise parity contract holds on the fallback path.
+    """
+    B, _, kvh, g, hd = q.shape
+    L = k.shape[1]
+    bk = min(256, L)
+    eligible = (
+        use_kernel
+        and (interpret or (_on_tpu() and hd in (64, 128, 256)))
+        and L % bk == 0
+    )
+    if eligible:
+        H = kvh * g
+        qf = q.reshape(B, 1, H, hd).transpose(0, 2, 1, 3)  # (B,H,1,hd)
+        kf = jnp.repeat(k, g, axis=2).transpose(0, 2, 1, 3)  # (B,H,L,hd)
+        vf = jnp.repeat(v, g, axis=2).transpose(0, 2, 1, 3)
+        validf = jnp.broadcast_to(valid[:, None], (B, H, L))
+        out = flash_decode_pallas(
+            qf.reshape(B * H, hd),
+            kf.reshape(B * H, L, hd),
+            vf.reshape(B * H, L, hd),
+            validf.reshape(B * H, L),
+            bk=bk, interpret=interpret,
+        )
+        return out.reshape(B, H, hd).reshape(B, kvh, g, hd)[:, None]
+    return ref.cached_attn_decode_ref(q, k, v, valid)
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))

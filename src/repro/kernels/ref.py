@@ -95,6 +95,29 @@ def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
 
 
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def cached_attn_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           valid: jnp.ndarray,
+                           scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-token attention against a KV cache — the serving decode
+    oracle, math-identical to the historical in-line form in
+    ``repro.models.attention.attn_decode``.
+
+    q: (B, 1, KVH, G, hd) grouped query; k, v: (B, L, KVH, hd) cache;
+    valid: (B, L) bool — which cache rows are live for each batch row
+    (slot_pos semantics: causal + ring-buffer window already folded in).
+    Returns (B, 1, KVH, G, hd).
+    """
+    hd = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v)
+
+
 def rmsnorm_ref(x: jnp.ndarray, scale: jnp.ndarray,
                 eps: float = 1e-6) -> jnp.ndarray:
     xf = x.astype(jnp.float32)

@@ -1,12 +1,14 @@
-"""Serving launcher: batched greedy decoding with a KV/state cache.
+"""Serving launcher: the multi-tenant continuous-batching engine CLI.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-      --reduced --batch 4 --prompt-len 32 --gen 32
+      --reduced --tenants 4 --prompt-len 32 --gen 32
 
-Prefill is executed through the same cached decode path the dry-run
-lowers for decode_32k/long_500k (token-at-a-time), so serving semantics
-match serve_step exactly; for the modular-composition serving demo see
-examples/compose_inference.py.
+Decoder-only archs route through ``repro.serve.ServeEngine``: one
+personalized base block per tenant + the shared modular block, per-arch
+batch lanes, admit-on-slot-free. Enc-dec archs (cross-attention needs
+per-request encoder K/V plumbing the lane model does not carry yet)
+fall back to the fixed-batch ``generate`` path below, whose prefill is
+now ONE jitted ``lm_prefill`` scan instead of O(prompt_len) dispatches.
 """
 
 from __future__ import annotations
@@ -27,22 +29,28 @@ from repro.models.transformer import (
     init_decode_cache,
     init_lm,
     lm_decode_step,
+    lm_prefill,
 )
 
 
 def generate(params, cfg: ModelConfig, prompts: jnp.ndarray, gen: int,
              cross_kvs=None, greedy: bool = True, seed: int = 0):
-    """prompts: (B, P) int32 -> (B, P + gen) tokens."""
+    """prompts: (B, P) int32 -> (B, P + gen) tokens.
+
+    Prefill is a single batched cached-prefill call (``lm_prefill``:
+    one jitted scan over the prompt) — bitwise the same cache and
+    logits the old token-at-a-time loop produced, in one dispatch.
+    """
     B, P = prompts.shape
     cache = init_decode_cache(cfg, B, P + gen)
     step = jax.jit(
         lambda pr, c, t, pos: lm_decode_step(pr, cfg, c, t, pos, cross_kvs)
     )
-    toks = [prompts[:, i : i + 1] for i in range(P)]
-    logits = None
-    for i in range(P):  # prefill via the cached decode path
-        logits, cache = step(params, cache, toks[i], jnp.int32(i))
-    out = list(toks)
+    prefill = jax.jit(
+        lambda pr, c, toks: lm_prefill(pr, cfg, c, toks, cross_kvs)
+    )
+    logits, cache = prefill(params, cache, prompts)
+    out = [prompts]
     key = jax.random.PRNGKey(seed)
     for g in range(gen):
         if greedy:
@@ -55,41 +63,94 @@ def generate(params, cfg: ModelConfig, prompts: jnp.ndarray, gen: int,
     return jnp.concatenate(out, axis=1)
 
 
+def _serve_encdec(cfg: ModelConfig, args) -> None:
+    """Legacy fixed-batch path for enc-dec archs."""
+    params = init_lm(jax.random.PRNGKey(args.seed), cfg)
+    frames = jnp.asarray(np.random.default_rng(0).normal(
+        size=(args.tenants, cfg.enc_seq_len, cfg.d_model)
+    ).astype(np.float32))
+    enc_out = encoder_forward(params["base"]["encoder"], cfg, frames)
+    cross_kvs = build_cross_caches(params, cfg, enc_out)
+    stream = SyntheticLM(cfg.vocab_size, seed=args.seed)
+    prompts = jnp.asarray(
+        stream.sample(args.tenants, args.prompt_len, step=0))
+    t0 = time.time()
+    out = generate(params, cfg, prompts, args.gen, cross_kvs)
+    dt = time.time() - t0
+    total_new = args.tenants * args.gen
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({total_new / dt:.1f} tok/s incl. prefill+compile)")
+    print("sample continuation:", np.asarray(out[0, args.prompt_len:])[:16])
+
+
+def build_demo_store(cfg: ModelConfig, arch: str, n_tenants: int,
+                     seed: int = 0):
+    """A CompositionStore of ``n_tenants`` per-tenant base blocks (each
+    a different init — the stand-in for per-client personalization)
+    sharing tenant 0's modular block."""
+    from repro.serve import CompositionStore
+
+    store = CompositionStore()
+    if arch in ARCH_IDS:
+        name = store.add_arch(arch, reduced=True, d_fusion=cfg.d_fusion)
+    else:
+        name = store.add_arch(cfg)
+    key = jax.random.PRNGKey(seed)
+    for k in range(n_tenants):
+        params = init_lm(jax.random.fold_in(key, k), cfg)
+        if k == 0:
+            store.set_modular(name, params["modular"])
+        store.add_tenant(f"tenant{k}", name, params["base"])
+    return store
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen1.5-0.5b")
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tenants", type=int, default=4,
+                    help="concurrent tenants (= demo requests)")
+    ap.add_argument("--width", type=int, default=4, help="lane width")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--stagger", type=int, default=2,
+                    help="ticks between consecutive request arrivals")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    print(f"== serving {cfg.name}: batch={args.batch} "
+    print(f"== serving {cfg.name}: tenants={args.tenants} "
           f"prompt={args.prompt_len} gen={args.gen} ==")
-    params = init_lm(jax.random.PRNGKey(args.seed), cfg)
-
-    cross_kvs = None
     if cfg.is_encdec:
-        frames = jnp.asarray(np.random.default_rng(0).normal(
-            size=(args.batch, cfg.enc_seq_len, cfg.d_model)
-        ).astype(np.float32))
-        enc_out = encoder_forward(params["base"]["encoder"], cfg, frames)
-        cross_kvs = build_cross_caches(params, cfg, enc_out)
+        print("(enc-dec arch: fixed-batch fallback path)")
+        _serve_encdec(cfg, args)
+        return
 
+    from repro.serve import Request, ServeEngine
+
+    store = build_demo_store(cfg, args.arch, args.tenants, args.seed)
+    engine = ServeEngine(store, width=args.width,
+                         cache_len=args.prompt_len + args.gen)
     stream = SyntheticLM(cfg.vocab_size, seed=args.seed)
-    prompts = jnp.asarray(stream.sample(args.batch, args.prompt_len, step=0))
-
+    prompts = stream.sample(args.tenants, args.prompt_len, step=0)
+    reqs = [
+        Request(rid=i, tenant=f"tenant{i}",
+                prompt=[int(t) for t in prompts[i]],
+                max_new_tokens=args.gen, arrival=i * args.stagger)
+        for i in range(args.tenants)
+    ]
     t0 = time.time()
-    out = generate(params, cfg, prompts, args.gen, cross_kvs)
+    comps = engine.run(reqs)
     dt = time.time() - t0
-    total_new = args.batch * args.gen
-    print(f"generated {out.shape} in {dt:.2f}s "
+    total_new = sum(len(c.tokens) for c in comps)
+    print(f"served {len(comps)} requests / {total_new} new tokens in "
+          f"{dt:.2f}s over {engine.tick} ticks "
           f"({total_new / dt:.1f} tok/s incl. prefill+compile)")
-    print("sample continuation:", np.asarray(out[0, args.prompt_len:])[:16])
+    for c in comps[: min(3, len(comps))]:
+        print(f"  {c.tenant}: admitted@t{c.admitted_tick} "
+              f"finished@t{c.finished_tick} {c.tokens[:12]}")
 
 
 if __name__ == "__main__":

@@ -255,16 +255,19 @@ def attn_decode(p, cfg: ModelConfig, spec: LayerSpec, x, cache, pos,
     ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
     cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
     spos = cache["slot_pos"].at[slot].set(pos)
-    scale = 1.0 / math.sqrt(hd)
     g = cfg.num_heads // cfg.num_kv_heads
     qh = q.reshape(B, 1, cfg.num_kv_heads, g, hd)
-    s = jnp.einsum("bqkgh,bskh->bkgqs", qh, ck).astype(jnp.float32) * scale
     valid = (spos >= 0) & (spos <= pos)
     if spec.window > 0:
         valid &= spos > pos - spec.window
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
-    pattn = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgqs,bskh->bqkgh", pattn.astype(cv.dtype), cv)
+    # The score/softmax/value contraction dispatches through the kernel
+    # layer: Pallas flash-decode on TPU when tiles align, the jnp oracle
+    # (the historical in-line math, bit-for-bit) everywhere else.
+    from repro.kernels import ops as kops
+
+    o = kops.cached_attn_decode(
+        qh, ck, cv, jnp.broadcast_to(valid[None], (B, L))
+    )
     y = nn.linear(p["wo"], o.reshape(B, 1, -1))
     return y, {"k": ck, "v": cv, "slot_pos": spos}
 

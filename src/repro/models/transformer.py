@@ -456,18 +456,19 @@ def lm_loss(params: Params, cfg: ModelConfig, batch) -> jnp.ndarray:
 # =========================================================================
 
 
-def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
-                      dtype=None) -> Params:
+def _stack_cache(tree, n):
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy()
+        if hasattr(a, "shape") else a,
+        tree,
+    )
+
+
+def init_base_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                           dtype=None) -> Params:
+    """The base half's decode cache: prefix layers + base groups."""
     dtype = dtype or nn.dtype_of(cfg.compute_dtype)
     pre, bp, bg, mp, mg = cfg._resolved_program()
-
-    def stack(tree, n):
-        return jax.tree.map(
-            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy()
-            if hasattr(a, "shape") else a,
-            tree,
-        )
-
     cache: Params = {}
     if pre:
         cache["prefix"] = {
@@ -479,13 +480,45 @@ def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
             f"l{i}": init_layer_cache(cfg, s, batch, cache_len, dtype)
             for i, s in enumerate(bp)
         }
-        cache["base"] = stack(one, bg)
+        cache["base"] = _stack_cache(one, bg)
+    return cache
+
+
+def init_modular_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                              dtype=None) -> Params:
+    """The modular half's decode cache: modular groups only."""
+    dtype = dtype or nn.dtype_of(cfg.compute_dtype)
+    pre, bp, bg, mp, mg = cfg._resolved_program()
+    cache: Params = {}
     if mg:
         one = {
             f"l{i}": init_layer_cache(cfg, s, batch, cache_len, dtype)
             for i, s in enumerate(mp)
         }
-        cache["mod"] = stack(one, mg)
+        cache["mod"] = _stack_cache(one, mg)
+    return cache
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                      dtype=None) -> Params:
+    cache = init_base_decode_cache(cfg, batch, cache_len, dtype)
+    cache.update(init_modular_decode_cache(cfg, batch, cache_len, dtype))
+    return cache
+
+
+def init_composed_cache(base_cfg: ModelConfig, mod_cfg: ModelConfig,
+                        batch: int, cache_len: int, dtype=None) -> Params:
+    """Decode cache for a cross-arch composition: the base half's layers
+    come from ``base_cfg``, the modular half's from ``mod_cfg``. The two
+    halves share the standardized fusion interface, so the configs only
+    have to agree on ``d_fusion`` (and vocab, for the sampling loop)."""
+    if base_cfg.d_fusion != mod_cfg.d_fusion:
+        raise ValueError(
+            f"fusion dim mismatch: base {base_cfg.d_fusion} != "
+            f"modular {mod_cfg.d_fusion}"
+        )
+    cache = init_base_decode_cache(base_cfg, batch, cache_len, dtype)
+    cache.update(init_modular_decode_cache(mod_cfg, batch, cache_len, dtype))
     return cache
 
 
@@ -513,26 +546,32 @@ def build_cross_caches(params: Params, cfg: ModelConfig, enc_out) -> Params:
     return out
 
 
-def lm_decode_step(params: Params, cfg: ModelConfig, cache: Params,
-                   token: jnp.ndarray, pos: jnp.ndarray,
-                   cross_kvs: Optional[Params] = None):
-    """token: (B, 1) int32; pos: scalar int32 index of this token.
-
-    Returns (logits (B, 1, V), new_cache).
-    """
-    pre, bp, bg, mp, mg = cfg._resolved_program()
-    B = token.shape[0]
-    cdt = nn.dtype_of(cfg.compute_dtype)
-    x = nn.embedding(params["base"]["embed"], token, compute_dtype=cdt)
+def _decode_positions(cfg: ModelConfig, pos, B: int):
     if cfg.rope_type == "mrope":
         # Text continuation: all three M-RoPE axes share the running id.
         n_img = cfg.num_image_tokens
         grid = max(1, int(n_img**0.5)) if n_img else 0
         tid = jnp.maximum(pos - n_img, 0) + grid
         positions = jnp.broadcast_to(tid[None, None], (B, 1)).astype(jnp.int32)
-        positions = jnp.stack([positions] * 3)
-    else:
-        positions = None
+        return jnp.stack([positions] * 3)
+    return None
+
+
+def base_decode_step(base: Params, cfg: ModelConfig, cache: Params,
+                     token: jnp.ndarray, pos: jnp.ndarray,
+                     cross_kvs: Optional[Params] = None):
+    """The base half of one decode step: embed -> prefix -> base groups
+    -> fusion in-projection.  token: (B, 1) int32; pos: scalar int32.
+
+    Returns (z (B, 1, d_fusion), new_cache with the base half's keys) —
+    ``z`` is the only activation crossing the client boundary, exactly
+    as in ``base_forward``.
+    """
+    pre, bp, bg, mp, mg = cfg._resolved_program()
+    B = token.shape[0]
+    cdt = nn.dtype_of(cfg.compute_dtype)
+    x = nn.embedding(base["embed"], token, compute_dtype=cdt)
+    positions = _decode_positions(cfg, pos, B)
 
     new_cache: Params = {}
     if pre:
@@ -542,23 +581,116 @@ def lm_decode_step(params: Params, cfg: ModelConfig, cache: Params,
             if spec.cross_attn and cross_kvs is not None:
                 ckv = cross_kvs["prefix"][f"l{i}"]
             x, new_cache["prefix"][f"l{i}"] = decode_layer(
-                params["base"]["prefix"][f"l{i}"], cfg, spec, x,
+                base["prefix"][f"l{i}"], cfg, spec, x,
                 cache["prefix"][f"l{i}"], pos, positions, ckv,
             )
     if bg:
         x, new_cache["base"] = decode_scan_groups(
-            params["base"]["groups"], cache["base"], cfg, bp, x, pos,
+            base["groups"], cache["base"], cfg, bp, x, pos,
             positions, None if cross_kvs is None else cross_kvs.get("base"),
         )
-    z = nn.linear(params["base"]["fusion_in"], x).astype(cdt)
-    x = nn.linear(params["modular"]["fusion_out"], z)
+    z = nn.linear(base["fusion_in"], x).astype(cdt)
+    return z, new_cache
+
+
+def modular_decode_step(mod: Params, cfg: ModelConfig, cache: Params,
+                        z: jnp.ndarray, pos: jnp.ndarray):
+    """The modular half of one decode step: fusion out-projection ->
+    modular groups -> final norm -> LM head.  z: (B, 1, d_fusion).
+
+    Returns (logits (B, 1, V) fp32, new_cache with the modular half's
+    keys).  ``cfg`` here is the *modular* arch's config — composing a
+    base of one family with a modular block of another is just calling
+    the two halves with their own configs (see ``composed_decode_step``).
+    """
+    pre, bp, bg, mp, mg = cfg._resolved_program()
+    B = z.shape[0]
+    positions = _decode_positions(cfg, pos, B)
+    x = nn.linear(mod["fusion_out"], z)
+    new_cache: Params = {}
     if mg:
         x, new_cache["mod"] = decode_scan_groups(
-            params["modular"]["groups"], cache["mod"], cfg, mp, x, pos,
+            mod["groups"], cache["mod"], cfg, mp, x, pos,
             positions, None,
         )
-    x = nn.apply_norm(params["modular"]["final_norm"], x, cfg.norm)
-    logits = nn.linear(params["modular"]["lm_head"], x).astype(jnp.float32)
+    x = nn.apply_norm(mod["final_norm"], x, cfg.norm)
+    logits = nn.linear(mod["lm_head"], x).astype(jnp.float32)
     if cfg.logit_softcap > 0:
         logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
     return logits, new_cache
+
+
+def lm_decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                   token: jnp.ndarray, pos: jnp.ndarray,
+                   cross_kvs: Optional[Params] = None):
+    """token: (B, 1) int32; pos: scalar int32 index of this token.
+
+    Returns (logits (B, 1, V), new_cache).  Recomposed from the
+    base/modular halves — bitwise identical to the pre-split fused form.
+    """
+    return composed_decode_step(
+        params["base"], cfg, params["modular"], cfg, cache, token, pos,
+        cross_kvs,
+    )
+
+
+def composed_decode_step(base: Params, base_cfg: ModelConfig,
+                         mod: Params, mod_cfg: ModelConfig, cache: Params,
+                         token: jnp.ndarray, pos: jnp.ndarray,
+                         cross_kvs: Optional[Params] = None):
+    """One decode step of a cross-arch composition f_m(f_b(.)): the base
+    half runs under ``base_cfg``, the modular half under ``mod_cfg``.
+    The cache is the merged dict from ``init_composed_cache`` (the two
+    halves own disjoint keys)."""
+    z, new_cache = base_decode_step(base, base_cfg, cache, token, pos,
+                                    cross_kvs)
+    logits, mod_cache = modular_decode_step(mod, mod_cfg, cache, z, pos)
+    new_cache.update(mod_cache)
+    return logits, new_cache
+
+
+# =========================================================================
+# Prefill: one jitted scan over the prompt through the cached decode path
+# =========================================================================
+
+
+def composed_prefill(base: Params, base_cfg: ModelConfig, mod: Params,
+                     mod_cfg: ModelConfig, cache: Params,
+                     tokens: jnp.ndarray,
+                     cross_kvs: Optional[Params] = None, start: int = 0):
+    """Batched cached prefill as a SINGLE call: a ``lax.scan`` over the
+    prompt positions of the composed decode step, so the whole prompt is
+    one jitted dispatch instead of O(P) separate ones — and the cache it
+    leaves behind is bitwise the cache O(P) sequential decode steps
+    would have written (scan iterations are the same program).
+
+    tokens: (B, P) int32, positions ``start .. start+P-1``.
+    Returns (logits of the last position (B, 1, V) fp32, cache).
+    """
+    B, P = tokens.shape
+    start = jnp.int32(start)
+
+    def body(carry, inp):
+        cache, _ = carry
+        t, tok = inp
+        logits, cache = composed_decode_step(
+            base, base_cfg, mod, mod_cfg, cache, tok[:, None],
+            start + t, cross_kvs,
+        )
+        return (cache, logits), None
+
+    logits0 = jnp.zeros((B, 1, mod_cfg.vocab_size), jnp.float32)
+    (cache, logits), _ = jax.lax.scan(
+        body, (cache, logits0),
+        (jnp.arange(P, dtype=jnp.int32), tokens.T),
+    )
+    return logits, cache
+
+
+def lm_prefill(params: Params, cfg: ModelConfig, cache: Params,
+               tokens: jnp.ndarray, cross_kvs: Optional[Params] = None,
+               start: int = 0):
+    """Single-call batched cached prefill of one LM (see
+    ``composed_prefill``)."""
+    return composed_prefill(params["base"], cfg, params["modular"], cfg,
+                            cache, tokens, cross_kvs, start)

@@ -1,0 +1,16 @@
+"""The serving plane: multi-tenant composed-model inference with
+continuous batching (see ``engine.ServeEngine``)."""
+
+from repro.serve.engine import ServeEngine
+from repro.serve.lanes import Lane
+from repro.serve.store import CompositionStore, TenantEntry
+from repro.serve.types import Completion, Request
+
+__all__ = [
+    "CompositionStore",
+    "Completion",
+    "Lane",
+    "Request",
+    "ServeEngine",
+    "TenantEntry",
+]

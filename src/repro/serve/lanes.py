@@ -1,0 +1,225 @@
+"""Per-architecture batch lanes — the continuous-batching substrate.
+
+A lane is a fixed-width W vector of independent decode slots for ONE
+(base_arch, modular_arch) pair: stacked per-slot base params (each slot
+a different tenant), ONE shared modular block (vmap ``in_axes=None`` —
+instantiated once, reused by every slot), stacked per-slot B=1 decode
+caches, and per-slot decode positions.  One lane tick advances every
+occupied slot by one token in a single jitted dispatch; admission
+writes a prefilled request into a free slot with ``.at[i].set`` (pure
+data movement); eviction is host-side bookkeeping only.
+
+Bitwise contract (the oracle leans on it, and test_serve verifies it
+end-to-end): at fixed width W, a slot's decoded tokens are a function
+of that slot's (params, cache, token, pos) ONLY — ``vmap`` maps each
+slot through the same per-slot program, so other slots' contents,
+admissions and evictions cannot perturb it.  An engine-served request
+is therefore bitwise equal to the same request served alone in an
+otherwise-empty width-W lane (``ServeEngine.oracle``).  Empty slots
+carry zero params + a fresh cache, which decodes to finite garbage
+(fresh attention caches are fully-invalid -> zero context) that nobody
+reads.
+
+Argmax sampling happens INSIDE the jitted step, so engine and oracle
+share tie-breaking exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.transformer import (
+    composed_decode_step,
+    composed_prefill,
+    init_composed_cache,
+)
+from repro.serve.types import Completion, Request
+
+__all__ = ["Lane", "SlotState"]
+
+
+class SlotState:
+    """Host bookkeeping for one occupied slot."""
+
+    def __init__(self, request: Request, completion: Completion):
+        self.request = request
+        self.completion = completion
+        self.remaining = request.max_new_tokens - len(completion.tokens)
+
+
+class Lane:
+    """Width-W continuous batch of one (base_cfg, mod_cfg) pair."""
+
+    def __init__(self, base_cfg: ModelConfig, mod_cfg: ModelConfig,
+                 modular_params: Any, base_template: Any, *,
+                 width: int, cache_len: int):
+        if base_cfg.d_fusion != mod_cfg.d_fusion:
+            raise ValueError("lane arch pair disagrees on d_fusion")
+        self.base_cfg = base_cfg
+        self.mod_cfg = mod_cfg
+        self.width = int(width)
+        self.cache_len = int(cache_len)
+        self.modular = modular_params
+        # Device state: zeros-params filler for empty slots; every cache
+        # leaf gets a uniform leading W axis ((W,) + B=1-leaf shape), so
+        # vmap(in_axes=0) hands each slot an ordinary B=1 cache.
+        zero_base = jax.tree.map(jnp.zeros_like, base_template)
+        self.base_stack = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (self.width,) + a.shape),
+            zero_base,
+        )
+        cache1 = init_composed_cache(base_cfg, mod_cfg, 1, self.cache_len)
+        self.cache = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None],
+                                       (self.width,) + a.shape).copy(),
+            cache1,
+        )
+        self.tok = jnp.zeros((self.width,), jnp.int32)
+        self.pos = jnp.zeros((self.width,), jnp.int32)
+        self.slots: List[Optional[SlotState]] = [None] * self.width
+        self._build()
+
+    # ------------------------------------------------------ jitted fns
+
+    def _build(self):
+        base_cfg, mod_cfg, cache_len = \
+            self.base_cfg, self.mod_cfg, self.cache_len
+
+        def one_slot(base, mod, cache, tok, pos):
+            logits, cache = composed_decode_step(
+                base, base_cfg, mod, mod_cfg, cache,
+                tok.reshape(1, 1), pos,
+            )
+            nxt = jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
+            return nxt, cache, pos + 1
+
+        self._step = jax.jit(jax.vmap(one_slot, in_axes=(0, None, 0, 0, 0)))
+
+        def prefill(base, mod, tokens):
+            cache = init_composed_cache(base_cfg, mod_cfg, 1, cache_len)
+            logits, cache = composed_prefill(
+                base, base_cfg, mod, mod_cfg, cache, tokens,
+            )
+            first = jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
+            return first, cache
+
+        self._prefill = jax.jit(prefill)
+
+        def insert(i, stack, cache, tok, pos, base_one, cache_one,
+                   first_tok, start_pos):
+            stack = jax.tree.map(lambda s, o: s.at[i].set(o),
+                                 stack, base_one)
+            cache = jax.tree.map(lambda s, o: s.at[i].set(o),
+                                 cache, cache_one)
+            return (stack, cache, tok.at[i].set(first_tok),
+                    pos.at[i].set(start_pos))
+
+        self._insert = jax.jit(insert)
+
+    def fresh_clone(self) -> "Lane":
+        """An empty lane sharing this lane's compiled step/prefill/
+        insert programs — the oracle's fixed-batch twin."""
+        clone = object.__new__(Lane)
+        clone.base_cfg, clone.mod_cfg = self.base_cfg, self.mod_cfg
+        clone.width, clone.cache_len = self.width, self.cache_len
+        clone.modular = self.modular
+        clone.base_stack = jax.tree.map(jnp.zeros_like, self.base_stack)
+        cache1 = init_composed_cache(self.base_cfg, self.mod_cfg, 1,
+                                     self.cache_len)
+        clone.cache = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None],
+                                       (self.width,) + a.shape).copy(),
+            cache1,
+        )
+        clone.tok = jnp.zeros((self.width,), jnp.int32)
+        clone.pos = jnp.zeros((self.width,), jnp.int32)
+        clone.slots = [None] * self.width
+        clone._step = self._step
+        clone._prefill = self._prefill
+        clone._insert = self._insert
+        return clone
+
+    # ------------------------------------------------------- occupancy
+
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    # -------------------------------------------------------- admit
+
+    def admit(self, request: Request, base_params: Any,
+              tick: int) -> Optional[Completion]:
+        """Prefill the request and write it into a free slot.
+
+        Returns the Completion immediately if the FIRST token already
+        finishes it (eos, or max_new_tokens == 1) — the slot is not
+        occupied in that case.  Raises if no slot is free (the engine
+        checks ``free_slot()`` before calling).
+        """
+        i = self.free_slot()
+        if i is None:
+            raise RuntimeError("admit() with no free slot")
+        prompt = jnp.asarray([list(request.prompt)], jnp.int32)
+        first, cache_one = self._prefill(base_params, self.modular, prompt)
+        first_tok = int(first)
+        comp = Completion(
+            rid=request.rid, tenant=request.tenant,
+            tokens=[first_tok], prompt_len=prompt.shape[1],
+            arrival=request.arrival, admitted_tick=tick,
+            token_ticks=[tick],
+        )
+        if first_tok == request.eos_id:
+            comp.finish_reason = "eos"
+            comp.finished_tick = tick
+            return comp
+        if request.max_new_tokens == 1:
+            comp.finish_reason = "length"
+            comp.finished_tick = tick
+            return comp
+        self.base_stack, self.cache, self.tok, self.pos = self._insert(
+            jnp.int32(i), self.base_stack, self.cache, self.tok,
+            self.pos, base_params, cache_one, first,
+            jnp.int32(prompt.shape[1]),
+        )
+        self.slots[i] = SlotState(request, comp)
+        return None
+
+    # -------------------------------------------------------- decode
+
+    def decode_tick(self, tick: int) -> List[Completion]:
+        """One lane step: every occupied slot emits one token; slots
+        that hit EOS or their length budget are evicted (freed)."""
+        if self.n_active == 0:
+            return []
+        nxt, self.cache, self.pos = self._step(
+            self.base_stack, self.modular, self.cache, self.tok, self.pos,
+        )
+        self.tok = nxt
+        toks = np.asarray(nxt)
+        done: List[Completion] = []
+        for i, s in enumerate(self.slots):
+            if s is None:
+                continue
+            t = int(toks[i])
+            s.completion.tokens.append(t)
+            s.completion.token_ticks.append(tick)
+            s.remaining -= 1
+            if t == s.request.eos_id:
+                s.completion.finish_reason = "eos"
+            elif s.remaining > 0:
+                continue
+            s.completion.finished_tick = tick
+            done.append(s.completion)
+            self.slots[i] = None  # evict: the slot is free next admit
+        return done

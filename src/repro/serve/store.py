@@ -1,0 +1,287 @@
+"""The composition store — the serving plane's deployable artifact.
+
+Maps tenant -> (base arch, personalized base-block params [, fusion
+cache state]) plus ONE shared modular block per arch, mirroring the
+paper's deployment story: clients personalize f_b, the standardized
+fusion interface lets any base compose with the shared f_m, and the
+server's trained ``FusionCache`` is what ships.
+
+On disk the artifact is a ``repro.checkpoint`` .npz + JSON manifest
+(same format as trainer checkpoints): the manifest's ``extra`` carries
+the tenant -> arch routing table and per-arch config provenance, so
+``CompositionStore.load`` reconstructs the tree from the '/'-joined npz
+keys alone — no shape template needed, which is what lets a serving box
+load an artifact it did not train.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_extra, save_checkpoint
+from repro.config import ModelConfig
+
+__all__ = ["TenantEntry", "CompositionStore"]
+
+_ARTIFACT_VERSION = 1
+
+
+def _resolve_cfg(arch: str, *, reduced: bool,
+                 d_fusion: Optional[int]) -> ModelConfig:
+    """Arch name -> ModelConfig, by the same rules the trainers use."""
+    if arch == "spmd-smoke":
+        from repro.api.spmd import smoke_model_config
+
+        cfg = smoke_model_config()
+    else:
+        from repro.configs import get_config
+
+        cfg = get_config(arch)
+        if reduced:
+            cfg = cfg.reduced()
+    if d_fusion is not None and cfg.d_fusion != int(d_fusion):
+        cfg = cfg.replace(d_fusion=int(d_fusion)).validate()
+    return cfg
+
+
+def _unflatten(flat: Dict[str, np.ndarray]) -> Dict[str, Any]:
+    """Inverse of ``repro.checkpoint``'s '/'-joined flattening for
+    dict-only trees (LM param/cache trees are all-dict)."""
+    root: Dict[str, Any] = {}
+    for key in sorted(flat):
+        parts = key.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = jnp.asarray(flat[key])
+    return root
+
+
+@dataclass
+class TenantEntry:
+    """One tenant's routing row: which arch pair, and its base block."""
+
+    tenant: str
+    arch: str          # base-block architecture (lane routing key, 1/2)
+    modular_arch: str  # shared modular block's arch (routing key, 2/2)
+    base: Any          # personalized base-half params
+    fusion: Optional[Any] = None  # last fusion-cache state {z_hat, y[, payload]}
+
+
+class CompositionStore:
+    """Tenant -> composed-model registry behind the serving engine.
+
+    Archs are registered once (name + config); tenants attach a
+    personalized base block under a registered arch; each arch carries
+    ONE shared modular block reused by every tenant routed to it.
+    Cross-arch composition (base of one family, modular of another) is
+    just ``modular_arch != arch`` — validated to agree on d_fusion.
+    """
+
+    def __init__(self):
+        self._cfgs: Dict[str, ModelConfig] = {}
+        self._meta: Dict[str, Dict[str, Any]] = {}  # arch -> provenance
+        self._modular: Dict[str, Any] = {}
+        self._tenants: Dict[str, TenantEntry] = {}
+
+    # ----------------------------------------------------------- archs
+
+    def add_arch(self, arch, *, reduced: bool = True,
+                 d_fusion: Optional[int] = None) -> str:
+        """Register an architecture by name (resolvable on load) or by
+        explicit ``ModelConfig`` (in-memory only — ``save`` refuses,
+        except for the 'spmd-smoke' config which resolves by name)."""
+        if isinstance(arch, ModelConfig):
+            cfg, name = arch, arch.name
+            custom = name != "spmd-smoke"
+            meta = {"reduced": bool(reduced), "d_fusion": cfg.d_fusion,
+                    "custom": custom}
+        else:
+            name = str(arch)
+            cfg = _resolve_cfg(name, reduced=reduced, d_fusion=d_fusion)
+            meta = {"reduced": bool(reduced), "d_fusion": cfg.d_fusion,
+                    "custom": False}
+        if name in self._cfgs and self._cfgs[name] != cfg:
+            raise ValueError(f"arch {name!r} already registered with a "
+                             "different config")
+        self._cfgs[name] = cfg
+        self._meta[name] = meta
+        return name
+
+    def set_modular(self, arch: str, params: Any) -> None:
+        """Attach the shared modular block for ``arch`` (one instance,
+        reused by every tenant whose ``modular_arch`` is this arch)."""
+        if arch not in self._cfgs:
+            raise KeyError(f"unregistered arch {arch!r}")
+        self._modular[arch] = params
+
+    def cfg(self, arch: str) -> ModelConfig:
+        return self._cfgs[arch]
+
+    def modular(self, arch: str) -> Any:
+        return self._modular[arch]
+
+    # --------------------------------------------------------- tenants
+
+    def add_tenant(self, tenant: str, arch: str, base: Any, *,
+                   modular_arch: Optional[str] = None,
+                   fusion: Optional[Any] = None) -> TenantEntry:
+        if "/" in tenant:
+            raise ValueError(
+                f"tenant id {tenant!r} must not contain '/' (it is a "
+                "checkpoint key path segment)"
+            )
+        mod_arch = modular_arch or arch
+        for a in (arch, mod_arch):
+            if a not in self._cfgs:
+                raise KeyError(f"unregistered arch {a!r}")
+        if mod_arch not in self._modular:
+            raise KeyError(f"arch {mod_arch!r} has no shared modular block")
+        bc, mc = self._cfgs[arch], self._cfgs[mod_arch]
+        if bc.d_fusion != mc.d_fusion:
+            raise ValueError(
+                f"tenant {tenant!r}: base {arch!r} d_fusion "
+                f"{bc.d_fusion} != modular {mod_arch!r} d_fusion "
+                f"{mc.d_fusion}"
+            )
+        entry = TenantEntry(tenant=tenant, arch=arch,
+                            modular_arch=mod_arch, base=base,
+                            fusion=fusion)
+        self._tenants[tenant] = entry
+        return entry
+
+    def tenants(self) -> List[str]:
+        return sorted(self._tenants)
+
+    def entry(self, tenant: str) -> TenantEntry:
+        if tenant not in self._tenants:
+            raise KeyError(f"unknown tenant {tenant!r}")
+        return self._tenants[tenant]
+
+    def __contains__(self, tenant: str) -> bool:
+        return tenant in self._tenants
+
+    def __len__(self) -> int:
+        return len(self._tenants)
+
+    # --------------------------------------------------- save / load
+
+    def save(self, path: str) -> None:
+        """Write the artifact (.npz + manifest).  Every registered arch
+        must be name-resolvable on a fresh box."""
+        for name, meta in self._meta.items():
+            if meta.get("custom"):
+                raise ValueError(
+                    f"arch {name!r} was registered from an explicit "
+                    "ModelConfig and cannot be serialized — register "
+                    "a named arch for saveable artifacts"
+                )
+        tree: Dict[str, Any] = {
+            "tenants": {
+                t: ({"base": e.base, "fusion": e.fusion}
+                    if e.fusion is not None else {"base": e.base})
+                for t, e in self._tenants.items()
+            },
+            "modular": dict(self._modular),
+        }
+        extra = {
+            "serve_artifact": _ARTIFACT_VERSION,
+            "archs": {n: {"reduced": m["reduced"],
+                          "d_fusion": m["d_fusion"]}
+                      for n, m in self._meta.items()},
+            "tenants": {t: {"arch": e.arch,
+                            "modular_arch": e.modular_arch}
+                        for t, e in self._tenants.items()},
+        }
+        save_checkpoint(path, tree, extra=extra)
+
+    @classmethod
+    def load(cls, path: str) -> "CompositionStore":
+        extra = load_extra(path)
+        if "serve_artifact" not in extra:
+            raise ValueError(f"{path} is not a serving artifact (no "
+                             "'serve_artifact' manifest key)")
+        npz = np.load(path if path.endswith(".npz") else path + ".npz")
+        tree = _unflatten(dict(npz))
+        store = cls()
+        for name, m in extra["archs"].items():
+            store.add_arch(name, reduced=bool(m["reduced"]),
+                           d_fusion=m["d_fusion"])
+        for arch, params in tree.get("modular", {}).items():
+            store.set_modular(arch, params)
+        for tenant, m in extra["tenants"].items():
+            sub = tree["tenants"][tenant]
+            store.add_tenant(tenant, m["arch"], sub["base"],
+                             modular_arch=m["modular_arch"],
+                             fusion=sub.get("fusion"))
+        return store
+
+    # -------------------------------------------------- trainer export
+
+    @classmethod
+    def from_spmd_trainer(cls, trainer, *, tenants=None,
+                          modular_slot: int = 0) -> "CompositionStore":
+        """Export a trained ``SPMDIFLTrainer`` run as a serving artifact.
+
+        One tenant per client slot (default ids ``client<k>``); the
+        shared modular block is ``modular_slot``'s trained modular half.
+        The plane's carried payload cache — the trained ``FusionCache``
+        — rides along per tenant as decoded ``{z_hat, y}`` state (valid
+        slots only), so the artifact is the composition store the ISSUE
+        names: tenant -> base params + fusion state.
+
+        Population runs export the *materialized working set* (the
+        slots the cohorts actually trained), paging each through the
+        host-side ``PopulationStore``.
+        """
+        cfg = trainer.model_cfg
+        # Registry key: the spec's resolvable arch id (the trainer's
+        # cfg.name carries reduced()'s '-smoke' suffix, which get_config
+        # cannot resolve back); '' means the smoke config.
+        arch_name = trainer.spec.model or cfg.name
+        reduced = bool(trainer.spec.model)  # named archs load reduced()
+        store = cls()
+        store.add_arch(arch_name, reduced=reduced, d_fusion=cfg.d_fusion)
+
+        if trainer._population:
+            slots = trainer.store.slots()
+            if not slots:
+                raise ValueError("population run has no materialized "
+                                 "slots to export — train a round first")
+            get_params = lambda k: trainer.store.get(k)["params"]
+        else:
+            slots = list(range(trainer.n_clients))
+            get_params = lambda k: jax.tree.map(
+                lambda a: a[k], trainer.params)
+        if tenants is None:
+            tenants = [f"client{k}" for k in slots]
+        if len(tenants) != len(slots):
+            raise ValueError(f"{len(tenants)} tenant ids for "
+                             f"{len(slots)} exported slots")
+
+        mslot = modular_slot if modular_slot in slots else slots[0]
+        store.set_modular(arch_name, get_params(mslot)["modular"])
+
+        # Fusion state: the carried payload cache, decoded slot-wise
+        # (legacy partial-participation runs carry it; population runs
+        # rebuild it fresh each round, so there is nothing durable).
+        fusion_by_slot: Dict[int, Any] = {}
+        if not trainer._population and getattr(trainer, "cache", None) is not None:
+            z_shape = (trainer.spec.batch_size, trainer.seq, cfg.d_fusion)
+            ctree = trainer.exchange.cache_tree(trainer.cache, z_shape)
+            ages = np.asarray(ctree["age"])
+            for k in slots:
+                if ages[k] <= trainer.exchange.age_bound:
+                    fusion_by_slot[k] = {
+                        "z_hat": ctree["z_hat"][k],
+                        "y": ctree["y"][k],
+                    }
+        for tid, k in zip(tenants, slots):
+            store.add_tenant(tid, arch_name, get_params(k)["base"],
+                             fusion=fusion_by_slot.get(k))
+        return store

@@ -423,8 +423,12 @@ def test_eager_ifl_cohort_rounds_with_parity():
     accs = trainer.evaluate(np.zeros((8, 28, 28, 1), np.float32),
                             np.zeros((8,), np.int32))
     assert 0 < len(accs) <= 8
-    with pytest.raises(NotImplementedError, match="population"):
-        trainer.snapshot()
+    # Population snapshots are sparse (PR 9): only materialized slots.
+    tree, aux = trainer.snapshot()
+    assert set(tree["clients"]) == {
+        str(k) for k in trainer.clients.materialized}
+    assert aux["population"]["clients"] == sorted(
+        trainer.clients.materialized)
 
 
 def test_spmd_ifl_cohort_rounds_with_parity():
@@ -444,5 +448,7 @@ def test_spmd_ifl_cohort_rounds_with_parity():
     assert all(0 <= s < 16 for s in trainer.store.slots())
     accs = trainer.evaluate(None, None)
     assert 0 < len(accs) <= 2
-    with pytest.raises(NotImplementedError, match="population"):
-        trainer.snapshot()
+    # Population snapshots are sparse (PR 9): only the trained slots.
+    tree, aux = trainer.snapshot()
+    assert set(tree["slots"]) == {str(s) for s in trainer.store.slots()}
+    assert aux["population"]["slots"] == sorted(trainer.store.slots())
