@@ -28,6 +28,8 @@ def main():
     ap.add_argument("--width", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--horizon", type=int, default=8,
+                    help="fused decode ticks per engine step")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -38,7 +40,8 @@ def main():
           f"lane width {args.width} ==")
     store = build_demo_store(cfg, args.arch, args.tenants)
     engine = ServeEngine(store, width=args.width,
-                         cache_len=args.prompt_len + args.gen)
+                         cache_len=args.prompt_len + args.gen,
+                         horizon=args.horizon)
 
     stream = SyntheticLM(cfg.vocab_size, seed=1)
     prompts = stream.sample(args.tenants, args.prompt_len, step=0)

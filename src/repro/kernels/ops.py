@@ -416,6 +416,83 @@ def _timeit(fn, args) -> float:
     return time.perf_counter() - t0
 
 
+# ------------------------------------------------- serve-plan autotuner
+#
+# Wall-clock tuner for the serving hot loop (ISSUE 10): picks the fused
+# decode horizon S and the prompt-length bucket edges of batch admission
+# per (device kind, arch pairs, lane width, cache_len), persisted to a
+# JSON cache exactly like the wire-block tuner above.  The read side
+# (`serve_plan`) never times anything — `ServeEngine(horizon="auto")`
+# consults it and falls back to defaults when untuned.
+
+_serve_cache_mem: Optional[dict] = None
+
+
+def _serve_cache_path() -> str:
+    return os.environ.get(
+        "REPRO_SERVE_PLAN_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro_kernels",
+                     "serve_plan.json"),
+    )
+
+
+def _load_serve_cache(refresh: bool = False) -> dict:
+    global _serve_cache_mem
+    if _serve_cache_mem is None or refresh:
+        try:
+            with open(_serve_cache_path()) as f:
+                _serve_cache_mem = json.load(f)
+        except (OSError, ValueError):
+            _serve_cache_mem = {}
+    return _serve_cache_mem
+
+
+def _serve_key(plan_key: str) -> str:
+    dev = jax.devices()[0].device_kind.replace(" ", "_")
+    return f"{dev}|serve|{plan_key}"
+
+
+def serve_plan(plan_key: str) -> dict:
+    """The tuned (horizon, bucket_edges) for one engine geometry, or
+    ``{}`` when untuned.  Pure read side — never times anything."""
+    return dict(_load_serve_cache().get(_serve_key(plan_key), {}))
+
+
+def autotune_serve_plan(plan_key: str, timer, *,
+                        horizons=(1, 2, 4, 8, 16),
+                        edge_sets=((8, 16, 32, 64, 128),),
+                        force: bool = False) -> dict:
+    """Grid search over (horizon, bucket edges) with a caller-supplied
+    ``timer(horizon, edges) -> seconds`` (the engine times a warm
+    fresh-clone run of a representative workload).  Persists the winner
+    keyed by (device kind, plan_key) so later runs — and other
+    processes — get it from ``serve_plan`` for free.  Returns the
+    winning entry (also on cache hit, unless ``force``)."""
+    key = _serve_key(plan_key)
+    cache = _load_serve_cache(refresh=True)
+    if key in cache and not force:
+        return cache[key]
+    best = None
+    for edges in edge_sets:
+        for h in horizons:
+            try:
+                t = timer(int(h), [int(e) for e in edges])
+            except Exception:
+                continue
+            if best is None or t < best["seconds"]:
+                best = {"horizon": int(h),
+                        "bucket_edges": [int(e) for e in edges],
+                        "seconds": round(float(t), 6)}
+    if best is None:
+        return {}
+    cache[key] = best
+    path = _serve_cache_path()
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(cache, f, indent=1, sort_keys=True)
+    return best
+
+
 def fused_wire_report(codec, z_shape, *, fused: bool = True) -> dict:
     """Which wire path a spec lowers, for the dryrun client_boundary.
 

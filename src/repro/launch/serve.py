@@ -116,7 +116,18 @@ def main():
     ap.add_argument("--stagger", type=int, default=2,
                     help="ticks between consecutive request arrivals")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--horizon", default="1",
+                    help="fused decode ticks per engine step, or 'auto' "
+                         "to read the serve-plan autotuner cache")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy argmax; >0 samples at this "
+                         "temperature inside the jitted lane step")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the k largest logits "
+                         "(0 = full vocab; needs --temperature > 0)")
     args = ap.parse_args()
+    args.horizon = args.horizon if args.horizon == "auto" \
+        else int(args.horizon)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -132,13 +143,16 @@ def main():
 
     store = build_demo_store(cfg, args.arch, args.tenants, args.seed)
     engine = ServeEngine(store, width=args.width,
-                         cache_len=args.prompt_len + args.gen)
+                         cache_len=args.prompt_len + args.gen,
+                         horizon=args.horizon)
     stream = SyntheticLM(cfg.vocab_size, seed=args.seed)
     prompts = stream.sample(args.tenants, args.prompt_len, step=0)
     reqs = [
         Request(rid=i, tenant=f"tenant{i}",
                 prompt=[int(t) for t in prompts[i]],
-                max_new_tokens=args.gen, arrival=i * args.stagger)
+                max_new_tokens=args.gen, arrival=i * args.stagger,
+                temperature=args.temperature, top_k=args.top_k,
+                seed=args.seed)
         for i in range(args.tenants)
     ]
     t0 = time.time()

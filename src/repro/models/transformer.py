@@ -694,3 +694,45 @@ def lm_prefill(params: Params, cfg: ModelConfig, cache: Params,
     ``composed_prefill``)."""
     return composed_prefill(params["base"], cfg, params["modular"], cfg,
                             cache, tokens, cross_kvs, start)
+
+
+def composed_prefill_ragged(base: Params, base_cfg: ModelConfig,
+                            mod: Params, mod_cfg: ModelConfig,
+                            cache: Params, tokens: jnp.ndarray,
+                            length: jnp.ndarray):
+    """Cached prefill of ONE row padded to a bucket length: a scan over
+    all P padded positions where steps at ``t >= length`` are frozen —
+    the computed cache/logits are discarded via ``jnp.where``, so the
+    cache (and the last live position's logits) are bitwise what an
+    unpadded ``composed_prefill`` of the first ``length`` tokens would
+    have produced.  This is what makes prompt-length *buckets* exact:
+    the serving plane vmaps this over a stacked admission batch, every
+    row carrying its own true length, and a row's result depends only on
+    its own (params, tokens, length) — pad rows and pad positions
+    cannot perturb it.
+
+    tokens: (P,) int32 (positions ``0..length-1`` real, rest pad);
+    length: scalar int32.  Returns (last real position's logits (V,)
+    fp32, cache).  The cache must be a fresh B=1 ``init_composed_cache``
+    tree (frozen steps keep its untouched rows bitwise).
+    """
+    P = tokens.shape[0]
+
+    def body(carry, inp):
+        cache, last = carry
+        t, tok = inp
+        logits, new_cache = composed_decode_step(
+            base, base_cfg, mod, mod_cfg, cache, tok.reshape(1, 1), t,
+        )
+        live = t < length
+        cache = jax.tree.map(lambda o, n: jnp.where(live, n, o),
+                             cache, new_cache)
+        last = jnp.where(live, logits[0, -1], last)
+        return (cache, last), None
+
+    last0 = jnp.zeros((mod_cfg.vocab_size,), jnp.float32)
+    (cache, last), _ = jax.lax.scan(
+        body, (cache, last0),
+        (jnp.arange(P, dtype=jnp.int32), tokens),
+    )
+    return last, cache

@@ -1,30 +1,44 @@
 """`ServeEngine` — multi-tenant composed-model inference with
-continuous batching.
+continuous batching and a device-resident hot loop.
 
 Each request names a tenant; the engine routes it to that tenant's
 personalized base block + the shared modular block (from the
 ``CompositionStore``) and batches it into the per-arch lane of its
-(base_arch, modular_arch) pair.  There is no global barrier between
-requests: each tick, every lane decodes its occupied slots by one
-token, evicts finished ones, and admits waiting requests into freed
-slots (admit-on-slot-free).  Prefill is ONE jitted scan call per
-request (``composed_prefill``), not O(prompt) dispatches.
+(base_arch, modular_arch) pair.  One engine *step* advances every lane
+``horizon`` ticks in a single fused device launch (``lax.scan`` over
+the per-slot decode step — see ``lanes.py``), fetches every lane's
+emitted-token window plus the previous boundary's admission outputs in
+ONE coalesced ``jax.device_get``, evicts finished requests, and admits
+waiting arrivals into freed slots with bucketed batch prefill.  The
+host therefore syncs once per ``horizon`` ticks, not once per token.
+
+Admissions land only at horizon boundaries (the last tick of a step),
+so ``horizon=1`` reproduces the historical tick-exact engine: decode
+one tick, evict, admit at that same tick.  The one intentional
+relaxation at any horizon is admission *discovery* granularity — a
+request whose prefill token already completes it (EOS on first token,
+or ``max_new_tokens == 1``) is detected on device at admission but
+reported at the next step's coalesced transfer, holding its slot for
+one step.  Token streams are unaffected (lane row-independence).
 
 The step-count clock is the engine's time base: request arrivals,
 admissions, and per-token stamps are all measured in ticks, making
 staggered traffic deterministic (and the benchmark's wall-clock
-attribution exact — time the ticks, map tokens to ticks).
+attribution exact — time the steps, map tokens to steps).
 
 Correctness contract: ``oracle(request)`` replays the request alone in
-an otherwise-empty lane of the SAME width with the SAME compiled step
-functions — by the lane's row-independence (see ``lanes.py``), a
+an otherwise-empty lane of the SAME width with the SAME compiled
+horizon/admission programs — by the lane's row-independence, a
 continuously-batched served output is bitwise equal to its oracle.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+
+import jax
 
 from repro.serve.lanes import Lane
 from repro.serve.store import CompositionStore
@@ -34,21 +48,52 @@ __all__ = ["ServeEngine"]
 
 
 class ServeEngine:
-    """Continuous-batching server over a ``CompositionStore``."""
+    """Continuous-batching server over a ``CompositionStore``.
+
+    ``horizon`` is the fused-decode span S (ticks per engine step);
+    ``"auto"`` reads the persisted serve-plan autotuner cache
+    (``repro.kernels.ops.serve_plan``) for this (device, arch pairs,
+    width, cache_len) and falls back to 8.  ``bucket_edges`` overrides
+    the padded prompt-length buckets of batch admission (default:
+    powers of two up to ``cache_len``).
+    """
 
     def __init__(self, store: CompositionStore, *, width: int = 8,
-                 cache_len: int = 128):
+                 cache_len: int = 128, horizon: Any = 1,
+                 bucket_edges: Optional[Sequence[int]] = None):
         if width < 1:
             raise ValueError(f"lane width must be >= 1, got {width}")
         self.store = store
         self.width = int(width)
         self.cache_len = int(cache_len)
+        self.bucket_edges = list(bucket_edges) if bucket_edges else None
+        if horizon == "auto":
+            from repro.kernels import ops as _ops
+            plan = _ops.serve_plan(self.plan_key())
+            horizon = plan.get("horizon", 8)
+            if self.bucket_edges is None and plan.get("bucket_edges"):
+                self.bucket_edges = [int(e) for e in plan["bucket_edges"]]
+        self.horizon = int(horizon)
+        if self.horizon < 1:
+            raise ValueError(f"horizon must be >= 1, got {horizon}")
         self._lanes: Dict[Tuple[str, str], Lane] = {}
-        self._pending: Dict[Tuple[str, str], Deque[Request]] = {}
+        # Pending queues carry (request, base params) so admission does
+        # not repeat the store.entry() lookup submit already paid.
+        self._pending: Dict[Tuple[str, str], Deque[Tuple[Request, Any]]] \
+            = {}
         self._tick = 0
         self._inflight = 0
 
     # ---------------------------------------------------------- lanes
+
+    def plan_key(self) -> str:
+        """Autotuner cache key: every (base_arch, modular_arch) pair the
+        store can serve, plus lane geometry."""
+        pairs = sorted({(e.arch, e.modular_arch)
+                        for e in (self.store.entry(t)
+                                  for t in self.store.tenants())})
+        tag = ",".join(f"{a}+{m}" for a, m in pairs)
+        return f"{tag}|W{self.width}|L{self.cache_len}"
 
     def _lane_key(self, request: Request) -> Tuple[str, str]:
         e = self.store.entry(request.tenant)
@@ -66,13 +111,14 @@ class ServeEngine:
                 self.store.cfg(arch), self.store.cfg(mod_arch),
                 self.store.modular(mod_arch), some_tenant.base,
                 width=self.width, cache_len=self.cache_len,
+                bucket_edges=self.bucket_edges,
             )
         return self._lanes[key]
 
     # --------------------------------------------------------- submit
 
     def submit(self, request: Request) -> None:
-        e = self.store.entry(request.tenant)  # validates the tenant
+        e = self.store.entry(request.tenant)  # the ONE tenant lookup
         bc = self.store.cfg(e.arch)
         if len(request.prompt) + request.max_new_tokens > self.cache_len:
             raise ValueError(
@@ -85,17 +131,17 @@ class ServeEngine:
                 f"request {request.rid}: prompt token out of vocab "
                 f"range [0, {bc.vocab_size})"
             )
-        key = self._lane_key(request)
+        key = (e.arch, e.modular_arch)
         q = self._pending.setdefault(key, deque())
-        q.append(request)
+        q.append((request, e.base))
         # FIFO by (arrival, submission order): keep the deque sorted —
         # admission must not let a late-arriving request jump the queue.
-        if len(q) > 1 and request.arrival < q[-2].arrival:
+        if len(q) > 1 and request.arrival < q[-2][0].arrival:
             self._pending[key] = deque(
-                sorted(q, key=lambda r: r.arrival))
+                sorted(q, key=lambda rb: rb[0].arrival))
         self._inflight += 1
 
-    # ----------------------------------------------------------- tick
+    # ----------------------------------------------------------- step
 
     @property
     def tick(self) -> int:
@@ -105,51 +151,104 @@ class ServeEngine:
     def inflight(self) -> int:
         return self._inflight
 
+    def queue_depth(self) -> int:
+        """Requests submitted but not yet admitted to a slot."""
+        return sum(len(q) for q in self._pending.values())
+
     def step(self) -> List[Completion]:
-        """One engine tick: decode every lane's occupied slots, evict
-        finished requests, then admit waiting arrivals into freed slots.
-        Returns the completions finished this tick."""
-        now = self._tick
-        done: List[Completion] = []
+        """One engine step == ``horizon`` ticks: launch the fused decode
+        on every occupied lane, fetch all lanes' windows + pending
+        admission outputs in ONE ``jax.device_get``, evict finished
+        requests, then admit waiting arrivals at the boundary tick.
+        Returns the completions finished this step."""
+        now, S = self._tick, self.horizon
         for lane in self._lanes.values():
-            done.extend(lane.decode_tick(now))
+            if lane.n_active > 0:
+                lane.launch_horizon(S, now)
+        # The single host sync of the step — every lane's (S, W) token
+        # window and every pending admission's (first, done) arrays come
+        # back in one coalesced transfer.
+        payload = {k: lane.pending_transfer()
+                   for k, lane in self._lanes.items()}
+        host = jax.device_get(payload)
+        done: List[Completion] = []
+        for k, lane in self._lanes.items():
+            done.extend(lane.absorb(host[k]))
+        # Boundary admission: bucketed batch prefill of everything
+        # admissible into the slots now free, one launch per bucket.
+        boundary = now + S - 1
         for key, q in self._pending.items():
             lane = self._lane(key)
-            while q and q[0].arrival <= now and lane.free_slot() is not None:
-                req = q.popleft()
-                comp = lane.admit(
-                    req, self.store.entry(req.tenant).base, now)
-                if comp is not None:  # finished on the prefill token
-                    done.append(comp)
+            free = len(lane.free_slots())
+            admits: List[Tuple[Request, Any]] = []
+            while q and q[0][0].arrival <= boundary and len(admits) < free:
+                admits.append(q.popleft())
+            lane.admit_batch(admits, boundary)
         self._inflight -= len(done)
-        self._tick += 1
+        self._tick += S
         return done
+
+    # ------------------------------------------------------------ run
+
+    def step_budget(self) -> int:
+        """An exact upper bound on the engine steps needed to drain the
+        current queues + in-flight slots (no further submissions).
+
+        Worst case every request of a lane serializes through one slot:
+        admission at one boundary, first token landing the next step,
+        ``ceil((m-1)/S)`` fused windows for the remaining tokens, and
+        the freed slot re-admitting at that same step's boundary —
+        ``ceil((m-1)/S) + 2`` steps per request covers the chain with
+        slack.  Arrivals gate admission for at most
+        ``ceil(max_arrival/S) + 1`` leading steps.  Lanes drain in the
+        same global steps, so the busiest lane dominates.
+        """
+        S = self.horizon
+        per_lane: Dict[Tuple[str, str], int] = {}
+        max_arr = 0
+        for key, q in self._pending.items():
+            for req, _ in q:
+                per_lane[key] = per_lane.get(key, 0) + \
+                    (max(req.max_new_tokens - 1, 0) + S - 1) // S + 2
+                max_arr = max(max_arr, req.arrival)
+        for key, lane in self._lanes.items():
+            for s in lane.slots:
+                if s is None:
+                    continue
+                owed = (s.request.max_new_tokens if s.awaiting_first
+                        else max(s.remaining, 0))
+                per_lane[key] = per_lane.get(key, 0) + \
+                    (max(owed - 1, 0) + S - 1) // S + 2
+        busiest = max(per_lane.values()) if per_lane else 0
+        return (max_arr + S - 1) // S + 1 + busiest
 
     def run(self, requests: List[Request],
             max_ticks: Optional[int] = None) -> List[Completion]:
         """Drive submitted + given requests to completion; returns all
-        completions sorted by rid."""
+        completions sorted by rid.  The default budget is the exact
+        :meth:`step_budget` bound — exceeding it is a scheduler bug,
+        not a workload property."""
         for r in requests:
             self.submit(r)
-        budget = max_ticks if max_ticks is not None else (
-            10 * sum(r.max_new_tokens for r in requests)
-            + max((r.arrival for r in requests), default=0) + 10
-        )
+        budget = (max_ticks + self.horizon - 1) // self.horizon \
+            if max_ticks is not None else self.step_budget()
         out: List[Completion] = []
         while self._inflight > 0:
             if budget <= 0:
                 raise RuntimeError("engine did not drain within the "
-                                   "tick budget — scheduler stall?")
+                                   "step budget — scheduler stall?")
             out.extend(self.step())
             budget -= 1
         return sorted(out, key=lambda c: c.rid)
 
     def fresh_clone(self) -> "ServeEngine":
         """An empty engine over the same store whose lanes share this
-        engine's compiled step/prefill/insert programs — the warm twin
+        engine's compiled horizon/admission programs — the warm twin
         the benchmark times after a throwaway compile run."""
         clone = ServeEngine(self.store, width=self.width,
-                            cache_len=self.cache_len)
+                            cache_len=self.cache_len,
+                            horizon=self.horizon,
+                            bucket_edges=self.bucket_edges)
         clone._lanes = {k: lane.fresh_clone()
                         for k, lane in self._lanes.items()}
         return clone
@@ -158,18 +257,56 @@ class ServeEngine:
 
     def oracle(self, request: Request) -> Completion:
         """The fixed-batch correctness twin: serve ``request`` ALONE in
-        an empty lane of the same width, same compiled programs.  The
-        engine's continuously-batched output must be bitwise equal."""
+        an empty lane of the same width, same compiled programs, same
+        horizon.  The engine's continuously-batched output must be
+        bitwise equal."""
         key = self._lane_key(request)
         lane = self._lane(key).fresh_clone()
         base = self.store.entry(request.tenant).base
-        comp = lane.admit(request, base, tick=0)
-        t = 0
-        while comp is None:
-            t += 1
-            finished = lane.decode_tick(t)
+        req0 = dataclasses.replace(request, arrival=0)
+        S = self.horizon
+        lane.admit_batch([(req0, base)], S - 1)
+        t0 = S
+        budget = (max(request.max_new_tokens - 1, 0) + S - 1) // S + 3
+        for _ in range(budget):
+            if lane.n_active > 0:
+                lane.launch_horizon(S, t0)
+            finished = lane.absorb(jax.device_get(
+                lane.pending_transfer()))
             if finished:
-                comp = finished[0]
-            if t > 10 * request.max_new_tokens + 10:
-                raise RuntimeError("oracle did not finish")
-        return comp
+                return finished[0]
+            t0 += S
+        raise RuntimeError("oracle did not finish")
+
+    # ------------------------------------------------------- autotune
+
+    def autotune(self, requests: List[Request], *,
+                 horizons: Sequence[int] = (1, 2, 4, 8, 16),
+                 edge_sets: Optional[Sequence[Sequence[int]]] = None,
+                 force: bool = False) -> Dict[str, Any]:
+        """Wall-clock autotune of (horizon, bucket edges) for this
+        store/width/cache_len on this device, persisted to the JSON
+        serve-plan cache (``repro.kernels.ops``).  Times a warm
+        fresh-clone run of ``requests`` per candidate."""
+        import time as _time
+
+        from repro.kernels import ops as _ops
+        from repro.serve.lanes import default_bucket_edges
+
+        if edge_sets is None:
+            edge_sets = (default_bucket_edges(self.cache_len),
+                         [self.cache_len])
+
+        def timer(h: int, edges: Sequence[int]) -> float:
+            eng = ServeEngine(self.store, width=self.width,
+                              cache_len=self.cache_len, horizon=h,
+                              bucket_edges=list(edges))
+            eng.run(list(requests))      # compile pass
+            warm = eng.fresh_clone()
+            t0 = _time.perf_counter()
+            warm.run(list(requests))
+            return _time.perf_counter() - t0
+
+        return _ops.autotune_serve_plan(
+            self.plan_key(), timer, horizons=horizons,
+            edge_sets=edge_sets, force=force)

@@ -22,6 +22,14 @@ class Request:
     request becomes admissible — the simulation analogue of a wall-clock
     arrival time, so staggered traffic is deterministic and testable.
     ``eos_id`` < 0 disables EOS eviction (run to ``max_new_tokens``).
+
+    Sampling: ``temperature == 0`` (the default) is greedy argmax —
+    bitwise the historical decode path.  ``temperature > 0`` draws from
+    the softmax at that temperature, restricted to the ``top_k`` largest
+    logits when ``top_k > 0`` (0 = full vocab).  ``seed`` plus ``rid``
+    derive the request's PRNG key, so a sampled request is exactly
+    reproducible — and bitwise equal between the continuously-batched
+    engine and its single-request oracle (the key chain is per-slot).
     """
 
     rid: int
@@ -30,6 +38,9 @@ class Request:
     max_new_tokens: int = 16
     arrival: int = 0
     eos_id: int = -1
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
 
     def __post_init__(self):
         if len(self.prompt) < 1:
@@ -38,6 +49,12 @@ class Request:
             raise ValueError(
                 f"request {self.rid}: max_new_tokens must be >= 1"
             )
+        if self.temperature < 0:
+            raise ValueError(
+                f"request {self.rid}: temperature must be >= 0"
+            )
+        if self.top_k < 0:
+            raise ValueError(f"request {self.rid}: top_k must be >= 0")
 
 
 @dataclass
